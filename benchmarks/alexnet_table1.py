@@ -1,0 +1,35 @@
+"""Paper Table 1: AlexNet per-layer operations and storage.
+
+Asserts our ConvLayer accounting reproduces the paper's numbers exactly
+(ops in M, memory in the paper's 1 KB = 1000 B convention)."""
+import time
+
+from repro.core.decomposition import ALEXNET_LAYERS
+
+PAPER = {  # name -> (ops M, in KB, out KB)
+    "conv1": (211, 309, 581),
+    "conv2": (448, 140, 373),
+    "conv3": (299, 87, 130),
+    "conv4": (224, 130, 130),
+    "conv5": (150, 130, 87),
+}
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    max_rel = 0.0
+    for l in ALEXNET_LAYERS:
+        ops_m = l.num_ops / 1e6
+        in_kb = l.in_bytes / 1000
+        out_kb = l.out_bytes / 1000
+        p_ops, p_in, p_out = PAPER[l.name]
+        for got, ref in ((ops_m, p_ops), (in_kb, p_in), (out_kb, p_out)):
+            max_rel = max(max_rel, abs(got - ref) / ref)
+        rows.append(f"table1_{l.name},{(time.perf_counter()-t0)*1e6:.0f},"
+                    f"ops={ops_m:.0f}M in={in_kb:.0f}KB out={out_kb:.0f}KB")
+    total = sum(l.num_ops for l in ALEXNET_LAYERS) / 1e9
+    assert max_rel < 0.01, f"Table 1 mismatch: {max_rel}"
+    rows.append(f"table1_total,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"ops={total:.2f}G(paper:1.3G) max_rel_err={max_rel:.4f}")
+    return rows

@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: wall time of the jit'd Pallas kernels
+(interpret mode on CPU — relative numbers only; real perf is structural,
+see §Roofline) vs the XLA reference implementations."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0] if isinstance(fn(*args), tuple) else fn(*args)
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    from repro.kernels.conv_stream import conv2d_stream, conv2d_ref
+    from repro.kernels.flash_attention import flash_attention, attention_ref
+    from repro.kernels.maxpool_stream import maxpool_stream, maxpool_ref
+    from repro.kernels.quant_matmul import quant_matmul
+    from repro.kernels.quant_matmul.ops import (quantize_activations,
+                                                quantize_weights)
+    rows = []
+
+    x = jax.random.normal(jax.random.key(0), (1, 32, 32, 16))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 16, 32)) * 0.1
+    us_k = _time(lambda a, b: conv2d_stream(a, b, stride=1, pad=1,
+                                            row_block=8), x, w)
+    us_r = _time(lambda a, b: conv2d_ref(a, b, stride=1, pad=1), x, w)
+    err = float(jnp.max(jnp.abs(
+        conv2d_stream(x, w, stride=1, pad=1) - conv2d_ref(x, w, stride=1,
+                                                          pad=1))))
+    rows.append(f"kernel_conv_stream,{us_k:.0f},interp_vs_xla_x"
+                f"{us_k/us_r:.1f} err={err:.1e}")
+
+    q = jax.random.normal(jax.random.key(2), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.key(3), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.key(4), (1, 2, 256, 64))
+    us_k = _time(lambda a, b, c: flash_attention(a, b, c, block_q=64,
+                                                 block_k=64), q, k, v)
+    us_r = _time(attention_ref, q, k, v)
+    rows.append(f"kernel_flash_attention,{us_k:.0f},interp_vs_xla_x"
+                f"{us_k/us_r:.1f}")
+
+    xp = jax.random.normal(jax.random.key(5), (1, 64, 64, 32))
+    us_k = _time(lambda a: maxpool_stream(a, pool=3, stride=2), xp)
+    us_r = _time(lambda a: maxpool_ref(a, pool=3, stride=2), xp)
+    rows.append(f"kernel_maxpool_stream,{us_k:.0f},interp_vs_xla_x"
+                f"{us_k/us_r:.1f}")
+
+    a = jax.random.normal(jax.random.key(6), (256, 256))
+    b = jax.random.normal(jax.random.key(7), (256, 256))
+    aq, sa = quantize_activations(a)
+    bq, sb = quantize_weights(b)
+    us_k = _time(quant_matmul, aq, bq, sa, sb)
+    us_r = _time(jnp.matmul, a, b)
+    rows.append(f"kernel_quant_matmul,{us_k:.0f},interp_vs_fp32_x"
+                f"{us_k/us_r:.1f}")
+    return rows

@@ -1,0 +1,27 @@
+"""Paper §7 claim ("able to support most popular CNNs"): every conv layer
+of VGG-16 and ResNet-18 must decompose under the 128 KB budget; report
+total ops and the worst-case traffic overhead per network."""
+import time
+
+from repro.core.decomposition import ALEXNET_LAYERS, plan_decomposition
+from repro.core.model_zoo import RESNET18_LAYERS, VGG16_LAYERS
+
+BUDGET = 128 * 1024
+
+
+def run() -> list[str]:
+    rows = []
+    for name, layers in (("alexnet", ALEXNET_LAYERS),
+                         ("vgg16", VGG16_LAYERS),
+                         ("resnet18", RESNET18_LAYERS)):
+        t0 = time.perf_counter()
+        plans = [plan_decomposition(l, BUDGET) for l in layers]
+        us = (time.perf_counter() - t0) * 1e6
+        ops = sum(l.num_ops for l in layers) / 1e9
+        worst = max(p.overhead for p in plans)
+        mean = sum(p.overhead for p in plans) / len(plans)
+        assert all(p.sram_needed <= BUDGET for p in plans)
+        rows.append(f"sweep_{name},{us:.0f},layers={len(layers)} "
+                    f"ops={ops:.2f}G traffic_x_mean={mean:.2f} "
+                    f"worst={worst:.2f} all_fit_128KB=yes")
+    return rows

@@ -1,0 +1,34 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  alexnet_table1     — paper Table 1 (per-layer ops & storage)
+  decomposition_fig6 — paper Fig. 6 (conv1 decomposition under 128 KB)
+  throughput_table2  — paper Table 2 (GOPS / TOPS/W, both voltage points)
+  kernel_bench       — Pallas kernels vs XLA references
+  streaming_bench    — tiled streaming executor end-to-end
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (alexnet_table1, decomposition_fig6,
+                            kernel_bench, network_sweep,
+                            streaming_bench, throughput_table2)
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in (alexnet_table1, decomposition_fig6, throughput_table2,
+                network_sweep, kernel_bench, streaming_bench):
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

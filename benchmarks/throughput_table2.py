@@ -1,0 +1,50 @@
+"""Paper Table 2: performance summary — peak GOPS / TOPS/W at both
+operating points, and whole-AlexNet throughput/energy through the
+analytic accelerator model under planner decompositions."""
+import time
+
+from repro.configs.base import PAPER_CHIP, PAPER_CHIP_LOWV
+from repro.core.accelerator import (layer_perf, network_perf, peak_gops,
+                                    peak_tops_per_w)
+from repro.core.decomposition import ALEXNET_LAYERS, plan_decomposition
+
+PAPER_PEAK_GOPS = 144.0        # @ 500 MHz
+PAPER_PEAK_TOPSW_HI = 0.3      # @ 500 MHz, 1.0 V
+PAPER_PEAK_TOPSW_LO = 0.8      # @ 20 MHz, 0.6 V
+PAPER_GOPS_20MHZ = 5.8
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    g = peak_gops(PAPER_CHIP)
+    assert abs(g - PAPER_PEAK_GOPS) < 1.0
+    hi = peak_tops_per_w(PAPER_CHIP)
+    lo = peak_tops_per_w(PAPER_CHIP_LOWV)
+    assert abs(hi - PAPER_PEAK_TOPSW_HI) < 0.1
+    assert abs(lo - PAPER_PEAK_TOPSW_LO) < 0.1
+    g20 = peak_gops(PAPER_CHIP_LOWV)
+    rows.append(f"table2_peaks,{(time.perf_counter()-t0)*1e6:.0f},"
+                f"GOPS@500MHz={g:.0f}(paper:144) GOPS@20MHz={g20:.1f}"
+                f"(paper:5.8) TOPS/W={hi:.2f}/{lo:.2f}(paper:0.3/0.8)")
+
+    plans = [plan_decomposition(l, PAPER_CHIP.sram_bytes)
+             for l in ALEXNET_LAYERS]
+    for spec, tag in ((PAPER_CHIP, "500MHz_1V"), (PAPER_CHIP_LOWV,
+                                                  "20MHz_0V6")):
+        t1 = time.perf_counter()
+        per, agg = network_perf(spec, plans)
+        us = (time.perf_counter() - t1) * 1e6
+        rows.append(
+            f"table2_alexnet_{tag},{us:.0f},"
+            f"avg_GOPS={agg['avg_gops']:.1f} "
+            f"TOPS/W={agg['avg_tops_per_w']:.3f} "
+            f"power={agg['avg_power_w']*1e3:.0f}mW "
+            f"latency={agg['total_time_s']*1e3:.1f}ms")
+    # per-layer bottleneck report (compute- vs DRAM-bound)
+    for l, p in zip(ALEXNET_LAYERS, plans):
+        perf = layer_perf(PAPER_CHIP, p)
+        bound = "dram" if perf.memory_s > perf.compute_s else "compute"
+        rows.append(f"table2_layer_{l.name},0,"
+                    f"GOPS={perf.gops:.1f} bound={bound}")
+    return rows

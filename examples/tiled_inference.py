@@ -1,0 +1,41 @@
+"""The FPGA face-detection demo, re-imagined (paper Fig. 8): run a conv
+feature extractor over an arbitrarily LARGE image through a fixed small
+on-chip buffer, tile by tile, using the decomposition planner — then
+sweep the buffer budget to show the decomposition/latency trade-off.
+
+Run:  PYTHONPATH=src python examples/tiled_inference.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decomposition import ConvLayer, plan_decomposition
+from repro.core.streaming import conv2d_direct, run_layer_streamed
+
+
+def main():
+    # a 480x640 'camera frame' — far larger than any on-chip buffer
+    layer = ConvLayer("detect", 480, 640, 3, 16, 3, pad=1,
+                      bytes_per_elem=2)
+    x = jax.random.normal(jax.random.key(0), (1, 480, 640, 3))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 3, 16)) * 0.2
+    ref = conv2d_direct(x, w, 1, 1)
+
+    print(f"{'budget':>10} {'tiles':>8} {'feat':>5} {'sram':>9} "
+          f"{'traffic x':>9} {'ms':>8} {'max err':>9}")
+    for budget_kb in (512, 128, 48, 16):
+        plan = plan_decomposition(layer, budget_kb * 1024)
+        t0 = time.perf_counter()
+        got = run_layer_streamed(layer, plan, x, w)
+        jax.block_until_ready(got)
+        ms = (time.perf_counter() - t0) * 1e3
+        err = float(jnp.max(jnp.abs(got - ref)))
+        print(f"{budget_kb:>9}K {plan.tiles_h}x{plan.tiles_w:<6} "
+              f"/{plan.feat_splits:<4} {plan.sram_needed/1024:>8.1f}K "
+              f"{plan.overhead:>9.2f} {ms:>8.0f} {err:>9.1e}")
+    print("\nsame arithmetic, any buffer size — the paper's claim, live.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a CNN classifier for a few hundred steps on the
+synthetic image task, with checkpointing and crash recovery — the training-
+side proof that the streaming substrate composes into a real system.
+
+Run:  PYTHONPATH=src python examples/train_cnn.py [--steps 200]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import cnn_batch
+from repro.distributed.fault import StepWatchdog
+from repro.models.cnn import cnn_defs, tiny_cnn_config
+from repro.models.module import init_params
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.train.losses import cnn_loss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = tiny_cnn_config(num_classes=10)
+    tcfg = TrainConfig(learning_rate=3e-3)
+    params = init_params(cnn_defs(cfg), jax.random.key(0))
+    opt = adamw_init(params)
+    ckpt = CheckpointManager(args.ckpt_dir or tempfile.mkdtemp(), keep=2)
+    wd = StepWatchdog()
+
+    @jax.jit
+    def step(params, opt, i, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: cnn_loss(cfg, p, batch), has_aux=True)(params)
+        grads, gn = clip_by_global_norm(grads, tcfg.grad_clip_norm)
+        params, opt = adamw_update(params, grads, opt, i, tcfg)
+        return params, opt, metrics
+
+    state = {"params": params, "opt": opt}
+    got = ckpt.restore_latest(state)
+    start = 0
+    if got[0] is not None:
+        start, state = got
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from checkpoint at step {start}")
+
+    for i in range(start, args.steps):
+        batch = cnn_batch(0, i, args.batch, 32, 3, 10)
+        t0 = time.perf_counter()
+        params, opt, m = step(params, opt, jnp.asarray(i + 1), batch)
+        wd.observe(time.perf_counter() - t0)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"acc {float(m['accuracy']):.3f}")
+        if (i + 1) % 50 == 0:
+            ckpt.save(i + 1, {"params": params, "opt": opt})
+    ckpt.wait()
+    print(f"done; stragglers observed: {wd.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

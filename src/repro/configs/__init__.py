@@ -1,0 +1,82 @@
+"""Architecture registry: ``get_config(name)`` / ``reduced_config(name)``.
+
+Every assigned architecture is a selectable config (``--arch <id>``); the
+reduced variants keep the exact family structure (pattern period, MoE,
+qk-norm, frontend stub, ...) at smoke-test scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (ALL_SHAPES, SHAPES, AcceleratorSpec,
+                                BlockDef, ModelConfig, MoEConfig,
+                                RecurrentConfig, ShapeSpec, TrainConfig,
+                                XLSTMConfig, applicable_shapes)
+
+ARCH_IDS = (
+    "gemma3_4b",
+    "command_r_35b",
+    "mistral_large_123b",
+    "qwen3_1p7b",
+    "recurrentgemma_2b",
+    "seamless_m4t_medium",
+    "qwen2_vl_72b",
+    "dbrx_132b",
+    "qwen3_moe_235b_a22b",
+    "xlstm_125m",
+)
+
+# public ids as given in the assignment (dash form) -> module name
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+ALIASES.update({
+    "gemma3-4b": "gemma3_4b",
+    "command-r-35b": "command_r_35b",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "xlstm-125m": "xlstm_125m",
+    "alexnet": "alexnet",
+})
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.get_config()
+
+
+def reduced_config(name: str) -> ModelConfig:
+    """Same family/structure, smoke-test scale (CPU-runnable)."""
+    cfg = get_config(name)
+    period = len(cfg.pattern_period)
+    # keep >= 1 full period plus the tail phase if the real net has one
+    n_layers = period + (1 if cfg.n_tail else 0)
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads // 2 or 1))
+    while n_heads % n_kv:
+        n_kv -= 1
+    repl = dict(
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=256,
+        window_size=min(cfg.window_size, 16) if cfg.window_size else 0,
+    )
+    if cfg.moe is not None:
+        repl["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=32)
+    if cfg.recurrent is not None:
+        repl["recurrent"] = dataclasses.replace(cfg.recurrent, d_rnn=64)
+    if cfg.n_encoder_layers:
+        repl["n_encoder_layers"] = 2
+        repl["n_layers"] = 2
+    return dataclasses.replace(cfg, **repl)

@@ -1,0 +1,14 @@
+"""AlexNet — the paper's own evaluation network (Table 1 / Fig. 6).
+
+Not part of the assigned LM pool; selectable for the CNN examples and
+benchmarks (--arch alexnet routes here via the registry alias).
+"""
+from repro.core.decomposition import ALEXNET_LAYERS
+from repro.models.cnn import CNNConfig, alexnet_config
+
+
+def get_config() -> CNNConfig:
+    return alexnet_config(num_classes=1000)
+
+
+LAYERS = ALEXNET_LAYERS

@@ -1,0 +1,256 @@
+"""Config dataclasses for models, shapes, meshes, and the accelerator.
+
+Single source of truth for every architecture in the assigned pool plus the
+paper's own CNN domain. All dims below come verbatim from the assignment
+table; derived quantities (head_dim = d_model // n_heads) are noted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Block / layer-pattern vocabulary
+# ---------------------------------------------------------------------------
+
+# mixer kinds
+ATTN_GLOBAL = "attn_global"     # full (causal) attention
+ATTN_LOCAL = "attn_local"       # sliding-window attention
+RGLRU = "rglru"                 # Griffin real-gated LRU recurrent block
+MLSTM = "mlstm"                 # xLSTM matrix-LSTM block
+SLSTM = "slstm"                 # xLSTM scalar-LSTM block
+
+# ffn kinds
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+FFN_NONE = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One transformer block = mixer + ffn."""
+    mixer: str
+    ffn: str = FFN_DENSE
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentConfig:
+    """RG-LRU (Griffin) block parameters."""
+    d_rnn: int
+    conv_width: int = 4
+    n_rnn_heads: int = 1  # block-diagonal gating heads
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block parameters (arXiv:2405.04517)."""
+    m_proj_factor: float = 2.0   # mLSTM up-projection factor
+    s_proj_factor: float = 4.0/3 # sLSTM post-up-projection factor
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm | audio | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> derived d_model // n_heads
+    # layer pattern: period of BlockDefs cycled over n_layers
+    pattern_period: tuple[BlockDef, ...] = ()
+    window_size: int = 0             # for ATTN_LOCAL
+    qk_norm: bool = False
+    rope_variant: str = "rope"       # rope | mrope | none
+    rope_theta: float = 10_000.0
+    use_bias: bool = False
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    act: str = "silu"                # silu (gated) | gelu
+    moe: Optional[MoEConfig] = None
+    recurrent: Optional[RecurrentConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # encoder-decoder
+    n_encoder_layers: int = 0        # >0 => enc-dec model
+    # frontends (stubbed per assignment: input_specs provides embeddings)
+    frontend: Optional[str] = None   # audio_frames | vision_patches
+    # sub-quadratic capability (long_500k eligibility)
+    subquadratic: bool = False
+    # numerics
+    param_dtype: str = "float32"     # master weights
+    compute_dtype: str = "bfloat16"
+    # embedding table padded so the vocab dim shards on any mesh axis
+    # (Megatron-style); logits in the pad region are masked to -inf.
+    # 128 keeps every assigned vocab except seamless's 256206 unchanged.
+    vocab_pad_to: int = 128
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if not self.pattern_period:
+            object.__setattr__(
+                self, "pattern_period", (BlockDef(ATTN_GLOBAL, FFN_DENSE),))
+
+    # ---- derived layout ----------------------------------------------------
+    @property
+    def layer_types(self) -> tuple[BlockDef, ...]:
+        """Per-layer BlockDefs, pattern cycled to n_layers."""
+        p = self.pattern_period
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.pattern_period)
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers % len(self.pattern_period)
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return -(-self.vocab_size // p) * p
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameter count (analytic)."""
+        from repro.models import transformer
+        return transformer.param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import transformer
+        return transformer.param_count(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set, LM family)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeSpec("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeSpec("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeSpec("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeSpec("long_500k", "decode", 524_288, 1)
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def applicable_shapes(cfg: ModelConfig) -> tuple[ShapeSpec, ...]:
+    """Shape cells that run for this arch (long_500k only if sub-quadratic)."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.subquadratic:
+        out.append(LONG_500K)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Train / runtime config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip_norm: float = 1.0
+    accum_steps: int = 1                 # gradient accumulation microbatches
+    remat_policy: str = "nothing"        # nothing | dots | full(no remat)
+    seq_shard_activations: bool = False  # Megatron-style SP on saved activations
+    grad_compression: str = "none"       # none | int8
+    moment_dtype: str = "float32"        # bfloat16 halves optimizer memory
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+
+
+# ---------------------------------------------------------------------------
+# Accelerator spec (the paper's chip, and the TPU target) — used by the
+# analytic throughput/energy model and the roofline analysis.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    name: str
+    num_macs: int              # parallel multiply-accumulate units
+    clock_hz: float
+    sram_bytes: int            # on-chip buffer budget (paper: 128 KB; TPU: VMEM)
+    dram_bw: float             # bytes/s off-chip
+    energy_per_mac_j: float    # per MAC op (both mul+add counted as 2 ops)
+    energy_per_sram_byte_j: float
+    energy_per_dram_byte_j: float
+
+    @property
+    def peak_ops(self) -> float:
+        """Peak ops/s, counting MAC = 2 ops (paper's GOPS convention)."""
+        return 2.0 * self.num_macs * self.clock_hz
+
+
+# The paper's chip: 16 CUs x 9 PEs = 144 MACs. 144 MACs * 2 * 500 MHz
+# = 144 GOPS (Table 2). MAC energy calibrated against Table 2's measured
+# power: 425 mW / 144 GOPS = 2.95 pJ/op -> 5.9 pJ/MAC at 1.0 V (includes
+# local clock/SRAM overhead, 65nm-class per Horowitz ISSCC'14).
+PAPER_CHIP = AcceleratorSpec(
+    name="du2017_65nm",
+    num_macs=144,
+    clock_hz=500e6,
+    sram_bytes=128 * 1024,
+    dram_bw=1.6e9,               # 16-bit LPDDR-class, ~1.6 GB/s
+    energy_per_mac_j=5.9e-12,
+    energy_per_sram_byte_j=0.64e-12,
+    energy_per_dram_byte_j=160e-12,
+)
+
+# Low-voltage point (0.6 V @ 20 MHz): 7 mW / 5.76 GOPS = 1.22 pJ/op
+# -> x0.41 vs 1.0 V (~V^2 scaling) -> the 0.8 TOPS/W peak in Table 2.
+PAPER_CHIP_LOWV = dataclasses.replace(
+    PAPER_CHIP,
+    name="du2017_65nm_0v6",
+    clock_hz=20e6,
+    energy_per_mac_j=5.9e-12 * 0.41,
+    energy_per_sram_byte_j=0.64e-12 * 0.41,
+    energy_per_dram_byte_j=160e-12,  # DRAM unaffected by core voltage
+)
+
+# TPU v5e-class target (hardware constants from the assignment):
+# 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = AcceleratorSpec(
+    name="tpu_v5e",
+    num_macs=int(197e12 / 2 / 940e6),   # implied MXU MACs at ~940 MHz
+    clock_hz=940e6,
+    sram_bytes=64 * 1024 * 1024,        # claimable VMEM working set
+    dram_bw=819e9,
+    energy_per_mac_j=0.3e-12,
+    energy_per_sram_byte_j=0.02e-12,
+    energy_per_dram_byte_j=4e-12,
+)
+
+TPU_PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+TPU_HBM_BW = 819e9            # bytes/s per chip
+TPU_ICI_BW = 50e9             # bytes/s per link

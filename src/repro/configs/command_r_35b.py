@@ -1,0 +1,23 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000. GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01; unverified]
+
+Pure full attention -> long_500k cell skipped (DESIGN.md §4).
+"""
+from repro.configs.base import ATTN_GLOBAL, BlockDef, FFN_DENSE, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b",
+        family="dense",
+        n_layers=40,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=22528,
+        vocab_size=256_000,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_DENSE),),
+        use_bias=False,
+        tie_embeddings=True,
+        subquadratic=False,
+    )

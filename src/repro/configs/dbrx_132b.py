@@ -1,0 +1,27 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4 (fine-grained).
+[hf:databricks/dbrx-base; unverified]
+
+Expert parallelism = the paper's feature decomposition across chips.
+Pure full attention -> long_500k skipped.
+"""
+from repro.configs.base import (ATTN_GLOBAL, BlockDef, FFN_MOE, ModelConfig,
+                                MoEConfig)
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=10752,
+        vocab_size=100_352,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_MOE),),
+        moe=MoEConfig(num_experts=16, top_k=4, d_ff_expert=10752),
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+        subquadratic=False,
+    )

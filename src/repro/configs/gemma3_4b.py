@@ -1,0 +1,29 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144.
+
+5:1 local:global attention (every 6th layer global), 128k-context family —
+the local sliding window bounds the KV working set, so long_500k runs
+(subquadratic=True). [hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, BlockDef,
+                                FFN_DENSE, ModelConfig)
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b",
+        family="dense",
+        n_layers=34,
+        d_model=2560,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=10240,
+        vocab_size=262_144,
+        pattern_period=tuple([BlockDef(ATTN_LOCAL, FFN_DENSE)] * 5
+                             + [BlockDef(ATTN_GLOBAL, FFN_DENSE)]),
+        window_size=1024,
+        qk_norm=True,
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        act="gelu",
+        subquadratic=True,   # 5:1 local bounds the KV footprint
+    )

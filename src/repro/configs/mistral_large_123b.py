@@ -1,0 +1,22 @@
+"""mistral-large-123b [dense]: 88L d_model=12288 96H (GQA kv=8) d_ff=28672
+vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+
+Pure full attention -> long_500k cell skipped (DESIGN.md §4).
+"""
+from repro.configs.base import ATTN_GLOBAL, BlockDef, FFN_DENSE, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-123b",
+        family="dense",
+        n_layers=88,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=32_768,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_DENSE),),
+        tie_embeddings=False,
+        subquadratic=False,
+    )

@@ -1,0 +1,30 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064. M-RoPE, dynamic resolution. [arXiv:2409.12191; hf]
+
+Vision frontend is a STUB per the assignment: input_specs provides
+precomputed patch embeddings (B, N_patches, d_model) that replace the first
+N token slots, plus (3, B, S) M-RoPE position ids (temporal/height/width).
+Pure full attention -> long_500k skipped.
+"""
+from repro.configs.base import ATTN_GLOBAL, BlockDef, FFN_DENSE, ModelConfig
+
+N_PATCHES = 256   # stub image: 16x16 grid of merged patches
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152_064,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_DENSE),),
+        rope_variant="mrope",
+        use_bias=True,            # qwen2 attention has qkv bias
+        tie_embeddings=False,
+        frontend="vision_patches",
+        subquadratic=False,
+    )

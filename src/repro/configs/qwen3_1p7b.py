@@ -1,0 +1,24 @@
+"""qwen3-1.7b [dense]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936. qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf]
+
+Pure full attention -> long_500k cell skipped (DESIGN.md §4).
+"""
+from repro.configs.base import ATTN_GLOBAL, BlockDef, FFN_DENSE, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b",
+        family="dense",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=6144,
+        vocab_size=151_936,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_DENSE),),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        subquadratic=False,
+    )

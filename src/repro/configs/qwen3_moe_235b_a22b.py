@@ -1,0 +1,27 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4) d_ff=1536
+(per expert) vocab=151936, MoE 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]
+
+head_dim derived from the assignment as d_model // n_heads = 64.
+128-way expert decomposition; pure full attention -> long_500k skipped.
+"""
+from repro.configs.base import (ATTN_GLOBAL, BlockDef, FFN_MOE, ModelConfig,
+                                MoEConfig)
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b",
+        family="moe",
+        n_layers=94,
+        d_model=4096,
+        n_heads=64,
+        n_kv_heads=4,
+        d_ff=1536,
+        vocab_size=151_936,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_MOE),),
+        moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=False,
+        subquadratic=False,
+    )

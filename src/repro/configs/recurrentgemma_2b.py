@@ -1,0 +1,29 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000. RG-LRU + local attn, 1 attention : 2 recurrent (Griffin
+pattern: rec, rec, local-attn). [arXiv:2402.19427; hf]
+
+Sub-quadratic (recurrent state + bounded window) -> long_500k runs.
+"""
+from repro.configs.base import (ATTN_LOCAL, BlockDef, FFN_DENSE, ModelConfig,
+                                RGLRU, RecurrentConfig)
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        n_layers=26,
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        d_ff=7680,
+        vocab_size=256_000,
+        pattern_period=(BlockDef(RGLRU, FFN_DENSE),
+                        BlockDef(RGLRU, FFN_DENSE),
+                        BlockDef(ATTN_LOCAL, FFN_DENSE)),
+        window_size=2048,
+        recurrent=RecurrentConfig(d_rnn=2560, conv_width=4),
+        tie_embeddings=True,
+        act="gelu",
+        subquadratic=True,
+    )

@@ -1,0 +1,34 @@
+"""seamless-m4t-medium [audio]: 12L d_model=1024 16H (kv=16, MHA) d_ff=4096
+vocab=256206. Encoder-decoder, multimodal. [arXiv:2308.11596; hf]
+
+Audio frontend is a STUB per the assignment: input_specs provides
+precomputed frame embeddings (B, S_enc, d_model); S_enc = seq_len // 4
+(speech frames downsample ~4x vs text positions). Enc-dec => decode shapes
+run; full attention => long_500k skipped.
+"""
+from repro.configs.base import ATTN_GLOBAL, BlockDef, FFN_DENSE, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,            # decoder layers
+        n_encoder_layers=12,    # encoder layers
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256_206,
+        pattern_period=(BlockDef(ATTN_GLOBAL, FFN_DENSE),),
+        use_bias=True,
+        tie_embeddings=True,
+        act="gelu",
+        rope_variant="rope",
+        frontend="audio_frames",
+        subquadratic=False,
+    )
+
+
+def encoder_len(seq_len: int) -> int:
+    return max(seq_len // 4, 8)

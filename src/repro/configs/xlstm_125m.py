@@ -1,0 +1,27 @@
+"""xlstm-125m [ssm]: 12L d_model=768 4H (kv=4) d_ff=0 vocab=50304.
+sLSTM + mLSTM blocks, alternating (mLSTM even, sLSTM odd).
+[arXiv:2405.04517; unverified]
+
+d_ff=0: xLSTM blocks carry their own projections (mLSTM up/down factor 2,
+sLSTM post-MLP factor 4/3). Recurrent state -> long_500k runs.
+"""
+from repro.configs.base import (BlockDef, FFN_NONE, MLSTM, ModelConfig,
+                                SLSTM, XLSTMConfig)
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        family="ssm",
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50_304,
+        pattern_period=(BlockDef(MLSTM, FFN_NONE), BlockDef(SLSTM, FFN_NONE)),
+        xlstm=XLSTMConfig(),
+        rope_variant="none",
+        tie_embeddings=True,
+        subquadratic=True,
+    )

@@ -1,0 +1,8 @@
+"""The paper's primary contribution: streaming execution under an on-chip
+buffer budget, with image / feature / kernel decomposition."""
+from repro.core.decomposition import (ALEXNET_LAYERS, PAPER_CONV1_PLAN,
+                                      ConvLayer, Plan, evaluate,
+                                      plan_decomposition, tile_grid)
+from repro.core.quantization import (QFormat, calibrate_frac_bits,
+                                     dequantize, fake_quant,
+                                     fixed_point_matmul, quantize)

@@ -1,0 +1,78 @@
+"""Analytic throughput / energy model of the streaming accelerator
+(paper §6, Table 2) — and, re-parameterised, the TPU roofline terms.
+
+The model counts, for a layer under a decomposition plan:
+  - MAC cycles on the CU array (with utilisation loss from tile edges),
+  - DRAM bytes (from the plan's traffic model),
+  - SRAM bytes (every input pixel/weight/psum touched on-chip),
+then converts to time = max(compute, memory) and energy = sum of per-op
+energies. Peak numbers reproduce Table 2: 144 GOPS @ 500 MHz and
+~0.8 TOPS/W at the 20 MHz / 0.6 V point.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import AcceleratorSpec, PAPER_CHIP, PAPER_CHIP_LOWV
+from repro.core.decomposition import ConvLayer, Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPerf:
+    layer: str
+    macs: int
+    dram_bytes: int
+    sram_bytes: int
+    compute_s: float
+    memory_s: float
+    time_s: float
+    energy_j: float
+
+    @property
+    def gops(self) -> float:
+        return 2 * self.macs / self.time_s / 1e9
+
+    @property
+    def tops_per_w(self) -> float:
+        return 2 * self.macs / self.energy_j / 1e12
+
+
+def layer_perf(spec: AcceleratorSpec, plan: Plan,
+               utilization: float = 0.9) -> LayerPerf:
+    l = plan.layer
+    macs = l.macs
+    compute_s = macs / (spec.num_macs * spec.clock_hz * utilization)
+    dram = plan.dram_traffic
+    memory_s = dram / spec.dram_bw
+    # on-chip traffic: each input pixel enters the array once per pass
+    # group; weights stream per output row; outputs written once.
+    sram = plan.dram_traffic + l.out_bytes  # read + write approximations
+    time_s = max(compute_s, memory_s)
+    energy = (macs * spec.energy_per_mac_j
+              + sram * spec.energy_per_sram_byte_j
+              + dram * spec.energy_per_dram_byte_j)
+    return LayerPerf(l.name, macs, dram, sram, compute_s, memory_s,
+                     time_s, energy)
+
+
+def peak_gops(spec: AcceleratorSpec) -> float:
+    return spec.peak_ops / 1e9
+
+
+def peak_tops_per_w(spec: AcceleratorSpec) -> float:
+    """Compute-only peak efficiency (all data on-chip, SRAM energy only)."""
+    per_op_j = spec.energy_per_mac_j / 2  # per op (MAC = 2 ops)
+    return 1.0 / per_op_j / 1e12
+
+
+def network_perf(spec: AcceleratorSpec, plans: list[Plan],
+                 utilization: float = 0.9):
+    per_layer = [layer_perf(spec, p, utilization) for p in plans]
+    t = sum(p.time_s for p in per_layer)
+    e = sum(p.energy_j for p in per_layer)
+    macs = sum(p.macs for p in per_layer)
+    return per_layer, dict(
+        total_time_s=t, total_energy_j=e,
+        avg_gops=2 * macs / t / 1e9,
+        avg_tops_per_w=2 * macs / e / 1e12,
+        avg_power_w=e / t)

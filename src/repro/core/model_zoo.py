@@ -1,0 +1,47 @@
+"""CONV-layer tables for the other networks the paper claims to support
+("able to support most popular CNNs"): VGG-16 and ResNet-18. Used by the
+planner benchmarks to show every layer of both networks decomposes under
+the 128 KB budget.
+"""
+from repro.core.decomposition import ConvLayer
+
+# VGG-16 conv layers (Simonyan & Zisserman 2014), 224x224 input.
+VGG16_LAYERS = (
+    ConvLayer("vgg_c1_1", 224, 224, 3, 64, 3, pad=1),
+    ConvLayer("vgg_c1_2", 224, 224, 64, 64, 3, pad=1, pool=2),
+    ConvLayer("vgg_c2_1", 112, 112, 64, 128, 3, pad=1),
+    ConvLayer("vgg_c2_2", 112, 112, 128, 128, 3, pad=1, pool=2),
+    ConvLayer("vgg_c3_1", 56, 56, 128, 256, 3, pad=1),
+    ConvLayer("vgg_c3_2", 56, 56, 256, 256, 3, pad=1),
+    ConvLayer("vgg_c3_3", 56, 56, 256, 256, 3, pad=1, pool=2),
+    ConvLayer("vgg_c4_1", 28, 28, 256, 512, 3, pad=1),
+    ConvLayer("vgg_c4_2", 28, 28, 512, 512, 3, pad=1),
+    ConvLayer("vgg_c4_3", 28, 28, 512, 512, 3, pad=1, pool=2),
+    ConvLayer("vgg_c5_1", 14, 14, 512, 512, 3, pad=1),
+    ConvLayer("vgg_c5_2", 14, 14, 512, 512, 3, pad=1),
+    ConvLayer("vgg_c5_3", 14, 14, 512, 512, 3, pad=1, pool=2),
+)
+
+# ResNet-18 conv layers (He et al. 2015) — the distinct conv shapes;
+# residual adds run on the accumulation buffer (noted in DESIGN.md).
+RESNET18_LAYERS = (
+    ConvLayer("res_conv1", 224, 224, 3, 64, 7, stride=2, pad=3, pool=3,
+              pool_stride=2),
+    ConvLayer("res_b1", 56, 56, 64, 64, 3, pad=1),
+    ConvLayer("res_b2_down", 56, 56, 64, 128, 3, stride=2, pad=1),
+    ConvLayer("res_b2", 28, 28, 128, 128, 3, pad=1),
+    ConvLayer("res_b3_down", 28, 28, 128, 256, 3, stride=2, pad=1),
+    ConvLayer("res_b3", 14, 14, 256, 256, 3, pad=1),
+    ConvLayer("res_b4_down", 14, 14, 256, 512, 3, stride=2, pad=1),
+    ConvLayer("res_b4", 7, 7, 512, 512, 3, pad=1),
+    # 1x1 projection shortcuts
+    ConvLayer("res_proj2", 56, 56, 64, 128, 1, stride=2),
+    ConvLayer("res_proj3", 28, 28, 128, 256, 1, stride=2),
+    ConvLayer("res_proj4", 14, 14, 256, 512, 1, stride=2),
+)
+
+NETWORKS = {
+    "alexnet": None,   # repro.core.decomposition.ALEXNET_LAYERS
+    "vgg16": VGG16_LAYERS,
+    "resnet18": RESNET18_LAYERS,
+}

@@ -1,0 +1,90 @@
+"""Fixed-point quantization (paper Table 2: "Precision: 16-bit fixed point").
+
+Symmetric Q-format: value = int * 2^-frac_bits. The paper's CUs multiply
+16-bit operands into 32-bit accumulators; we reproduce that numerically
+(int arithmetic in int32) and provide the int8 variant that is TPU-native
+(MXU int8 x int8 -> int32), used by kernels/quant_matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    bits: int = 16
+    frac_bits: int = 8
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def dtype(self):
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[self.bits]
+
+    @property
+    def lsb(self) -> float:
+        return 1.0 / self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax / self.scale
+
+
+def quantize(x: jax.Array, q: QFormat) -> jax.Array:
+    """Round-to-nearest-even, saturating."""
+    xi = jnp.clip(jnp.round(x.astype(jnp.float32) * q.scale), q.qmin, q.qmax)
+    return xi.astype(q.dtype)
+
+
+def dequantize(xq: jax.Array, q: QFormat) -> jax.Array:
+    return xq.astype(jnp.float32) * q.lsb
+
+
+def calibrate_frac_bits(x, bits: int = 16) -> QFormat:
+    """Max-abs calibration: largest frac_bits with no saturation."""
+    amax = float(jnp.max(jnp.abs(x)))
+    if amax == 0.0:
+        return QFormat(bits, bits - 1)
+    int_bits = max(0, int(jnp.ceil(jnp.log2(amax + 1e-30))) + 1)
+    frac = max(0, bits - 1 - int_bits)
+    return QFormat(bits, frac)
+
+
+def fixed_point_matmul(aq: jax.Array, bq: jax.Array,
+                       qa: QFormat, qb: QFormat,
+                       out_q: QFormat | None = None):
+    """Integer matmul with 32-bit accumulation (the paper's CU datapath).
+
+    Returns float if out_q is None, else requantized ints."""
+    acc = jnp.matmul(aq.astype(jnp.int32), bq.astype(jnp.int32))
+    scale = qa.lsb * qb.lsb
+    if out_q is None:
+        return acc.astype(jnp.float32) * scale
+    # requantize: shift from (fa+fb) frac bits to out frac bits
+    shift = (qa.frac_bits + qb.frac_bits) - out_q.frac_bits
+    if shift >= 0:
+        # round-half-up in integer domain
+        r = (acc + (1 << (shift - 1) if shift > 0 else 0)) >> shift
+    else:
+        r = acc << (-shift)
+    return jnp.clip(r, out_q.qmin, out_q.qmax).astype(out_q.dtype)
+
+
+def fake_quant(x: jax.Array, q: QFormat) -> jax.Array:
+    """Quantize-dequantize (for accuracy studies); straight-through grad."""
+    def fwd(x):
+        return dequantize(quantize(x, q), q)
+    return x + jax.lax.stop_gradient(fwd(x) - x)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (cnn_batch, lm_batch, make_lm_iterator,
+                                 shard_batch)

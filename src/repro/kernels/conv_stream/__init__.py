@@ -1,0 +1,2 @@
+from repro.kernels.conv_stream.ops import conv2d_stream
+from repro.kernels.conv_stream.ref import conv2d_ref

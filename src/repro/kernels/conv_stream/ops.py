@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the streaming conv kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv_stream.kernel import conv2d_stream_raw
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "row_block",
+                                             "cout_block", "cin_block",
+                                             "interpret"))
+def conv2d_stream(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                  stride: int = 1, pad: int = 0, row_block: int = 8,
+                  cout_block: int = 128, cin_block: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """SAME/VALID streaming conv with optional bias. Output fp32."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    out = conv2d_stream_raw(x, w, stride=stride, row_block=row_block,
+                            cout_block=cout_block, cin_block=cin_block,
+                            interpret=interpret)
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out

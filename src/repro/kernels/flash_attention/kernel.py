@@ -1,0 +1,119 @@
+"""Blockwise-streaming attention Pallas kernel (flash-style, fwd).
+
+This is the paper's decomposition idea on the sequence axis (DESIGN.md §2):
+KV blocks stream through VMEM past a resident Q block while an online
+softmax (running max m, normaliser l, accumulator acc — the comparator +
+feedback-register pattern of the paper's pooling unit, generalised) keeps
+the full S x T score matrix from ever existing.
+
+Features: causal masking, sliding-window (local) masking, GQA via the
+kv-head index map (k/v blocks are fetched from head h // G — no KV
+replication in memory).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_k: int, causal: bool,
+                 window: int, seq_k: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    # skip fully-masked blocks (causal upper triangle / below the window)
+    run = j >= 0   # traced True
+    if causal:
+        run &= (j * block_k) <= (i * block_q + block_q - 1)
+        if window > 0:
+            run &= (i * block_q - window) < (j * block_k + block_k)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < seq_k
+        if causal:
+            mask &= k_pos <= q_pos
+            if window > 0:
+                mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                           # (Bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30))[None, None].astype(
+                          o_ref.dtype)
+
+
+def flash_attention_raw(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """q (B, H, S, D); k, v (B, KV, T, D); H = KV * G. Returns (B,H,S,D)."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = D ** -0.5
+
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    nq, nk = -(-S // bq), -(-T // bk)
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, nq * bq - S), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, nk * bk - T), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, nk * bk - T), (0, 0)))
+
+    kern = functools.partial(_attn_kernel, scale=scale, block_q=bq,
+                             block_k=bk, causal=causal, window=window,
+                             seq_k=T)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # normaliser l
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

@@ -1,0 +1,16 @@
+"""jit'd public wrapper for flash attention."""
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_raw
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    return flash_attention_raw(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (dense masked softmax)."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,S,D); k,v (B,KV,T,D). fp32 softmax; returns q.dtype."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * (D ** -0.5)
+    if causal:
+        qp = jnp.arange(S)[:, None]
+        kp = jnp.arange(T)[None, :]
+        mask = kp <= qp
+        if window > 0:
+            mask &= kp > (qp - window)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+import jax  # noqa: E402  (used above via jax.nn)

@@ -1,0 +1,2 @@
+from repro.kernels.fused_conv_pool.ops import fused_conv_pool
+from repro.kernels.fused_conv_pool.ref import conv_pool_ref

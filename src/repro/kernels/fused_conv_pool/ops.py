@@ -1,0 +1,30 @@
+"""jit'd public wrapper for fused conv+pool."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_conv_pool.kernel import fused_conv_pool_raw
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "pool", "relu",
+                                             "row_block", "cout_block",
+                                             "cin_block", "interpret"))
+def fused_conv_pool(x, w, b=None, *, stride: int = 1, pad: int = 0,
+                    pool: int = 2, relu: bool = True, row_block: int = 8,
+                    cout_block: int = 128, cin_block: int = 128,
+                    interpret: bool = True):
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    if b is not None:
+        # fold bias into an extra all-ones input channel
+        B, H, W, _ = x.shape
+        x = jnp.concatenate([x, jnp.ones((B, H, W, 1), x.dtype)], -1)
+        K = w.shape[0]
+        wb = jnp.zeros((K, K, 1, w.shape[-1]), w.dtype)
+        center = K // 2
+        wb = wb.at[center, center, 0, :].set(b.astype(w.dtype))
+        w = jnp.concatenate([w, wb], axis=2)
+    return fused_conv_pool_raw(x, w, stride=stride, pool=pool, relu=relu,
+                               row_block=row_block, cout_block=cout_block,
+                               cin_block=cin_block, interpret=interpret)

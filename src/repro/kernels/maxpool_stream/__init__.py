@@ -1,0 +1,2 @@
+from repro.kernels.maxpool_stream.ops import maxpool_stream
+from repro.kernels.maxpool_stream.ref import maxpool_ref

@@ -1,0 +1,14 @@
+"""jit'd public wrapper for streaming max-pool."""
+import functools
+
+import jax
+
+from repro.kernels.maxpool_stream.kernel import maxpool_stream_raw
+
+
+@functools.partial(jax.jit, static_argnames=("pool", "stride", "row_block",
+                                             "interpret"))
+def maxpool_stream(x, *, pool: int, stride: int = 0, row_block: int = 8,
+                   interpret: bool = True):
+    return maxpool_stream_raw(x, pool=pool, stride=stride,
+                              row_block=row_block, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for streaming max-pool."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def maxpool_ref(x, *, pool: int, stride: int = 0):
+    stride = stride or pool
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, pool, pool, 1),
+                             (1, stride, stride, 1), "VALID")

@@ -1,0 +1,68 @@
+"""Fixed-point matmul Pallas kernel (paper Table 2: 16-bit fixed point CUs).
+
+TPU adaptation (DESIGN.md §6): the MXU's native quantized path is
+int8 x int8 -> int32, so the kernel is int8-first with int32 accumulation
+in a VMEM scratch across K blocks — exactly the paper's 16b x 16b -> 32b
+accumulate datapath, one precision notch down. Per-output-channel weight
+scales dequantize on the final K step (scale management stays on-chip).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(kk == n_k - 1)
+    def _finish():
+        scale = sx_ref[0] * sw_ref[...]              # (Bn,)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * scale[None, :]).astype(o_ref.dtype)
+
+
+def quant_matmul_raw(xq: jax.Array, wq: jax.Array, sx: jax.Array,
+                     sw: jax.Array, *, block_m: int = 128,
+                     block_n: int = 128, block_k: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """xq (M,K) int8, wq (K,N) int8, sx () scalar scale, sw (N,) scales.
+
+    Returns fp32 (M, N) = (xq @ wq) * sx * sw."""
+    M, K = xq.shape
+    _, N = wq.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    nm, nn, nk = -(-M // bm), -(-N // bn), -(-K // bk)
+    xq = jnp.pad(xq, ((0, nm * bm - M), (0, nk * bk - K)))
+    wq = jnp.pad(wq, ((0, nk * bk - K), (0, nn * bn - N)))
+    sw = jnp.pad(sw, (0, nn * bn - N))
+    sx = jnp.asarray(sx, jnp.float32).reshape(1)
+
+    kern = functools.partial(_qmm_kernel, n_k=nk)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((nm * bm, nn * bn), jnp.float32),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1,), lambda m, n, k: (0,)),
+            pl.BlockSpec((bn,), lambda m, n, k: (n,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq, sx, sw)
+    return out[:M, :N]

@@ -1,0 +1,32 @@
+"""jit'd public wrapper + convenience quantizing entry point."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import quant_matmul_raw
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def quant_matmul(xq, wq, sx, sw, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128, interpret: bool = True):
+    return quant_matmul_raw(xq, wq, sx, sw, block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)
+
+
+def quantize_activations(x, bits: int = 8):
+    """Symmetric per-tensor activation quantization -> (int8 values, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    qmax = 2 ** (bits - 1) - 1
+    scale = amax / qmax
+    return jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8), scale
+
+
+def quantize_weights(w, bits: int = 8):
+    """Symmetric per-output-channel weight quantization -> (int8, scales)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)
+    qmax = 2 ** (bits - 1) - 1
+    scale = amax / qmax
+    return (jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
+            .astype(jnp.int8), scale)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the quantized matmul."""
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(xq, wq, sx, sw):
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return acc.astype(jnp.float32) * jnp.asarray(sx, jnp.float32) * sw[None, :]

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# NOTE: the two lines above MUST run before any other import — jax locks
+# the device count at first backend initialisation.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, without allocating a single real array:
+  - proof the sharded program lowers and compiles (the deliverable gate),
+  - compiled.memory_analysis()  -> bytes per device (does it fit 16 GB?),
+  - compiled.cost_analysis()    -> HLO flops/bytes (top-level program),
+  - a collective-bytes estimate from parsing the compiled HLO text
+    (while-loop bodies multiplied by their trip counts — scan-aware),
+all dumped as JSON artifacts consumed by the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.configs.base import SHAPES, TrainConfig, applicable_shapes
+from repro.distributed.sharding import serve_rules, train_rules, use_sharding
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import (collective_bytes_from_hlo,
+                                cpu_bf16_artifact_bytes)
+from repro.train.steps import (init_train_state, make_decode_step,
+                               make_encdec_decode, make_prefill_step,
+                               make_train_step)
+
+# Per-arch training knobs chosen for the 16 GB/chip budget (DESIGN.md §5):
+# accumulation splits the per-chip microbatch; seq-sharded saved
+# activations (Megatron SP) for the wide models.
+TRAIN_KNOBS = {
+    "mistral-large-123b": dict(accum_steps=8, seq_shard_activations=True),
+    "qwen2-vl-72b": dict(accum_steps=4, seq_shard_activations=True),
+    "command-r-35b": dict(accum_steps=2, seq_shard_activations=True),
+    "dbrx-132b": dict(accum_steps=8, seq_shard_activations=True),
+    # accum must keep microbatch >= DP shards (32 on the 2-pod mesh) or the
+    # sharded MoE dispatch cannot split tokens per shard
+    "qwen3-moe-235b-a22b": dict(accum_steps=8, seq_shard_activations=True,
+                                moment_dtype="bfloat16"),
+    "gemma3-4b": dict(accum_steps=4),
+    "recurrentgemma-2b": dict(accum_steps=4),
+    "qwen3-1.7b": dict(accum_steps=2),
+    "seamless-m4t-medium": dict(accum_steps=4),
+    "xlstm-125m": dict(accum_steps=1),
+}
+
+
+# Serving: drop FSDP weight sharding (replicate over 'data') when bf16
+# weights / 16 model-shards fit comfortably — removes the per-step weight
+# all-gather (§Perf iteration on gemma3 long_500k). Large models keep FSDP.
+SERVE_NO_FSDP = {"gemma3-4b", "qwen3-1.7b", "recurrentgemma-2b",
+                 "xlstm-125m", "seamless-m4t-medium"}
+
+
+def _mesh_and_rules(multi_pod: bool, mode: str, cfg, shape):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mode == "train":
+        knobs = TRAIN_KNOBS.get(cfg.name, {})
+        rules = train_rules(multi_pod,
+                            knobs.get("seq_shard_activations", False))
+    else:
+        rules = serve_rules(multi_pod,
+                            fsdp_weights=cfg.name not in SERVE_NO_FSDP)
+        if shape.name == "long_500k":
+            # batch=1 (§Perf cell 1): KV sequence takes every axis it can;
+            # weights stay 2D-sharded and the activations' d_model shards
+            # over 'data' so matmuls partial-sum (weights never move).
+            rules = dict(rules)
+            rules["seq_kv"] = ("data", "model")
+            rules["embed"] = ("data",)
+            rules["act_embed"] = ("data",)
+    return mesh, rules
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               compile_: bool = True):
+    """Returns a result dict for one (arch, shape, mesh) cell."""
+    cfg = C.get_config(arch)
+    shape = SHAPES[shape_name]
+    mode = shape.kind
+    mesh, rules = _mesh_and_rules(multi_pod, mode, cfg, shape)
+    t0 = time.time()
+
+    with use_sharding(mesh, rules):
+        if mode == "train":
+            knobs = TRAIN_KNOBS.get(cfg.name, {})
+            tcfg = TrainConfig(
+                accum_steps=knobs.get("accum_steps", 1),
+                moment_dtype=knobs.get("moment_dtype", "float32"))
+            params = SP.abstract_model_params(cfg)
+            moments = SP.abstract_model_params(
+                cfg, dtype=jnp.dtype(tcfg.moment_dtype))
+            pspecs = SP.model_param_pspecs(cfg, rules, mesh)
+            state = {
+                "params": params,
+                "opt": {"m": moments, "v": moments},
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            state_ps = {"params": pspecs, "opt": {"m": pspecs, "v": pspecs},
+                        "step": P()}
+            batch, batch_ps = SP.train_batch_specs(cfg, shape, rules, mesh)
+            fn = make_train_step(cfg, tcfg,
+                                 grad_shardings=SP.named(mesh, pspecs))
+            lowered = jax.jit(
+                fn,
+                in_shardings=(SP.named(mesh, state_ps),
+                              SP.named(mesh, batch_ps)),
+                out_shardings=(SP.named(mesh, state_ps), None),
+                donate_argnums=(0,),     # state buffers reused in-place
+            ).lower(state, batch)
+        elif mode == "prefill":
+            params = SP.abstract_model_params(cfg, dtype=jnp.bfloat16)
+            pspecs = SP.model_param_pspecs(cfg, rules, mesh)
+            batch, batch_ps = SP.prefill_batch_specs(cfg, shape, rules, mesh)
+            B, S = shape.global_batch, shape.seq_len
+            cache_ps = SP.cache_pspecs(cfg, B, S, rules, mesh)
+            if cfg.n_encoder_layers:
+                fn = make_prefill_encdec_wrapper(cfg)
+                args = (params, batch["frames"], batch["tokens"])
+                in_sh = (SP.named(mesh, pspecs),
+                         SP.named(mesh, batch_ps["frames"]),
+                         SP.named(mesh, batch_ps["tokens"]))
+                out_sh = (None, SP.named(mesh, cache_ps), None)
+            else:
+                fn = make_prefill_step(cfg)
+                extra = batch.get("vision_embeds")
+                pos = batch.get("positions")
+                args = (params, batch["tokens"], extra, pos)
+                in_sh = (SP.named(mesh, pspecs),
+                         SP.named(mesh, batch_ps["tokens"]),
+                         SP.named(mesh, batch_ps.get("vision_embeds"))
+                         if extra is not None else None,
+                         SP.named(mesh, batch_ps.get("positions"))
+                         if pos is not None else None)
+                out_sh = (None, SP.named(mesh, cache_ps))
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+        else:  # decode
+            params = SP.abstract_model_params(cfg, dtype=jnp.bfloat16)
+            pspecs = SP.model_param_pspecs(cfg, rules, mesh)
+            inputs, in_ps = SP.decode_inputs(cfg, shape, rules, mesh)
+            if cfg.n_encoder_layers:
+                fn = make_encdec_decode(cfg)
+                args = (params, inputs["cache"], inputs["cross_kv"],
+                        inputs["token"], inputs["pos"])
+                in_sh = (SP.named(mesh, pspecs),
+                         SP.named(mesh, in_ps["cache"]),
+                         SP.named(mesh, in_ps["cross_kv"]),
+                         SP.named(mesh, in_ps["token"]),
+                         SP.named(mesh, in_ps["pos"]))
+                out_sh = (None, SP.named(mesh, in_ps["cache"]))
+            else:
+                fn = make_decode_step(cfg)
+                args = (params, inputs["cache"], inputs["token"],
+                        inputs["pos"])
+                in_sh = (SP.named(mesh, pspecs),
+                         SP.named(mesh, in_ps["cache"]),
+                         SP.named(mesh, in_ps["token"]),
+                         SP.named(mesh, in_ps["pos"]))
+                out_sh = (None, SP.named(mesh, in_ps["cache"]))
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(1,),  # KV cache updated in place
+                              ).lower(*args)
+
+    result = {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": mode, "lower_s": round(time.time() - t0, 1),
+    }
+    if not compile_:
+        return result
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t1, 1)
+    ma = compiled.memory_analysis()
+    n_dev = 512 if multi_pod else 256
+    result["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "per_device_total_gb": round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9, 3),
+    }
+    ca = compiled.cost_analysis() or {}
+    result["cost"] = {k: ca.get(k) for k in ("flops", "bytes accessed")
+                      if k in ca}
+    txt = compiled.as_text()
+    result["collectives"] = collective_bytes_from_hlo(txt)
+    art = cpu_bf16_artifact_bytes(txt)
+    result["memory"]["cpu_bf16_artifact_gb"] = round(art / 1e9, 3)
+    result["memory"]["adjusted_total_gb"] = round(max(
+        0.0, result["memory"]["per_device_total_gb"] - art / 1e9), 3)
+    result["hlo_bytes"] = len(txt)
+    return result
+
+
+def make_prefill_encdec_wrapper(cfg):
+    from repro.models import encdec as ED
+    from repro.models.module import cast_tree
+
+    def prefill(params, frames, tokens):
+        cparams = cast_tree(params, jnp.dtype(cfg.compute_dtype))
+        enc = ED.apply_encoder(cfg, cparams, frames)
+        ckv = ED.compute_cross_kv(cfg, cparams, enc)
+        logits, cache = ED.apply_decoder(cfg, cparams, tokens, ckv,
+                                         collect_cache=True,
+                                         logits_slice_last=True)
+        return logits[:, -1], cache, ckv
+    return prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = ([args.arch] if args.arch else
+             [a.replace("_", "-") if a != "qwen3_1p7b" else "qwen3-1.7b"
+              for a in C.ARCH_IDS])
+    for arch in archs:
+        cfg = C.get_config(arch)
+        shapes = ([args.shape] if args.shape else
+                  [s.name for s in applicable_shapes(cfg)])
+        for sh in shapes:
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    failures = 0
+    for arch, sh, mp in cells:
+        tag = f"{arch}_{sh}_{'multi' if mp else 'single'}"
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[skip] {tag} (artifact exists)")
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, sh, mp, compile_=not args.no_compile)
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=1)
+            mem = res.get("memory", {}).get("per_device_total_gb", "-")
+            print(f"  ok: lower {res.get('lower_s')}s "
+                  f"compile {res.get('compile_s', '-')}s "
+                  f"mem/dev {mem} GB", flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"  FAIL: {type(e).__name__}: {str(e)[:400]}")
+            traceback.print_exc(limit=3)
+    print(f"done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

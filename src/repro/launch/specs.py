@@ -1,0 +1,168 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(arch x shape x mode) cell — the dry-run's contract.
+
+No device allocation happens here: params/caches are built with
+jax.eval_shape; shardings resolve logical axes via the rules tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.module import (abstract_params, is_def, param_pspecs,
+                                 resolve_axes)
+from repro.configs import seamless_m4t_medium as _seamless
+from repro.configs.qwen2_vl_72b import N_PATCHES
+
+
+def mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def model_defs(cfg: ModelConfig):
+    return ED.encdec_defs(cfg) if cfg.n_encoder_layers else T.lm_defs(cfg)
+
+
+def abstract_model_params(cfg: ModelConfig, dtype=None):
+    defs = model_defs(cfg)
+    tree = abstract_params(defs)
+    if dtype is not None:
+        tree = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
+    return tree
+
+
+def model_param_pspecs(cfg: ModelConfig, rules, mesh: Mesh):
+    return param_pspecs(model_defs(cfg), rules, mesh_sizes(mesh))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs per mode
+# ---------------------------------------------------------------------------
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, rules, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    sizes = mesh_sizes(mesh)
+    r = lambda shp, ax: resolve_axes(shp, ax, rules, sizes)
+    specs = {"tokens": _tok(B, S), "labels": _tok(B, S)}
+    pspecs = {"tokens": r((B, S), ("batch", None)),
+              "labels": r((B, S), ("batch", None))}
+    if cfg.n_encoder_layers:
+        Se = _seamless.encoder_len(S)
+        specs["frames"] = jax.ShapeDtypeStruct((B, Se, cfg.d_model),
+                                               jnp.float32)
+        pspecs["frames"] = r((B, Se, cfg.d_model), ("batch", None, None))
+    elif cfg.frontend == "vision_patches":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, N_PATCHES, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        pspecs["vision_embeds"] = r((B, N_PATCHES, cfg.d_model),
+                                    ("batch", None, None))
+        pspecs["positions"] = r((3, B, S), (None, "batch", None))
+    return specs, pspecs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec, rules,
+                        mesh: Mesh):
+    return train_batch_specs(cfg, shape, rules, mesh)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16, ring_local: bool = False):
+    if cfg.n_encoder_layers:
+        return jax.eval_shape(
+            lambda: ED.init_decoder_cache(cfg, batch, s_max, dtype))
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, s_max, dtype, ring_local))
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, s_max: int, rules,
+                 mesh: Mesh, dtype=jnp.bfloat16, ring_local: bool = False):
+    """PartitionSpec tree matching the cache structure."""
+    sizes = mesh_sizes(mesh)
+    ab = abstract_cache(cfg, batch, s_max, dtype, ring_local)
+
+    if cfg.n_encoder_layers:
+        ax = ("layers", "batch", "seq_kv", "kv_heads", None)
+        return jax.tree.map(
+            lambda s: resolve_axes(s.shape, ax, rules, sizes), ab)
+
+    P_len = len(cfg.pattern_period)
+    out_periods = []
+    for off, bd in enumerate(cfg.pattern_period):
+        axmap = T.cache_sharding_axes(cfg, bd)
+        ab_off = ab["periods"][off]
+        out_periods.append(jax.tree.map(
+            lambda s, a: resolve_axes(s.shape, ("layers",) + tuple(a),
+                                      rules, sizes),
+            ab_off, _match_tree(axmap, ab_off, stacked=True)))
+    out_tail = []
+    for i in range(cfg.n_tail):
+        bd = cfg.layer_types[cfg.n_periods * P_len + i]
+        axmap = T.cache_sharding_axes(cfg, bd)
+        ab_t = ab["tail"][i]
+        out_tail.append(jax.tree.map(
+            lambda s, a: resolve_axes(s.shape, tuple(a), rules, sizes),
+            ab_t, _match_tree(axmap, ab_t, stacked=False)))
+    return {"periods": out_periods, "tail": out_tail}
+
+
+def _match_tree(axmap, ab_tree, stacked: bool):
+    """Align the per-leaf logical-axes map with the abstract cache tree
+    (handles the sLSTM tuple state)."""
+    return _zip_axes(axmap, ab_tree)
+
+
+def _zip_axes(axmap, ab_tree):
+    # axmap mirrors ab_tree structure by construction (dict of names ->
+    # tuple-of-axes or tuple-of-tuples for slstm state)
+    flat_ab, treedef = jax.tree_util.tree_flatten(ab_tree)
+    flat_ax = jax.tree_util.tree_flatten(
+        axmap, is_leaf=lambda x: isinstance(x, tuple) and (
+            not x or isinstance(x[0], (str, type(None)))))[0]
+    assert len(flat_ab) == len(flat_ax), (len(flat_ab), len(flat_ax))
+    return jax.tree_util.tree_unflatten(treedef, flat_ax)
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec, rules, mesh: Mesh):
+    """(abstract inputs dict, pspecs dict) for one decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    sizes = mesh_sizes(mesh)
+    # long-context cells use the ring-buffer local cache (§Perf cell 1)
+    ring = shape.name == "long_500k"
+    cache = abstract_cache(cfg, B, S, ring_local=ring)
+    cpspecs = cache_pspecs(cfg, B, S, rules, mesh, ring_local=ring)
+    inputs = {"cache": cache, "token": _tok(B, 1),
+              "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    pspecs = {"cache": cpspecs,
+              "token": resolve_axes((B, 1), ("batch", None), rules, sizes),
+              "pos": P()}
+    if cfg.n_encoder_layers:
+        Se = _seamless.encoder_len(S)
+        inputs["cross_kv"] = jax.eval_shape(
+            lambda: {"k": jnp.zeros((cfg.n_layers, B, Se, cfg.n_kv_heads,
+                                     cfg.head_dim), jnp.bfloat16),
+                     "v": jnp.zeros((cfg.n_layers, B, Se, cfg.n_kv_heads,
+                                     cfg.head_dim), jnp.bfloat16)})
+        ckv_ax = ("layers", "batch", None, "kv_heads", None)
+        pspecs["cross_kv"] = jax.tree.map(
+            lambda s: resolve_axes(s.shape, ckv_ax, rules, sizes),
+            inputs["cross_kv"])
+    return inputs, pspecs

@@ -1,0 +1,56 @@
+"""Training entry point.
+
+Single-host CPU execution uses reduced configs (full configs are exercised
+by the dry-run); on a real TPU fleet the same step functions run under
+`use_sharding(make_production_mesh(), train_rules(...))` — see dryrun.py
+for exactly how the production shardings are attached.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+import argparse
+import dataclasses
+
+from repro import configs as C
+from repro.configs.base import TrainConfig
+from repro.distributed.fault import run_with_restarts
+from repro.train.loop import train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (pod-scale) config instead of the "
+                         "reduced CPU config")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = (C.get_config(args.arch) if args.full_config
+           else dataclasses.replace(C.reduced_config(args.arch),
+                                    compute_dtype="float32"))
+    tcfg = TrainConfig(learning_rate=args.lr, accum_steps=args.accum,
+                       checkpoint_every=25)
+
+    def make_runner():
+        def run():
+            _, hist = train_lm(cfg, tcfg, num_steps=args.steps,
+                               batch=args.batch, seq=args.seq,
+                               ckpt_dir=args.ckpt_dir, log=print)
+            print(f"final loss: {hist[-1]['loss']:.4f}")
+            return 0
+        return run
+
+    return run_with_restarts(make_runner, max_restarts=args.max_restarts,
+                             on_restart=lambda a, e: print(
+                                 f"[restart {a}] {type(e).__name__}: {e}"))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,304 @@
+"""GQA attention: global (causal) and local (sliding-window), for train /
+prefill / decode, memory-safe at 32k+ sequence lengths.
+
+Streaming adaptation of the paper (DESIGN.md §2): queries are processed in
+chunks that stream through on-chip memory while the KV working set is sliced
+per chunk — the sequence-axis analogue of the paper's image decomposition.
+The sliding window of local attention is a fixed-size halo, exactly like the
+column buffer's 2-row overlap.
+
+The XLA-native path here (`attend_chunked`) uses q-chunking + per-chunk remat
+so peak memory is O(chunk_q * T) instead of O(S * T); the Pallas
+`flash_attention` kernel (kernels/flash_attention) is the TPU fast path and
+is numerically validated against the same reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.module import ParamDef
+from repro.models.layers import apply_rope, apply_mrope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H, hd), jnp.float32, ("embed", "heads", None)),
+        "wk": ParamDef((d, KV, hd), jnp.float32, ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, KV, hd), jnp.float32, ("embed", "kv_heads", None)),
+        "wo": ParamDef((H, hd, d), jnp.float32, ("heads", None, "embed")),
+    }
+    if cfg.use_bias:
+        defs["bq"] = ParamDef((H, hd), jnp.float32, ("heads", None), init="zeros")
+        defs["bk"] = ParamDef((KV, hd), jnp.float32, ("kv_heads", None), init="zeros")
+        defs["bv"] = ParamDef((KV, hd), jnp.float32, ("kv_heads", None), init="zeros")
+        defs["bo"] = ParamDef((d,), jnp.float32, ("embed",), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), jnp.float32, (None,), init="zeros")
+        defs["k_norm"] = ParamDef((hd,), jnp.float32, (None,), init="zeros")
+    return defs
+
+
+def _head_rmsnorm(scale, x, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * (1.0 + scale)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math. All functions take
+#   q: (B, S, H, D)   k, v: (B, T, KV, D)  with H = KV * G
+# and return (B, S, H, D). Softmax in fp32.
+# ---------------------------------------------------------------------------
+
+def _safe_softmax(s: jax.Array, mask: jax.Array) -> jax.Array:
+    """Softmax that returns zeros (not NaN) for fully-masked rows."""
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - jnp.maximum(m, NEG_INF / 2)) * mask
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def _attend_dense(q, k, v, q_pos, kv_pos, window: int, kv_len=None,
+                  causal: bool = True):
+    """Unchunked masked attention. q_pos (..., S) / kv_pos (..., T) absolute.
+
+    FLOPs-exact oracle for every other path; used directly for decode
+    (S == 1) and small shapes.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    if causal:
+        mask = (kv_pos[None, None, None, None, :]
+                <= q_pos[None, None, None, :, None])
+    else:
+        mask = jnp.ones((1, 1, 1, S, k.shape[1]), bool)
+    if window > 0:
+        mask &= kv_pos[None, None, None, None, :] > (
+            q_pos[None, None, None, :, None] - window)
+    if kv_len is not None:  # decode: only the filled prefix of the cache
+        mask &= (kv_pos < kv_len)[None, None, None, None, :]
+    p = _safe_softmax(s, mask).astype(v.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+    return out.reshape(B, S, H, D)
+
+
+def _pick_chunk(B, KV, G, T, budget_bytes=256 * 1024 * 1024, cap=512):
+    """Largest power-of-two q-chunk whose fp32 score block fits the budget.
+
+    Sized against PER-DEVICE shapes: under an active sharding ctx the batch
+    is divided by the DP extent and heads by the TP extent, otherwise the
+    chunk ends up ~dp*tp times too small — and since the per-chunk psums of
+    dK/dV are chunk-count-many, tiny chunks multiply collective bytes
+    (observed 807 GB/step on qwen3-moe before this fix)."""
+    from repro.distributed.sharding import active
+    from repro.models.module import resolve_axes
+    ctx = active()
+    if ctx is not None:
+        sizes = ctx.mesh_sizes
+        spec = resolve_axes((B, KV * G), ("batch", "heads"), ctx.rules, sizes)
+        for i, dim in enumerate(spec):
+            if dim is None:
+                continue
+            axes = (dim,) if isinstance(dim, str) else dim
+            ext = 1
+            for a in axes:
+                ext *= sizes[a]
+            if i == 0:
+                B = max(1, B // ext)
+            else:
+                KV, G = max(1, KV), max(1, (KV * G // ext) // max(KV, 1))
+                G = max(1, G)
+    c = cap
+    while c > 16 and B * KV * G * c * T * 4 > budget_bytes:
+        c //= 2
+    return c
+
+
+def attend_chunked(q, k, v, *, window: int = 0, q_offset=0,
+                   chunk_q: Optional[int] = None, causal: bool = True):
+    """Causal (optionally sliding-window) attention, chunked over queries.
+
+    - global: each q-chunk attends to the full K/V (masked) — memory
+      O(chunk * T), FLOPs S*T (the causal half-waste is visible in the
+      roofline and attacked by the Pallas flash kernel).
+    - local (window > 0): each q-chunk attends to a *sliced* K/V halo of
+      length window + chunk — memory AND FLOPs O(S * (window + chunk)).
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if chunk_q is None:
+        chunk_q = _pick_chunk(B, KV, G, T)
+    if S <= chunk_q:
+        q_pos = q_offset + jnp.arange(S)
+        return _attend_dense(q, k, v, q_pos, jnp.arange(T), window,
+                             causal=causal)
+    n = -(-S // chunk_q)
+    pad = n * chunk_q - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+
+    local = causal and window > 0 and (window + chunk_q) < T
+    span = window + chunk_q if local else T
+
+    def chunk_fn(i):
+        qs = lax.dynamic_slice_in_dim(qp, i * chunk_q, chunk_q, axis=1)
+        q_pos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+        if local:
+            start = jnp.clip(i * chunk_q + q_offset - window, 0, T - span)
+            ks = lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kv_pos = start + jnp.arange(span)
+        else:
+            ks, vs, kv_pos = k, v, jnp.arange(T)
+        return _attend_dense(qs, ks, vs, q_pos, kv_pos, window, causal=causal)
+
+    out = lax.map(jax.checkpoint(chunk_fn), jnp.arange(n))   # (n, B, c, H, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n * chunk_q, H, D)
+    return out[:, :S]
+
+
+def attend_chunked_unrolled(q, k, v, *, window: int = 0, q_offset=0,
+                            chunk_q: int = 1024):
+    """Python-loop (no lax.map) variant: identical math, fully visible to
+    cost_analysis (no while-loop undercount). Used by the roofline's
+    segmented cost compiles for *local* attention, where chunking changes
+    the FLOP count vs. a dense mask."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    if S <= chunk_q or window == 0 or (window + chunk_q) >= T:
+        q_pos = q_offset + jnp.arange(S)
+        return _attend_dense(q, k, v, q_pos, jnp.arange(T), window)
+    assert S % chunk_q == 0, (S, chunk_q)
+    span = window + chunk_q
+    outs = []
+    for i in range(S // chunk_q):
+        qs = q[:, i * chunk_q:(i + 1) * chunk_q]
+        start = int(max(0, min(i * chunk_q + q_offset - window, T - span)))
+        ks = k[:, start:start + span]
+        vs = v[:, start:start + span]
+        q_pos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+        outs.append(_attend_dense(qs, ks, vs, q_pos, start + jnp.arange(span),
+                                  window))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block: projections + rope + attend + output proj, with
+# KV-cache plumbing for decode.
+# ---------------------------------------------------------------------------
+
+def apply_attention(cfg: ModelConfig, p, x: jax.Array, *,
+                    positions: jax.Array,
+                    window: int = 0,
+                    cache: Optional[dict] = None,
+                    cache_pos=None,
+                    kv_override: Optional[tuple] = None,
+                    causal: bool = True,
+                    cost_mode: bool = False):
+    """x: (B, S, E). Returns (out, new_cache_kv_or_None).
+
+    - train/prefill: cache=None; pass cache_pos=None. Returns k,v for
+      cache building when ``return_kv`` semantics are needed (prefill uses
+      the returned dict).
+    - decode: S == 1; ``cache`` holds k/v (B, S_max, KV, D); ``cache_pos``
+      is the write index (scalar int32). Attention is masked to
+      kv_pos <= cache_pos (and the window for local layers).
+    - kv_override: (k, v, kv_positions) for cross-attention.
+    """
+    B, S, E = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    if kv_override is None:
+        k = jnp.einsum("bse,ekd->bskd", x, p["wk"].astype(dt))
+        v = jnp.einsum("bse,ekd->bskd", x, p["wv"].astype(dt))
+    else:
+        k, v, kv_positions = kv_override
+    if cfg.use_bias:
+        q = q + p["bq"].astype(dt)
+        if kv_override is None:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = _head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        if kv_override is None:
+            k = _head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    # rope on q and k (self-attention only; cross-attention is position-free)
+    if kv_override is None:
+        if cfg.rope_variant == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        elif cfg.rope_variant == "mrope":
+            q = apply_mrope(q, positions, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "act_heads", None)
+    if kv_override is None and cache is None:
+        # pin K/V to seq-replicated here: under sequence-parallel residuals
+        # the all-gather then happens ONCE per layer instead of being sunk
+        # into the q-chunk loop (observed 128x collective inflation).
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+
+    new_kv = None
+    if cache is not None:
+        T = cache["k"].shape[1]
+        ring = window > 0 and T == window  # ring-buffer local cache
+        write_at = (cache_pos % T) if ring else cache_pos
+        # decode: write this step's k/v into the cache, attend over prefix
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                             write_at, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                             write_at, axis=1)
+        ck = constrain(ck, "batch", "seq_kv", None, None)
+        cv = constrain(cv, "batch", "seq_kv", None, None)
+        new_kv = {"k": ck, "v": cv}
+        q_pos = jnp.full((S,), cache_pos, dtype=jnp.int32) + jnp.arange(S)
+        if ring:
+            # slot i holds absolute position pos - ((pos - i) mod W);
+            # not-yet-written slots (negative) are pushed past q_pos so the
+            # causal mask kills them.
+            slots = jnp.arange(T)
+            kv_pos = cache_pos - ((cache_pos - slots) % T)
+            kv_pos = jnp.where(kv_pos < 0, cache_pos + 1, kv_pos)
+            out = _attend_dense(q, ck, cv, q_pos, kv_pos, 0)
+        else:
+            out = _attend_dense(q, ck, cv, q_pos, jnp.arange(T), window,
+                                kv_len=cache_pos + S)
+    elif kv_override is not None:
+        # cross attention: bidirectional over the encoder sequence
+        T = k.shape[1]
+        out = _attend_dense(q, k, v, jnp.arange(S), jnp.arange(T), 0,
+                            causal=False)
+    else:
+        if cost_mode:
+            out = attend_chunked_unrolled(q, k, v, window=window) if causal \
+                else _attend_dense(q, k, v, jnp.arange(S), jnp.arange(S), 0,
+                                   causal=False)
+        else:
+            out = attend_chunked(q, k, v, window=window, causal=causal)
+        new_kv = {"k": k, "v": v}
+
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    if cfg.use_bias:
+        out = out + p["bo"].astype(dt)
+    out = constrain(out, "batch", "act_seq", "act_embed")
+    return out, new_kv

@@ -1,0 +1,88 @@
+"""Conv nets on the streaming substrate — the paper's own domain.
+
+AlexNet CONV stack (paper Table 1) + a small trainable classifier used by
+the end-to-end CNN training example and the FPGA-demo-analogue (tiled
+streaming inference over large images).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decomposition import ALEXNET_LAYERS, ConvLayer
+from repro.core.streaming import conv2d_direct, maxpool_direct
+from repro.models.module import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    layers: tuple[ConvLayer, ...]
+    num_classes: int = 10
+    head_hidden: int = 256
+
+
+# AlexNet with its POOL layers attached (pool after conv1, conv2, conv5)
+ALEXNET_WITH_POOL = (
+    dataclasses.replace(ALEXNET_LAYERS[0], pool=3, pool_stride=2),
+    dataclasses.replace(ALEXNET_LAYERS[1], pool=3, pool_stride=2),
+    ALEXNET_LAYERS[2],
+    ALEXNET_LAYERS[3],
+    dataclasses.replace(ALEXNET_LAYERS[4], pool=3, pool_stride=2),
+)
+
+
+def alexnet_config(num_classes: int = 1000) -> CNNConfig:
+    return CNNConfig("alexnet", ALEXNET_WITH_POOL, num_classes)
+
+
+def tiny_cnn_config(num_classes: int = 10) -> CNNConfig:
+    """CPU-trainable CNN (same structure family, CIFAR scale)."""
+    return CNNConfig("tiny_cnn", (
+        ConvLayer("c1", 32, 32, 3, 16, 3, pad=1, pool=2),
+        ConvLayer("c2", 16, 16, 16, 32, 3, pad=1, pool=2),
+        ConvLayer("c3", 8, 8, 32, 64, 3, pad=1, pool=2),
+    ), num_classes, head_hidden=128)
+
+
+def cnn_defs(cfg: CNNConfig):
+    defs = {}
+    for l in cfg.layers:
+        defs[l.name] = {
+            "w": ParamDef((l.kernel, l.kernel, l.in_c // l.groups, l.out_c),
+                          jnp.float32, (None, None, None, "mlp")),
+            "b": ParamDef((l.out_c,), jnp.float32, ("mlp",), init="zeros"),
+        }
+    last = cfg.layers[-1]
+    feat = last.pooled_h * last.pooled_w * last.out_c
+    defs["head"] = {
+        "w1": ParamDef((feat, cfg.head_hidden), jnp.float32, (None, "mlp")),
+        "b1": ParamDef((cfg.head_hidden,), jnp.float32, ("mlp",), init="zeros"),
+        "w2": ParamDef((cfg.head_hidden, cfg.num_classes), jnp.float32,
+                       ("mlp", None)),
+        "b2": ParamDef((cfg.num_classes,), jnp.float32, (None,), init="zeros"),
+    }
+    return defs
+
+
+def apply_cnn(cfg: CNNConfig, params, x: jax.Array,
+              conv_fn=None) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    for l in cfg.layers:
+        p = params[l.name]
+        if conv_fn is None:
+            y = conv2d_direct(x, p["w"].astype(x.dtype), l.stride, l.pad,
+                              l.groups)
+        else:
+            y = conv_fn(l, x, p["w"].astype(x.dtype))
+        y = y + p["b"].astype(x.dtype)
+        x = jnp.maximum(y, 0)
+        if l.pool > 1:
+            x = maxpool_direct(x, l.pool, l.pool_stride or l.pool)
+    h = x.reshape(x.shape[0], -1)
+    p = params["head"]
+    h = jnp.maximum(h @ p["w1"].astype(h.dtype) + p["b1"].astype(h.dtype), 0)
+    return h @ p["w2"].astype(h.dtype) + p["b2"].astype(h.dtype)

@@ -1,0 +1,148 @@
+"""Encoder-decoder model (seamless-m4t-medium backbone).
+
+The audio frontend is a stub per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, E) — the speech encoder conformer
+stack is represented by the transformer encoder layers only. Decoder =
+causal self-attention + cross-attention + MLP per layer, scanned.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.attention import apply_attention, attention_defs
+from repro.models.module import ParamDef, stack_defs
+
+
+def _enc_block_defs(cfg: ModelConfig):
+    return {"norm1": L.rmsnorm_defs(cfg.d_model),
+            "attn": attention_defs(cfg),
+            "norm2": L.rmsnorm_defs(cfg.d_model),
+            "ffn": L.mlp_defs(cfg)}
+
+
+def _dec_block_defs(cfg: ModelConfig):
+    return {"norm1": L.rmsnorm_defs(cfg.d_model),
+            "self_attn": attention_defs(cfg),
+            "norm_x": L.rmsnorm_defs(cfg.d_model),
+            "cross_attn": attention_defs(cfg),
+            "norm2": L.rmsnorm_defs(cfg.d_model),
+            "ffn": L.mlp_defs(cfg)}
+
+
+def encdec_defs(cfg: ModelConfig):
+    n_enc, n_dec = cfg.n_encoder_layers, cfg.n_layers
+    return {
+        "embed": L.embedding_defs(cfg),
+        "enc_in_proj": {"w": ParamDef((cfg.d_model, cfg.d_model), jnp.float32,
+                                      ("embed", None))},
+        "encoder": stack_defs(_enc_block_defs(cfg), n_enc, "layers"),
+        "enc_final_norm": L.rmsnorm_defs(cfg.d_model),
+        "decoder": stack_defs(_dec_block_defs(cfg), n_dec, "layers"),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+    }
+
+
+def apply_encoder(cfg: ModelConfig, params, frames: jax.Array,
+                  remat: bool = False, cost_mode: bool = False):
+    """frames: (B, S_enc, E) precomputed embeddings -> (B, S_enc, E)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dt) @ params["enc_in_proj"]["w"].astype(dt)
+    x = constrain(x, "batch", "act_seq", "act_embed")
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, p):
+        h = L.apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, _ = apply_attention(cfg, p["attn"], h, positions=positions,
+                                 causal=False, cost_mode=cost_mode)
+        x = x + out
+        h = L.apply_rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(cfg, p["ffn"], h)
+        return constrain(x, "batch", "act_seq", "act_embed"), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(fn, x, params["encoder"])
+    return L.apply_rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def compute_cross_kv(cfg: ModelConfig, params, enc_out: jax.Array):
+    """Per-decoder-layer cross K/V, stacked (n_dec, B, S_enc, KV, hd)."""
+    dt = enc_out.dtype
+
+    def per_layer(p):
+        k = jnp.einsum("bse,ekd->bskd", enc_out, p["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bse,ekd->bskd", enc_out, p["cross_attn"]["wv"].astype(dt))
+        if cfg.use_bias:
+            k = k + p["cross_attn"]["bk"].astype(dt)
+            v = v + p["cross_attn"]["bv"].astype(dt)
+        return {"k": k, "v": v}
+
+    return jax.vmap(per_layer)(params["decoder"])
+
+
+def apply_decoder(cfg: ModelConfig, params, tokens: jax.Array,
+                  cross_kv, *, cache=None, cache_pos=None,
+                  collect_cache: bool = False, remat: bool = False,
+                  cost_mode: bool = False, logits_slice_last: bool = False):
+    """tokens (B, S_dec); cross_kv stacked per decoder layer.
+
+    cache (decode): {"k","v"} stacked (n_dec, B, S_max, KV, hd)."""
+    B, S = tokens.shape
+    x = L.embed_tokens(cfg, params["embed"], tokens,
+                       dtype=jnp.dtype(cfg.compute_dtype))
+    decode = cache is not None and cache_pos is not None
+    if decode:
+        positions = jnp.arange(S, dtype=jnp.int32) + cache_pos
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    want_cache = decode or collect_cache
+
+    def body(x, xs):
+        p, ckv, c = xs
+        h = L.apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, new_kv = apply_attention(
+            cfg, p["self_attn"], h, positions=positions, cache=c,
+            cache_pos=cache_pos if decode else None, cost_mode=cost_mode)
+        x = x + out
+        h = L.apply_rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        out, _ = apply_attention(
+            cfg, p["cross_attn"], h, positions=positions,
+            kv_override=(ckv["k"].astype(x.dtype), ckv["v"].astype(x.dtype),
+                         None),
+            cost_mode=cost_mode)
+        x = x + out
+        h = L.apply_rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(cfg, p["ffn"], h)
+        x = constrain(x, "batch", "act_seq", "act_embed")
+        return x, (new_kv if want_cache else None)
+
+    fn = jax.checkpoint(body) if remat else body
+    x, new_kv = lax.scan(fn, x, (params["decoder"], cross_kv, cache))
+    x = L.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice_last:
+        x = x[:, -1:]
+    logits = L.logits_out(cfg, params["embed"], x)
+    return logits, (new_kv if want_cache else None)
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, s_max: int,
+                       dtype=jnp.bfloat16):
+    kv = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+
+
+def apply_encdec(cfg: ModelConfig, params, frames, tokens, *,
+                 remat: bool = False, cost_mode: bool = False):
+    """Full train-mode forward: encode, cross-kv, decode. Returns logits."""
+    enc = apply_encoder(cfg, params, frames, remat=remat, cost_mode=cost_mode)
+    ckv = compute_cross_kv(cfg, params, enc)
+    logits, _ = apply_decoder(cfg, params, tokens, ckv, remat=remat,
+                              cost_mode=cost_mode)
+    return logits

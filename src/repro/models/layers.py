@@ -1,0 +1,179 @@
+"""Shared neural building blocks: norms, gated MLP, RoPE/M-RoPE, embedding,
+and cross-entropy over a (possibly vocab-sharded) logits tensor.
+
+Everything is a pure function: ``*_defs(cfg)`` returns the ParamDef tree,
+``apply_*`` consumes the materialised params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.module import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int):
+    return {"scale": ParamDef((d,), jnp.float32, ("embed",), init="zeros")}
+
+
+def apply_rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) so a zeros-init is identity
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_gate": ParamDef((d, f), jnp.float32, ("embed", "mlp")),
+        "w_up": ParamDef((d, f), jnp.float32, ("embed", "mlp")),
+        "w_down": ParamDef((f, d), jnp.float32, ("mlp", "embed")),
+    }
+    if cfg.use_bias:
+        defs["b_gate"] = ParamDef((f,), jnp.float32, ("mlp",), init="zeros")
+        defs["b_up"] = ParamDef((f,), jnp.float32, ("mlp",), init="zeros")
+        defs["b_down"] = ParamDef((d,), jnp.float32, ("embed",), init="zeros")
+    return defs
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    if cfg.use_bias:
+        g = g + p["b_gate"].astype(dt)
+        u = u + p["b_up"].astype(dt)
+    h = _act(cfg.act, g) * u
+    h = constrain(h, "batch", None, "act_mlp")
+    out = h @ p["w_down"].astype(dt)
+    if cfg.use_bias:
+        out = out + p["b_down"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE) and multimodal M-RoPE (Qwen2-VL, arXiv:2409.12191)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(2, 3, 3)) -> jax.Array:
+    """M-RoPE: positions (3, ..., S) = (temporal, height, width) ids.
+
+    The head_dim/2 frequency slots are split into three interleaved sections
+    (ratio ``sections``), each rotated by its own position stream.
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    tot = sum(sections)
+    bounds = jnp.cumsum(jnp.array([s * half // tot for s in sections]))
+    slot = jnp.arange(half)
+    sec_id = jnp.sum(slot[:, None] >= bounds[None, :-1], axis=-1)  # (half,) in {0,1,2}
+    # per frequency slot, pick the position stream of its section
+    pos = jnp.moveaxis(positions.astype(jnp.float32), 0, -1)    # (..., S, 3)
+    pos = pos[..., sec_id]                                      # (..., S, half)
+    ang = pos * freqs                                           # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits (vocab-sharded via the 'vocab' logical axis)
+# ---------------------------------------------------------------------------
+
+def embedding_defs(cfg: ModelConfig):
+    return {"table": ParamDef((cfg.padded_vocab, cfg.d_model), jnp.float32,
+                              ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens: jax.Array,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    tab = p["table"].astype(dtype)
+    x = jnp.take(tab, tokens, axis=0)
+    return constrain(x, "batch", None, "act_embed") * jnp.asarray(
+        cfg.d_model ** 0.5, dtype)
+
+
+def logits_out(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """(B, S, E) -> (B, S, V_padded); vocab dim TP-sharded via constrain.
+
+    Padded vocab columns are masked to -inf so they carry no probability
+    mass (and receive no gradient)."""
+    tab = p["table"].astype(x.dtype)
+    logits = jnp.einsum("bse,ve->bsv", x, tab)
+    logits = mask_vocab_pad(cfg, logits)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def mask_vocab_pad(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < cfg.vocab_size, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy over (possibly sharded) vocab — never gathers full softmax.
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None):
+    """logits (B,S,V) fp any; labels (B,S) int32. Returns mean loss (f32).
+
+    Written so XLA keeps the vocab axis sharded: logsumexp reduces the
+    sharded axis to partial sums + a small all-reduce, and the label pick is
+    an iota-compare masked sum (fuses; no one-hot materialisation).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,163 @@
+"""Minimal param-tree infrastructure.
+
+Models are pure functions over pytrees of arrays. Each model declares its
+parameters once as a tree of :class:`ParamDef` (shape + dtype + *logical*
+sharding axes + init rule); from that single declaration we derive
+  - materialised random params        (``init_params``)
+  - ShapeDtypeStruct stand-ins        (``abstract_params``) for the dry-run
+  - PartitionSpecs via a rules table  (``param_pspecs``)
+so the three can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: tuple[Optional[str], ...] = ()   # logical axis name per dim (None = replicated)
+    init: str = "normal"                   # normal | zeros | ones | embed
+    scale: Optional[float] = None          # stddev override; default fan-in
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+        if not self.axes:
+            object.__setattr__(self, "axes", (None,) * len(self.shape))
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(tree, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacking dim of size n (for scan-over-layers params)."""
+    def f(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(
+            d, shape=(n,) + d.shape, axes=(axis_name,) + d.axes)
+    return jax.tree.map(f, tree, is_leaf=is_def)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _fold_path(key: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "big")
+    return jax.random.fold_in(key, h)
+
+
+def _fan_in(d: ParamDef) -> int:
+    if len(d.shape) <= 1:
+        return max(d.shape[-1] if d.shape else 1, 1)
+    # all but last dim (output features conventionally last)
+    fan = 1
+    for s in d.shape[:-1]:
+        fan *= s
+    return max(fan, 1)
+
+
+def init_leaf(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 1.0
+        return (std * jax.random.normal(key, d.shape)).astype(d.dtype)
+    std = d.scale if d.scale is not None else _fan_in(d) ** -0.5
+    return (std * jax.random.normal(key, d.shape)).astype(d.dtype)
+
+
+def init_params(tree, key: jax.Array):
+    """Materialise random params, deterministically keyed by tree path."""
+    def f(path, d: ParamDef):
+        return init_leaf(d, _fold_path(key, _path_str(path)))
+    return jax.tree_util.tree_map_with_path(f, tree, is_leaf=is_def)
+
+
+def abstract_params(tree):
+    """ShapeDtypeStruct stand-ins (no allocation) for .lower()."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        tree, is_leaf=is_def)
+
+
+def cast_tree(tree, dtype):
+    def f(x):
+        return x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+    return jax.tree.map(f, tree)
+
+
+def param_count(tree) -> int:
+    import math
+    sizes = jax.tree.leaves(jax.tree.map(
+        lambda d: math.prod(d.shape), tree, is_leaf=is_def))
+    return int(sum(sizes))
+
+
+def param_bytes(tree) -> int:
+    import math
+    sizes = jax.tree.leaves(jax.tree.map(
+        lambda d: math.prod(d.shape) * jnp.dtype(d.dtype).itemsize,
+        tree, is_leaf=is_def))
+    return int(sum(sizes))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules
+# ---------------------------------------------------------------------------
+
+def resolve_axes(dim_sizes: tuple[int, ...],
+                 axes: tuple[Optional[str], ...],
+                 rules: dict[str, Any],
+                 mesh_sizes: Optional[dict[str, int]] = None) -> P:
+    """PartitionSpec for one array given logical axes + rules.
+
+    Rules map logical axis name -> mesh axis (str) or tuple of mesh axes.
+    A mesh axis is used at most once per spec, and is only applied when the
+    dimension size is divisible by (the product of) its mesh extent — this is
+    what lets kv_heads=4 silently replicate on a 16-way 'model' axis while
+    q heads shard.
+    """
+    spec = []
+    used: set[str] = set()
+    for size, ax in zip(dim_sizes, axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            spec.append(None)
+            continue
+        flat = (m,) if isinstance(m, str) else tuple(m)
+        flat = tuple(a for a in flat if a not in used)
+        # keep the longest prefix whose product divides the dim size
+        if mesh_sizes is not None:
+            kept = []
+            prod = 1
+            for a in flat:
+                prod *= mesh_sizes.get(a, 1)
+                if size % prod == 0:
+                    kept.append(a)
+                else:
+                    break
+            flat = tuple(kept)
+        used.update(flat)
+        spec.append(None if not flat else
+                    (flat[0] if len(flat) == 1 else flat))
+    return P(*spec)
+
+
+def param_pspecs(tree, rules: dict[str, Any],
+                 mesh_sizes: Optional[dict[str, int]] = None):
+    """PartitionSpec tree from ParamDef logical axes via a rules table."""
+    def f(d: ParamDef) -> P:
+        return resolve_axes(d.shape, d.axes, rules, mesh_sizes)
+    return jax.tree.map(f, tree, is_leaf=is_def)

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+TPU-native adaptation notes (DESIGN.md §4): the temporal width-4 causal
+conv1d is a 1-D line buffer — the paper's row-buffer streaming pattern on the
+time axis (decode carries a (W-1)-sample state exactly like the column
+buffer's halo rows). The diagonal linear recurrence is computed with
+``lax.associative_scan`` (log-depth, parallel) for train/prefill and as a
+single fused update for decode.
+
+Deviation from the published model (documented): gate projections W_a / W_x
+are dense rather than block-diagonal.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.module import ParamDef
+
+_C = 8.0  # RG-LRU recurrence-gate exponent constant (Griffin eq. 4)
+
+
+def rglru_defs(cfg: ModelConfig):
+    assert cfg.recurrent is not None
+    d, dr, w = cfg.d_model, cfg.recurrent.d_rnn, cfg.recurrent.conv_width
+    return {
+        # branch projections
+        "w_gate_in": ParamDef((d, dr), jnp.float32, ("embed", "rnn")),
+        "w_rnn_in": ParamDef((d, dr), jnp.float32, ("embed", "rnn")),
+        "w_out": ParamDef((dr, d), jnp.float32, ("rnn", "embed")),
+        # temporal conv (depthwise, causal)
+        "conv_w": ParamDef((w, dr), jnp.float32, (None, "rnn")),
+        "conv_b": ParamDef((dr,), jnp.float32, ("rnn",), init="zeros"),
+        # RG-LRU gates + decay
+        "w_a": ParamDef((dr, dr), jnp.float32, ("rnn", "rnn")),
+        "b_a": ParamDef((dr,), jnp.float32, ("rnn",), init="zeros"),
+        "w_x": ParamDef((dr, dr), jnp.float32, ("rnn", "rnn")),
+        "b_x": ParamDef((dr,), jnp.float32, ("rnn",), init="zeros"),
+        "lam": ParamDef((dr,), jnp.float32, ("rnn",), init="ones"),
+    }
+
+
+def causal_conv1d(w, b, x: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (B,S,D), w (W,D). state (B,W-1,D) for decode.
+
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, j:j + S] * w[j].astype(x.dtype) for j in range(W))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else xp[:, :0]
+    return y, new_state
+
+
+def _rglru_coeffs(p, x: jax.Array):
+    """Per-step decay a_t and input b_t (both fp32). x (B,S,Dr)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,Dr) <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * xf)
+    return a, b
+
+
+def rglru_scan(p, x: jax.Array, h0: Optional[jax.Array] = None):
+    """Parallel (associative-scan) RG-LRU. x (B,S,Dr) -> (y, h_last)."""
+    a, b = _rglru_coeffs(p, x)
+    if h0 is not None:
+        # fold h0 into the first step's b: h1 = a1*h0 + b1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(comb, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x: jax.Array, h0: jax.Array):
+    """Single decode step. x (B,1,Dr), h0 (B,Dr) fp32."""
+    a, b = _rglru_coeffs(p, x)
+    h = a[:, 0] * h0 + b[:, 0]
+    return h[:, None].astype(x.dtype), h
+
+
+def apply_rglru_block(cfg: ModelConfig, p, x: jax.Array, *,
+                      cache: Optional[dict] = None):
+    """Griffin recurrent block: (gelu gate) * (conv1d -> RG-LRU), out proj.
+
+    cache (decode): {"conv": (B,W-1,Dr), "h": (B,Dr) fp32}.
+    Returns (out, new_cache)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_in"].astype(dt))
+    u = x @ p["w_rnn_in"].astype(dt)
+    u = constrain(u, "batch", None, "rnn")
+    if cache is None:
+        c, conv_state = causal_conv1d(p["conv_w"], p["conv_b"], u)
+        y, h_last = rglru_scan(p, c)
+    else:
+        c, conv_state = causal_conv1d(p["conv_w"], p["conv_b"], u,
+                                      state=cache["conv"])
+        y, h_last = rglru_step(p, c, cache["h"])
+    out = (gate * y) @ p["w_out"].astype(dt)
+    out = constrain(out, "batch", "act_seq", "act_embed")
+    return out, {"conv": conv_state.astype(dt), "h": h_last}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    dr, w = cfg.recurrent.d_rnn, cfg.recurrent.conv_width
+    return {"conv": jnp.zeros((batch, w - 1, dr), dtype),
+            "h": jnp.zeros((batch, dr), jnp.float32)}

@@ -1,0 +1,287 @@
+"""Decoder-only LM assembly: period-scanned mixed layer stacks.
+
+Layer patterns (gemma3's 5 local : 1 global, Griffin's 2 recurrent : 1
+local, xLSTM's mLSTM/sLSTM alternation) are expressed as a *pattern period*
+of BlockDefs. The stack is lax.scan'ed over whole periods (params stacked
+per period-offset) with an unrolled tail — one compiled body per period
+keeps HLO compact for 88-94-layer models while preserving the exact layer
+order.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, FFN_DENSE, FFN_MOE,
+                                FFN_NONE, MLSTM, RGLRU, SLSTM, BlockDef,
+                                ModelConfig)
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models import xlstm as X
+from repro.models.attention import apply_attention, attention_defs
+from repro.models.module import ParamDef, stack_defs
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig, bd: BlockDef):
+    defs = {"norm1": L.rmsnorm_defs(cfg.d_model)}
+    if bd.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        defs["mixer"] = attention_defs(cfg)
+    elif bd.mixer == RGLRU:
+        defs["mixer"] = R.rglru_defs(cfg)
+    elif bd.mixer == MLSTM:
+        defs["mixer"] = X.mlstm_defs(cfg)
+    elif bd.mixer == SLSTM:
+        defs["mixer"] = X.slstm_defs(cfg)
+    else:
+        raise ValueError(bd.mixer)
+    if bd.ffn == FFN_DENSE:
+        defs["norm2"] = L.rmsnorm_defs(cfg.d_model)
+        defs["ffn"] = L.mlp_defs(cfg)
+    elif bd.ffn == FFN_MOE:
+        defs["norm2"] = L.rmsnorm_defs(cfg.d_model)
+        defs["ffn"] = M.moe_defs(cfg)
+    return defs
+
+
+def apply_block(cfg: ModelConfig, bd: BlockDef, p, x, *,
+                positions, cache=None, cache_pos=None, cost_mode=False):
+    """Pre-norm residual block. Returns (x, new_cache, aux_scalars)."""
+    aux = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+           "moe_drop_frac": jnp.zeros((), jnp.float32)}
+    h = L.apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if bd.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = cfg.window_size if bd.mixer == ATTN_LOCAL else 0
+        out, new_cache = apply_attention(
+            cfg, p["mixer"], h, positions=positions, window=window,
+            cache=cache, cache_pos=cache_pos, cost_mode=cost_mode)
+    elif bd.mixer == RGLRU:
+        out, new_cache = R.apply_rglru_block(cfg, p["mixer"], h, cache=cache)
+    elif bd.mixer == MLSTM:
+        out, new_cache = X.apply_mlstm_block(cfg, p["mixer"], h, cache=cache,
+                                             cost_mode=cost_mode)
+    elif bd.mixer == SLSTM:
+        out, new_cache = X.apply_slstm_block(cfg, p["mixer"], h, cache=cache)
+    else:
+        raise ValueError(bd.mixer)
+    x = x + out
+    if bd.ffn != FFN_NONE:
+        h = L.apply_rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if bd.ffn == FFN_MOE:
+            out, moe_aux = M.apply_moe(cfg, p["ffn"], h, cost_mode=cost_mode)
+            aux = {k: aux[k] + moe_aux[k] for k in aux}
+        else:
+            out = L.apply_mlp(cfg, p["ffn"], h)
+        x = x + out
+    x = constrain(x, "batch", "act_seq", "act_embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, bd: BlockDef, batch: int, s_max: int,
+                 dtype=jnp.bfloat16, ring_local: bool = False):
+    if bd.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        s = s_max
+        if (ring_local and bd.mixer == ATTN_LOCAL and cfg.window_size
+                and cfg.window_size < s_max):
+            # ring buffer: a local layer never needs more than its window
+            # (the paper's fixed-size row buffer, on the time axis)
+            s = cfg.window_size
+        kv = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    if bd.mixer == RGLRU:
+        return R.init_rglru_cache(cfg, batch, dtype)
+    if bd.mixer == MLSTM:
+        return X.init_mlstm_cache(cfg, batch, dtype)
+    if bd.mixer == SLSTM:
+        return X.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(bd.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16,
+               ring_local: bool = False):
+    """Stacked-by-period cache pytree matching lm param layout."""
+    P = len(cfg.pattern_period)
+    periods = []
+    for off, bd in enumerate(cfg.pattern_period):
+        one = _block_cache(cfg, bd, batch, s_max, dtype, ring_local)
+        periods.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy()
+            if cfg.n_periods else a, one))
+    tail = [_block_cache(cfg, cfg.layer_types[cfg.n_periods * P + i], batch,
+                         s_max, dtype, ring_local)
+            for i in range(cfg.n_tail)]
+    return {"periods": periods, "tail": tail}
+
+
+def cache_sharding_axes(cfg: ModelConfig, bd: BlockDef):
+    """Logical axes per cache leaf (for in_shardings of decode steps)."""
+    if bd.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        ax = ("batch", "seq_kv", "kv_heads", None)
+        return {"k": ax, "v": ax}
+    if bd.mixer == RGLRU:
+        return {"conv": ("batch", None, "rnn"), "h": ("batch", "rnn")}
+    if bd.mixer == MLSTM:
+        return {"conv": ("batch", None, "mlp"),
+                "C": ("batch", "heads", None, None),
+                "n": ("batch", "heads", None), "m": ("batch", "heads")}
+    if bd.mixer == SLSTM:
+        return {"state": tuple(("batch", "rnn") for _ in range(4))}
+    raise ValueError(bd.mixer)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+def lm_defs(cfg: ModelConfig):
+    P = len(cfg.pattern_period)
+    defs = {
+        "embed": L.embedding_defs(cfg),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+        "periods": [stack_defs(block_defs(cfg, bd), cfg.n_periods, "layers")
+                    for bd in cfg.pattern_period] if cfg.n_periods else [],
+        "tail": [block_defs(cfg, cfg.layer_types[cfg.n_periods * P + i])
+                 for i in range(cfg.n_tail)],
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = {"w": ParamDef((cfg.d_model, cfg.padded_vocab),
+                                         jnp.float32, ("embed", "vocab"))}
+    return defs
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    from repro.models.module import param_count as pc
+    if cfg.n_encoder_layers:
+        from repro.models import encdec
+        return pc(encdec.encdec_defs(cfg))
+    total = pc(lm_defs(cfg))
+    if active_only and cfg.moe is not None:
+        one_moe = pc(M.moe_defs(cfg))
+        n_moe = sum(1 for bd in cfg.layer_types if bd.ffn == FFN_MOE)
+        router = cfg.d_model * cfg.moe.num_experts
+        expert_p = (one_moe - router)
+        active_expert_p = expert_p * cfg.moe.top_k // cfg.moe.num_experts
+        total -= n_moe * (expert_p - active_expert_p)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _zero_aux():
+    return {"moe_aux_loss": jnp.zeros((), jnp.float32),
+            "moe_drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def apply_lm(cfg: ModelConfig, params, tokens, *,
+             positions=None,
+             cache=None, cache_pos=None,
+             extra_embeds=None,
+             collect_cache: bool = False,
+             remat: bool = False,
+             cost_mode: bool = False,
+             logits_slice_last: bool = False):
+    """Forward pass of the decoder-only LM.
+
+    tokens: (B, S) int32. For decode, S is typically 1 and ``cache``/
+    ``cache_pos`` are set. ``extra_embeds`` (B, N, E) optionally overrides
+    the first N token embeddings (VLM/audio stub frontends).
+    Returns (logits, new_cache_or_None, aux).
+    """
+    P = len(cfg.pattern_period)
+    B, S = tokens.shape
+    x = L.embed_tokens(cfg, params["embed"], tokens,
+                       dtype=jnp.dtype(cfg.compute_dtype))
+    if extra_embeds is not None:
+        n = extra_embeds.shape[1]
+        pos_mask = (jnp.arange(S) < n)[None, :, None]
+        pad = jnp.zeros((B, S - n, x.shape[-1]), x.dtype)
+        x = jnp.where(pos_mask,
+                      jnp.concatenate([extra_embeds.astype(x.dtype), pad], 1),
+                      x)
+    if positions is None:
+        if cache_pos is not None:
+            base = jnp.arange(S, dtype=jnp.int32) + cache_pos
+        else:
+            base = jnp.arange(S, dtype=jnp.int32)
+        positions = (jnp.broadcast_to(base, (3, S)) if
+                     cfg.rope_variant == "mrope" else base)
+
+    decode = cache is not None and cache_pos is not None
+    want_cache = decode or collect_cache
+    aux = _zero_aux()
+
+    def run_offset(off_bd, p, x, c):
+        out_x, new_c, a = apply_block(
+            cfg, off_bd, p, x, positions=positions,
+            cache=c, cache_pos=cache_pos if decode else None,
+            cost_mode=cost_mode)
+        if not want_cache:
+            new_c = None
+        return out_x, new_c, a
+
+    # ---- scanned periods ----
+    if cfg.n_periods:
+        period = cfg.pattern_period
+
+        def body(carry, xs):
+            x, aux = carry
+            p_slices, c_slices = xs
+            new_cs = []
+            for off, bd in enumerate(period):
+                c = None
+                if c_slices is not None:
+                    c = c_slices[off]
+                x, nc, a = run_offset(bd, p_slices[off], x, c)
+                new_cs.append(nc)
+                aux = {k: aux[k] + a[k] for k in aux}
+            ys = new_cs if want_cache else None
+            return (x, aux), ys
+
+        body_fn = jax.checkpoint(body) if remat else body
+        cache_periods = cache["periods"] if cache is not None else None
+        xs = (params["periods"], cache_periods)
+        (x, aux), ys = lax.scan(body_fn, (x, aux), xs)
+        new_periods = ys
+    else:
+        new_periods = []
+
+    # ---- tail layers (unrolled) ----
+    new_tail = []
+    for i in range(cfg.n_tail):
+        bd = cfg.layer_types[cfg.n_periods * P + i]
+        c = cache["tail"][i] if cache is not None else None
+        fn = functools.partial(run_offset, bd)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, nc, a = fn(params["tail"][i], x, c)
+        new_tail.append(nc)
+        aux = {k: aux[k] + a[k] for k in aux}
+
+    x = L.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice_last:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.logits_out(cfg, params["embed"], x)
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x,
+                            params["lm_head"]["w"].astype(x.dtype))
+        logits = constrain(L.mask_vocab_pad(cfg, logits),
+                           "batch", None, "vocab")
+    new_cache = ({"periods": new_periods, "tail": new_tail}
+                 if want_cache else None)
+    return logits, new_cache, aux

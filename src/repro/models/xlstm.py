@@ -1,0 +1,270 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (parallelisable matrix-LSTM) and
+sLSTM (strictly sequential scalar-LSTM with exponential gating).
+
+mLSTM's parallel ("attention-like") form is computed with the same q-chunk
+streaming used by attention — sequence chunks stream through on-chip memory
+with a decay matrix instead of a causal mask (the paper's streaming insight
+on the time axis). Decode uses the recurrent (C, n, m) state form, which is
+what makes xlstm-125m eligible for the 500k-token cell.
+
+Simplifications vs. the published blocks (documented in DESIGN.md):
+dense (not block-diagonal) sLSTM recurrent matrices; mLSTM block gating
+follows the paper's pre-up-projection structure with swish gating.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.module import ParamDef
+from repro.models.recurrent import causal_conv1d
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = int(d * cfg.xlstm.m_proj_factor)   # inner width
+    H = cfg.n_heads
+    hd = di // H
+    return d, di, H, hd
+
+
+def mlstm_defs(cfg: ModelConfig):
+    d, di, H, hd = _mlstm_dims(cfg)
+    w = cfg.xlstm.conv_width
+    return {
+        "w_up": ParamDef((d, di), jnp.float32, ("embed", "mlp")),
+        "w_gate": ParamDef((d, di), jnp.float32, ("embed", "mlp")),
+        "conv_w": ParamDef((w, di), jnp.float32, (None, "mlp")),
+        "conv_b": ParamDef((di,), jnp.float32, ("mlp",), init="zeros"),
+        "wq": ParamDef((di, H, hd), jnp.float32, ("mlp", "heads", None)),
+        "wk": ParamDef((di, H, hd), jnp.float32, ("mlp", "heads", None)),
+        "wv": ParamDef((di, H, hd), jnp.float32, ("mlp", "heads", None)),
+        # per-head input/forget gate projections (scalar per step per head)
+        "w_i": ParamDef((di, H), jnp.float32, ("mlp", "heads")),
+        "b_i": ParamDef((H,), jnp.float32, ("heads",), init="zeros"),
+        "w_f": ParamDef((di, H), jnp.float32, ("mlp", "heads")),
+        "b_f": ParamDef((H,), jnp.float32, ("heads",), init="ones"),
+        "out_norm": ParamDef((di,), jnp.float32, ("mlp",), init="zeros"),
+        "w_down": ParamDef((di, d), jnp.float32, ("mlp", "embed")),
+    }
+
+
+def _mlstm_parallel(q, k, v, logi, logf, chunk_q: int = 512):
+    """Stabilised parallel mLSTM.
+
+    q,k,v: (B,S,H,hd); logi, logf: (B,S,H) fp32.
+    h_t = sum_{s<=t} exp(F_t - F_s + logi_s - m_t) (q_t.k_s) v_s / norm_t
+    with F = cumsum(logf), m_t the row max, norm the stabilised denominator.
+    Computed in q-chunks (decay matrix never materialised at S x S).
+    """
+    B, S, H, hd = q.shape
+    F = jnp.cumsum(logf, axis=1)                                  # (B,S,H)
+    scale = hd ** -0.5
+
+    def chunk_fn(i):
+        cq = chunk_q
+        qs = lax.dynamic_slice_in_dim(q, i * cq, cq, 1)           # (B,cq,H,hd)
+        Fq = lax.dynamic_slice_in_dim(F, i * cq, cq, 1)           # (B,cq,H)
+        qpos = i * cq + jnp.arange(cq)
+        logits = (Fq[:, :, None, :] - F[:, None, :, :]
+                  + logi[:, None, :, :])                          # (B,cq,S,H)
+        mask = jnp.arange(S)[None, :] <= qpos[:, None]            # (cq,S)
+        logits = jnp.where(mask[None, :, :, None], logits, NEG_INF)
+        m = jnp.max(logits, axis=2, keepdims=True)                # (B,cq,1,H)
+        dmat = jnp.exp(logits - jnp.maximum(m, NEG_INF / 2))
+        s = jnp.einsum("bqhd,bthd->bqth", qs, k).astype(jnp.float32) * scale
+        w = s * dmat                                              # (B,cq,S,H)
+        norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)),
+                           jnp.exp(-m))                           # (B,cq,1,H)
+        h = jnp.einsum("bqth,bthd->bqhd", (w / norm).astype(v.dtype), v)
+        return h
+
+    if S <= chunk_q:
+        return chunk_fn(0)[:, :S] if S == chunk_q else _mlstm_small(
+            q, k, v, logi, logf)
+    n = S // chunk_q
+    assert S % chunk_q == 0, (S, chunk_q)
+    out = lax.map(jax.checkpoint(chunk_fn), jnp.arange(n))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def _mlstm_small(q, k, v, logi, logf):
+    """Unchunked oracle (small S / tests)."""
+    B, S, H, hd = q.shape
+    F = jnp.cumsum(logf, axis=1)
+    logits = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+    mask = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+    logits = jnp.where(mask[None, :, :, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=2, keepdims=True)
+    dmat = jnp.exp(logits - jnp.maximum(m, NEG_INF / 2))
+    s = jnp.einsum("bqhd,bthd->bqth", q, k).astype(jnp.float32) * (hd ** -0.5)
+    w = s * dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)), jnp.exp(-m))
+    return jnp.einsum("bqth,bthd->bqhd", (w / norm).astype(v.dtype), v)
+
+
+def _mlstm_state_from_prefill(k, v, logi, logf):
+    """Final (C, n, m) state after a prefill, for subsequent decode."""
+    B, S, H, hd = k.shape
+    F = jnp.cumsum(logf, axis=1)
+    m = jnp.max(F[:, -1:, :] - F + logi, axis=1)                  # (B,H)
+    wts = jnp.exp(F[:, -1:, :] - F + logi - m[:, None, :])        # (B,S,H)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", wts, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", wts, k.astype(jnp.float32))
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(q, k, v, logi, logf, state):
+    """Recurrent decode step. q,k,v (B,1,H,hd); returns (h, new_state)."""
+    B, _, H, hd = q.shape
+    C, n, m = state["C"], state["n"], state["m"]
+    logi1, logf1 = logi[:, 0], logf[:, 0]                          # (B,H)
+    m_new = jnp.maximum(logf1 + m, logi1)
+    fz = jnp.exp(logf1 + m - m_new)[..., None, None]
+    iz = jnp.exp(logi1 - m_new)[..., None, None]
+    k1 = k[:, 0].astype(jnp.float32)                               # (B,H,hd)
+    v1 = v[:, 0].astype(jnp.float32)
+    C = fz * C + iz * jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n = fz[..., 0] * n + iz[..., 0] * k1
+    q1 = q[:, 0].astype(jnp.float32) * (hd ** -0.5)
+    num = jnp.einsum("bhd,bhde->bhe", q1, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None]                            # (B,1,H,hd)
+    return h.astype(q.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def apply_mlstm_block(cfg: ModelConfig, p, x: jax.Array, *,
+                      cache: Optional[dict] = None,
+                      cost_mode: bool = False):
+    """Full mLSTM block. cache (decode): conv state + (C,n,m).
+
+    cost_mode: use the unchunked parallel form (identical FLOPs, no
+    while-loop — visible to cost_analysis)."""
+    d, di, H, hd = _mlstm_dims(cfg)
+    dt = x.dtype
+    u = x @ p["w_up"].astype(dt)
+    z = x @ p["w_gate"].astype(dt)
+    u = constrain(u, "batch", None, "act_mlp")
+    conv_state_in = cache["conv"] if cache is not None else None
+    c, conv_state = causal_conv1d(p["conv_w"], p["conv_b"], u,
+                                  state=conv_state_in)
+    c = jax.nn.silu(c)
+    B, S = c.shape[0], c.shape[1]
+    q = (c @ p["wq"].reshape(di, -1).astype(dt)).reshape(B, S, H, hd)
+    k = (c @ p["wk"].reshape(di, -1).astype(dt)).reshape(B, S, H, hd)
+    v = (u @ p["wv"].reshape(di, -1).astype(dt)).reshape(B, S, H, hd)
+    cf = c.astype(jnp.float32)
+    logi = cf @ p["w_i"] + p["b_i"]                                # (B,S,H)
+    logf = jax.nn.log_sigmoid(cf @ p["w_f"] + p["b_f"])
+
+    if cache is None:
+        h = _mlstm_small(q, k, v, logi, logf) if (S <= 512 or cost_mode) \
+            else _mlstm_parallel(q, k, v, logi, logf)
+        state = _mlstm_state_from_prefill(k, v, logi, logf)
+    else:
+        h, state = mlstm_step(q, k, v, logi, logf,
+                              {k_: cache[k_] for k_ in ("C", "n", "m")})
+    h = h.reshape(B, S, di)
+    # per-channel group norm then swish gate (xLSTM block structure)
+    hf = h.astype(jnp.float32)
+    hf = hf * lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + cfg.norm_eps)
+    h = (hf * (1.0 + p["out_norm"])).astype(dt)
+    h = h * jax.nn.silu(z)
+    out = h @ p["w_down"].astype(dt)
+    out = constrain(out, "batch", "act_seq", "act_embed")
+    new_cache = {"conv": conv_state.astype(dt), **state}
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d, di, H, hd = _mlstm_dims(cfg)
+    w = cfg.xlstm.conv_width
+    return {"conv": jnp.zeros((batch, w - 1, di), dtype),
+            "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), 0.0, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — strictly sequential (memory mixing), lax.scan over time.
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    df = int(d * cfg.xlstm.s_proj_factor)
+    defs = {"out_norm": ParamDef((d,), jnp.float32, ("embed",), init="zeros"),
+            "w_up": ParamDef((d, df), jnp.float32, ("embed", "mlp")),
+            "w_down": ParamDef((df, d), jnp.float32, ("mlp", "embed"))}
+    for g in ("z", "i", "f", "o"):
+        defs[f"w_{g}"] = ParamDef((d, d), jnp.float32, ("embed", "rnn"))
+        defs[f"r_{g}"] = ParamDef((d, d), jnp.float32, ("rnn", "rnn"))
+        defs[f"b_{g}"] = ParamDef((d,), jnp.float32, ("rnn",),
+                                  init="ones" if g == "f" else "zeros")
+    return defs
+
+
+def _slstm_cell(p, xw, st):
+    """One step. xw: dict of pre-computed x @ w_g (B,D). st: (c,n,h,m)."""
+    c, n, h, m = st
+    z = jnp.tanh(xw["z"] + h @ p["r_z"])
+    o = jax.nn.sigmoid(xw["o"] + h @ p["r_o"])
+    it = xw["i"] + h @ p["r_i"]                    # log-space input gate
+    ft = jax.nn.log_sigmoid(xw["f"] + h @ p["r_f"])
+    m_new = jnp.maximum(ft + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c = f_ * c + i_ * z
+    n = f_ * n + i_
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_scan(p, x: jax.Array, state=None):
+    """x (B,S,D) fp32 path. Returns (y (B,S,D), final_state)."""
+    B, S, D = x.shape
+    xf = x.astype(jnp.float32)
+    xw = {g: xf @ p[f"w_{g}"] + p[f"b_{g}"] for g in ("z", "i", "f", "o")}
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z + 1e-6, z, z)
+
+    def body(st, xs):
+        st = _slstm_cell(p, xs, st)
+        return st, st[2]
+
+    xs = {g: jnp.moveaxis(v_, 0, 1) for g, v_ in xw.items()}  # time-major
+    final, hs = lax.scan(body, state, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), final
+
+
+def apply_slstm_block(cfg: ModelConfig, p, x: jax.Array, *,
+                      cache: Optional[dict] = None):
+    """sLSTM block + small gated-free MLP (proj factor 4/3)."""
+    dt = x.dtype
+    state = cache["state"] if cache is not None else None
+    y, final = slstm_scan(p, x, state)
+    yf = y.astype(jnp.float32)
+    yf = yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+    y = (yf * (1.0 + p["out_norm"])).astype(dt)
+    h = jax.nn.gelu(y @ p["w_up"].astype(dt))
+    out = h @ p["w_down"].astype(dt)
+    out = constrain(out, "batch", "act_seq", "act_embed")
+    return out, {"state": final}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"state": (z, z + 1e-6, z, z)}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import fake_quant_grads

@@ -1,0 +1,40 @@
+"""AdamW over arbitrary param pytrees (fp32 master weights, fp32 moments)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def adamw_init(params, moment_dtype=jnp.float32):
+    z = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+
+def adamw_update(params, grads, opt_state, step, tcfg: TrainConfig):
+    """Returns (new_params, new_opt_state). step: int32 scalar (1-based)."""
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, 1e-8
+    lr, wd = tcfg.learning_rate, tcfg.weight_decay
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+        return new_p.astype(p.dtype), m.astype(mdt), v.astype(mdt)
+
+    flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t3: t3[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}

@@ -1,0 +1,409 @@
+"""Segmented roofline cost model.
+
+cost_analysis() does not multiply while-loop (lax.scan / lax.map) bodies by
+trip count, so the full-program numbers from the dry-run undercount layer
+stacks. Here each *repeated unit* (one period of blocks, the embed/head,
+the optimizer) is compiled ONCE as a standalone single-device program with
+GLOBAL shapes and no while loops on the hot path (cost_mode attention /
+mLSTM use loop-free forms with identical FLOPs), and totals are assembled
+as sum(segment_cost x trip_count). Per-chip = total / n_chips (sharding-
+invariant for balanced layouts; the sharding-INDUCED traffic is captured
+separately by the dry-run's scan-aware collective-bytes parse).
+
+Known approximations (documented in EXPERIMENTS.md):
+  * sLSTM's time scan is corrected with an analytic per-step FLOP count.
+  * cost_analysis "bytes accessed" counts every op's operands+results —
+    an upper proxy for HBM traffic (fusion reduces the real number).
+  * CPU backend emulates bf16 matmuls in f32, inflating bytes ~2x for
+    bf16 programs; flops are unaffected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (FFN_MOE, MLSTM, SLSTM, ModelConfig,
+                                ShapeSpec, TPU_HBM_BW, TPU_ICI_BW,
+                                TPU_PEAK_FLOPS, TrainConfig)
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.layers import (embed_tokens, embedding_defs, logits_out,
+                                 softmax_cross_entropy)
+from repro.models.module import abstract_params, cast_tree, init_params
+from repro.optim import adamw_update
+from repro.train.losses import loss_fn_for
+
+
+@dataclasses.dataclass
+class Segment:
+    name: str
+    mult: float
+    flops: float          # one execution, global shapes
+    bytes_accessed: float
+
+    @property
+    def total_flops(self):
+        return self.mult * self.flops
+
+    @property
+    def total_bytes(self):
+        return self.mult * self.bytes_accessed
+
+
+def _cost(fn, *abstract_args) -> tuple[float, float]:
+    c = jax.jit(fn).lower(*abstract_args).compile()
+    ca = c.cost_analysis() or {}
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _x(b, s, e, dt=jnp.bfloat16):
+    return jax.ShapeDtypeStruct((b, s, e), dt)
+
+
+def _abs(tree, dtype=None):
+    out = abstract_params(tree)
+    if dtype is not None:
+        out = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+                           if jnp.issubdtype(s.dtype, jnp.floating) else s,
+                           out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Segment builders (LM decoder family)
+# ---------------------------------------------------------------------------
+
+def _block_train_cost(cfg, bd, B, S):
+    """fwd+bwd of one block at (B, S), remat included."""
+    defs = T.block_defs(cfg, bd)
+    p_abs = _abs(defs)
+    positions = jnp.arange(S)
+
+    def f(p, x):
+        def body(p, x):
+            cp = cast_tree(p, jnp.bfloat16)
+            y, _, aux = T.apply_block(cfg, bd, cp, x, positions=positions,
+                                      cost_mode=True)
+            return jnp.sum(y.astype(jnp.float32)) + aux["moe_aux_loss"]
+        return jax.grad(jax.checkpoint(body), argnums=(0, 1))(p, x)
+
+    return _cost(f, p_abs, _x(B, S, cfg.d_model))
+
+
+def _block_fwd_cost(cfg, bd, B, S):
+    defs = T.block_defs(cfg, bd)
+    p_abs = _abs(defs, jnp.bfloat16)
+    positions = jnp.arange(S)
+
+    def f(p, x):
+        y, kv, _ = T.apply_block(cfg, bd, p, x, positions=positions,
+                                 cost_mode=True)
+        return y, kv
+
+    return _cost(f, p_abs, _x(B, S, cfg.d_model))
+
+
+def _block_decode_cost(cfg, bd, B, S_max):
+    defs = T.block_defs(cfg, bd)
+    p_abs = _abs(defs, jnp.bfloat16)
+    cache = jax.eval_shape(lambda: T._block_cache(cfg, bd, B, S_max))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def f(p, x, c, pos):
+        positions = jnp.arange(1, dtype=jnp.int32) + pos
+        if cfg.rope_variant == "mrope":
+            positions = jnp.broadcast_to(positions, (3, 1))
+        y, nc, _ = T.apply_block(cfg, bd, p, x, positions=positions,
+                                 cache=c, cache_pos=pos, cost_mode=True)
+        return y, nc
+
+    return _cost(f, p_abs, _x(B, 1, cfg.d_model), cache, pos)
+
+
+def _ends_train_cost(cfg, B, S):
+    """embed fwd/bwd + head matmul + CE fwd/bwd, one microbatch."""
+    emb = _abs(embedding_defs(cfg))
+    toks = _tok(B, S)
+
+    def f(table_tree, tokens, labels, x):
+        def body(tt, x):
+            xe = embed_tokens(cfg, cast_tree(tt, jnp.bfloat16), tokens)
+            logits = logits_out(cfg, cast_tree(tt, jnp.bfloat16), x)
+            return (softmax_cross_entropy(logits, labels)
+                    + jnp.sum(xe.astype(jnp.float32)) * 0.0)
+        return jax.grad(body, argnums=(0, 1))(table_tree, x)
+
+    return _cost(f, emb, toks, toks, _x(B, S, cfg.d_model))
+
+
+def _ends_fwd_cost(cfg, B, S, last_only=False):
+    emb = _abs(embedding_defs(cfg))
+
+    def f(tt, tokens, x):
+        tt = cast_tree(tt, jnp.bfloat16)
+        xe = embed_tokens(cfg, tt, tokens)
+        xl = x[:, -1:] if last_only else x
+        logits = logits_out(cfg, tt, xl)
+        return logits, xe
+
+    return _cost(f, emb, _tok(B, S), _x(B, S, cfg.d_model))
+
+
+def _optimizer_cost(cfg):
+    defs = (ED.encdec_defs(cfg) if cfg.n_encoder_layers else T.lm_defs(cfg))
+    p = _abs(defs)
+    tcfg = TrainConfig()
+
+    def f(p, g, m, v):
+        return adamw_update(p, g, {"m": m, "v": v},
+                            jnp.asarray(1, jnp.int32), tcfg)
+
+    return _cost(f, p, p, p, p)
+
+
+def _slstm_correction(cfg, B, S) -> tuple[float, float]:
+    """Analytic in-scan cost the compiled segment can't see: 4 recurrent
+    (B,D)@(D,D) matmuls per step, x3 for fwd+bwd recompute."""
+    D = cfg.d_model
+    per_step = 4 * 2 * B * D * D
+    return 3.0 * S * per_step, 3.0 * S * (4 * D * D * 4)
+
+
+# ---------------------------------------------------------------------------
+# Public: assemble segments per (arch x shape x mode)
+# ---------------------------------------------------------------------------
+
+def cost_model(cfg: ModelConfig, shape: ShapeSpec, accum_steps: int = 1):
+    """Returns (segments, totals dict) — global per-train-step / per-token-
+    step FLOPs and bytes."""
+    mode = shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    segs: list[Segment] = []
+    P = len(cfg.pattern_period)
+
+    if cfg.n_encoder_layers:
+        return _cost_model_encdec(cfg, shape, accum_steps)
+
+    if mode == "train":
+        A = accum_steps
+        Bm = B // A
+        for off, bd in enumerate(cfg.pattern_period):
+            fl, by = _block_train_cost(cfg, bd, Bm, S)
+            segs.append(Segment(f"block{off}:{bd.mixer}",
+                                cfg.n_periods * A, fl, by))
+            if bd.mixer == SLSTM:
+                cf, cb = _slstm_correction(cfg, Bm, S)
+                segs.append(Segment("slstm_scan_corr", cfg.n_periods * A,
+                                    cf, cb))
+        for i in range(cfg.n_tail):
+            bd = cfg.layer_types[cfg.n_periods * P + i]
+            fl, by = _block_train_cost(cfg, bd, Bm, S)
+            segs.append(Segment(f"tail{i}:{bd.mixer}", A, fl, by))
+        fl, by = _ends_train_cost(cfg, Bm, S)
+        segs.append(Segment("embed+head+loss", A, fl, by))
+        fl, by = _optimizer_cost(cfg)
+        segs.append(Segment("optimizer", 1, fl, by))
+    elif mode == "prefill":
+        for off, bd in enumerate(cfg.pattern_period):
+            fl, by = _block_fwd_cost(cfg, bd, B, S)
+            segs.append(Segment(f"block{off}:{bd.mixer}", cfg.n_periods,
+                                fl, by))
+            if bd.mixer == SLSTM:
+                cf, cb = _slstm_correction(cfg, B, S)
+                segs.append(Segment("slstm_scan_corr", cfg.n_periods,
+                                    cf / 3, cb / 3))
+        for i in range(cfg.n_tail):
+            bd = cfg.layer_types[cfg.n_periods * P + i]
+            fl, by = _block_fwd_cost(cfg, bd, B, S)
+            segs.append(Segment(f"tail{i}:{bd.mixer}", 1, fl, by))
+        fl, by = _ends_fwd_cost(cfg, B, S, last_only=True)
+        segs.append(Segment("embed+head", 1, fl, by))
+    else:  # decode
+        for off, bd in enumerate(cfg.pattern_period):
+            fl, by = _block_decode_cost(cfg, bd, B, S)
+            segs.append(Segment(f"block{off}:{bd.mixer}", cfg.n_periods,
+                                fl, by))
+        for i in range(cfg.n_tail):
+            bd = cfg.layer_types[cfg.n_periods * P + i]
+            fl, by = _block_decode_cost(cfg, bd, B, S)
+            segs.append(Segment(f"tail{i}:{bd.mixer}", 1, fl, by))
+        fl, by = _ends_fwd_cost(cfg, B, 1)
+        segs.append(Segment("embed+head", 1, fl, by))
+
+    totals = {
+        "flops": sum(s.total_flops for s in segs),
+        "bytes": sum(s.total_bytes for s in segs),
+    }
+    return segs, totals
+
+
+def _cost_model_encdec(cfg, shape: ShapeSpec, accum_steps: int):
+    from repro.configs.seamless_m4t_medium import encoder_len
+    mode = shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    Se = encoder_len(S)
+    segs: list[Segment] = []
+
+    enc_defs = ED._enc_block_defs(cfg)
+    dec_defs = ED._dec_block_defs(cfg)
+
+    if mode == "train":
+        A = accum_steps
+        Bm = B // A
+
+        def enc_block(p, x):
+            def body(p, x):
+                cp = cast_tree(p, jnp.bfloat16)
+                from repro.models.attention import apply_attention
+                from repro.models.layers import apply_mlp, apply_rmsnorm
+                h = apply_rmsnorm(cp["norm1"], x, cfg.norm_eps)
+                out, _ = apply_attention(cfg, cp["attn"], h,
+                                         positions=jnp.arange(x.shape[1]),
+                                         causal=False, cost_mode=True)
+                x = x + out
+                h = apply_rmsnorm(cp["norm2"], x, cfg.norm_eps)
+                return jnp.sum((x + apply_mlp(cfg, cp["ffn"], h))
+                               .astype(jnp.float32))
+            return jax.grad(jax.checkpoint(body), argnums=(0, 1))(p, x)
+
+        fl, by = _cost(enc_block, _abs(enc_defs), _x(Bm, Se, cfg.d_model))
+        segs.append(Segment("enc_block", cfg.n_encoder_layers * A, fl, by))
+
+        def dec_block(p, x, enc):
+            def body(p, x, enc):
+                cp = cast_tree(p, jnp.bfloat16)
+                from repro.models.attention import apply_attention
+                from repro.models.layers import apply_mlp, apply_rmsnorm
+                pos = jnp.arange(x.shape[1])
+                h = apply_rmsnorm(cp["norm1"], x, cfg.norm_eps)
+                out, _ = apply_attention(cfg, cp["self_attn"], h,
+                                         positions=pos, cost_mode=True)
+                x = x + out
+                k = jnp.einsum("bse,ekd->bskd", enc, cp["cross_attn"]["wk"])
+                v = jnp.einsum("bse,ekd->bskd", enc, cp["cross_attn"]["wv"])
+                h = apply_rmsnorm(cp["norm_x"], x, cfg.norm_eps)
+                out, _ = apply_attention(cfg, cp["cross_attn"], h,
+                                         positions=pos,
+                                         kv_override=(k, v, None),
+                                         cost_mode=True)
+                x = x + out
+                h = apply_rmsnorm(cp["norm2"], x, cfg.norm_eps)
+                return jnp.sum((x + apply_mlp(cfg, cp["ffn"], h))
+                               .astype(jnp.float32))
+            return jax.grad(jax.checkpoint(body), argnums=(0, 1, 2))(
+                p, x, enc)
+
+        fl, by = _cost(dec_block, _abs(dec_defs), _x(Bm, S, cfg.d_model),
+                       _x(Bm, Se, cfg.d_model))
+        segs.append(Segment("dec_block", cfg.n_layers * A, fl, by))
+        fl, by = _ends_train_cost(cfg, Bm, S)
+        segs.append(Segment("embed+head+loss", A, fl, by))
+        fl, by = _optimizer_cost(cfg)
+        segs.append(Segment("optimizer", 1, fl, by))
+    else:
+        # prefill: encoder fwd runs once; decode: cross_kv is an INPUT of
+        # the step (the encoder does not re-run per token).
+        if mode == "prefill":
+            def enc_fwd(p, x):
+                from repro.models.attention import apply_attention
+                from repro.models.layers import apply_mlp, apply_rmsnorm
+                h = apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
+                out, _ = apply_attention(cfg, p["attn"], h,
+                                         positions=jnp.arange(x.shape[1]),
+                                         causal=False, cost_mode=True)
+                x = x + out
+                h = apply_rmsnorm(p["norm2"], x, cfg.norm_eps)
+                return x + apply_mlp(cfg, p["ffn"], h)
+
+            fl, by = _cost(enc_fwd, _abs(enc_defs, jnp.bfloat16),
+                           _x(B, Se, cfg.d_model))
+            segs.append(Segment("enc_block", cfg.n_encoder_layers, fl, by))
+
+        S_dec = S if mode == "prefill" else 1
+        kv = jax.ShapeDtypeStruct((B, Se, cfg.n_kv_heads, cfg.head_dim),
+                                  jnp.bfloat16)
+        cache = jax.eval_shape(lambda: {
+            "k": jnp.zeros((B, S, cfg.n_kv_heads, cfg.head_dim),
+                           jnp.bfloat16),
+            "v": jnp.zeros((B, S, cfg.n_kv_heads, cfg.head_dim),
+                           jnp.bfloat16)})
+
+        def dec_fwd(p, x, ck, cv, cache, pos):
+            from repro.models.attention import apply_attention
+            from repro.models.layers import apply_mlp, apply_rmsnorm
+            positions = jnp.arange(x.shape[1]) + (0 if mode == "prefill"
+                                                  else pos)
+            h = apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
+            out, _ = apply_attention(
+                cfg, p["self_attn"], h, positions=positions,
+                cache=None if mode == "prefill" else cache,
+                cache_pos=None if mode == "prefill" else pos,
+                cost_mode=True)
+            x = x + out
+            h = apply_rmsnorm(p["norm_x"], x, cfg.norm_eps)
+            out, _ = apply_attention(cfg, p["cross_attn"], h,
+                                     positions=positions,
+                                     kv_override=(ck, cv, None),
+                                     cost_mode=True)
+            x = x + out
+            h = apply_rmsnorm(p["norm2"], x, cfg.norm_eps)
+            return x + apply_mlp(cfg, p["ffn"], h)
+
+        fl, by = _cost(dec_fwd, _abs(dec_defs, jnp.bfloat16),
+                       _x(B, S_dec, cfg.d_model), kv, kv, cache,
+                       jax.ShapeDtypeStruct((), jnp.int32))
+        segs.append(Segment("dec_block", cfg.n_layers, fl, by))
+        fl, by = _ends_fwd_cost(cfg, B, S_dec, last_only=mode == "prefill")
+        segs.append(Segment("embed+head", 1, fl, by))
+
+    totals = {"flops": sum(s.total_flops for s in segs),
+              "bytes": sum(s.total_bytes for s in segs)}
+    return segs, totals
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6*N*D (train) / 2*N_active*D (inference) — the 'useful' FLOPs."""
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_terms(cfg: ModelConfig, shape: ShapeSpec, totals: dict,
+                   coll_bytes_per_dev: float, n_chips: int) -> dict:
+    compute_s = totals["flops"] / (n_chips * TPU_PEAK_FLOPS)
+    memory_s = totals["bytes"] / (n_chips * TPU_HBM_BW)
+    collective_s = coll_bytes_per_dev / TPU_ICI_BW
+    mf = model_flops(cfg, shape)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": totals["flops"],
+        "useful_flops_ratio": mf / totals["flops"] if totals["flops"] else 0,
+        "step_time_s": max(compute_s, memory_s, collective_s),
+        "mfu_bound": mf / (max(compute_s, memory_s, collective_s)
+                           * n_chips * TPU_PEAK_FLOPS + 1e-30),
+    }

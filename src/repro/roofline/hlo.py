@@ -1,0 +1,187 @@
+"""HLO-text analysis: collective bytes (scan-aware) per compiled program.
+
+cost_analysis() does not scale while-loop bodies by trip count (verified
+experimentally — scan4 == scan8 FLOPs), so naive HLO grepping undercounts
+collectives inside lax.scan (our layer stacks!). This parser:
+  1. splits the HLO module into computations,
+  2. records each computation's own collective result/operand bytes,
+  3. builds the call graph (while body/condition, conditional branches,
+     calls), extracting while trip counts from the condition's compare
+     constant,
+  4. resolves total bytes from the ENTRY computation with trip-count
+     multipliers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_CALL_REF = re.compile(r"(condition|body|to_apply|branch_computations|"
+                       r"called_computations|calls)=\{?%?([\w\.\-]+)")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[8,16]' or tuple '(f32[8], s32[2])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str):
+    """-> dict name -> dict(own: {op: bytes}, counts: {op: n},
+    calls: [(name, kind)], trip_const: int|None, entry: bool)."""
+    comps: dict[str, dict] = {}
+    cur: Optional[str] = None
+    depth = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and not line.startswith(" "):
+                cur = m.group(2)
+                comps[cur] = {"own": {c: 0 for c in COLLECTIVES},
+                              "counts": {c: 0 for c in COLLECTIVES},
+                              "calls": [], "trip_const": None,
+                              "entry": bool(m.group(1))}
+                depth = line.count("{") - line.count("}")
+            continue
+        depth += line.count("{") - line.count("}")
+        # collective ops
+        m = _OP_RE.search(stripped)
+        if m:
+            shape_str, op = m.group(1), m.group(2)
+            if op == "reduce-scatter":
+                # count the (larger) operand: result * group size; fall back
+                # to operand shape inside parens when parsable
+                rest = stripped[m.end():]
+                ms = _SHAPE_RE.search(rest)
+                b = _shape_bytes(ms.group(0)) if ms else _shape_bytes(
+                    shape_str)
+            else:
+                b = _shape_bytes(shape_str)
+            comps[cur]["own"][op] += b
+            comps[cur]["counts"][op] += 1
+        # call-graph edges
+        for kind, ref in _CALL_REF.findall(stripped):
+            comps[cur]["calls"].append((ref, kind, stripped))
+        # while trip count heuristic: constant in a compare inside condition
+        if "compare(" in stripped and "direction=LT" in stripped:
+            pass  # constant usually on a separate line; handled below
+        mc = re.search(r"constant\((\d+)\)", stripped)
+        if mc:
+            v = int(mc.group(1))
+            prev = comps[cur]["trip_const"]
+            comps[cur]["trip_const"] = max(prev or 0, v)
+        if depth <= 0:
+            cur = None
+    return comps
+
+
+def resolve_bytes(comps: dict) -> dict:
+    """Total collective bytes from ENTRY, trip-count aware."""
+    memo: dict[str, dict] = {}
+
+    def total(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {c: 0 for c in COLLECTIVES}
+        node = comps[name]
+        out = dict(node["own"])
+        # group calls: while pairs (condition, body) appear on the same line
+        for ref, kind, line in node["calls"]:
+            if kind == "condition":
+                continue
+            mult = 1
+            if kind == "body":
+                # find matching condition on the same op line
+                mcond = re.search(r"condition=%?([\w\.\-]+)", line)
+                trip = None
+                if mcond and mcond.group(1) in comps:
+                    trip = comps[mcond.group(1)]["trip_const"]
+                mult = trip if trip else 1
+            sub = total(ref, stack + (name,))
+            for c in COLLECTIVES:
+                out[c] += mult * sub[c]
+        memo[name] = out
+        return out
+
+    entry = next((n for n, v in comps.items() if v["entry"]), None)
+    if entry is None:
+        return {c: 0 for c in COLLECTIVES}
+    return total(entry)
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    per_op = resolve_bytes(comps)
+    counts = {c: 0 for c in COLLECTIVES}
+    for v in comps.values():
+        for c in COLLECTIVES:
+            counts[c] += v["counts"][c]
+    return {"bytes_by_op": per_op,
+            "total_bytes": int(sum(per_op.values())),
+            "static_op_counts": counts}
+
+
+def cpu_bf16_artifact_bytes(hlo: str, min_bytes: int = 256 * 1024 * 1024):
+    """Estimate memory attributable to the CPU backend's bf16 emulation.
+
+    XLA's host backend legalises bf16 dots/convs by upconverting operands
+    to f32 — and hoists those converts out of scan loops, so whole weight
+    stacks / KV caches get an f32 shadow copy that would NOT exist on TPU
+    (native bf16 MXU). Heuristic: any large f32 buffer whose dims exactly
+    match a bf16 buffer in the same module is counted as an artifact.
+    Used to report an adjusted fits-on-TPU number alongside the raw
+    memory_analysis (both shown in EXPERIMENTS.md §Dry-run)."""
+    # Conservative (dims-once) estimate: each distinct f32 shape that is
+    # the target of a convert from bf16 counts ONCE — one live shadow per
+    # shape. Static instruction counting would conflate reused transient
+    # buffers with live footprint (observed overcounts of 10x+), so this
+    # deliberately UNDER-estimates the artifact; the adjusted memory it
+    # produces therefore over-estimates true TPU memory (safe direction
+    # for fits-on-chip claims).
+    bf16 = set()
+    for m in re.finditer(r"bf16\[([\d,]+)\]", hlo):
+        dims = m.group(1)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 2 >= min_bytes // 2:
+            bf16.add(dims)
+    seen: dict[str, int] = {}
+    pat = (r"= f32\[([\d,]+)\]\S*\s+convert\(\S*bf16\[|"
+           r"%\S*convert\S*? = f32\[([\d,]+)\]\S*\s+fusion\(")
+    for m in re.finditer(pat, hlo):
+        dims = m.group(1) or m.group(2)
+        if dims not in bf16 or dims in seen:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= min_bytes:
+            seen[dims] = n * 4
+    return int(sum(seen.values()))

@@ -1,0 +1,100 @@
+"""Roofline report generator: combines the dry-run artifacts (memory +
+scan-aware collective bytes, per device) with the segmented cost model
+(FLOPs / bytes, global) into the three-term roofline per cell, and emits
+the EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.report \
+      --artifacts artifacts/dryrun --out artifacts/roofline.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro import configs as C
+from repro.configs.base import SHAPES
+from repro.roofline.analysis import cost_model, model_flops, roofline_terms
+
+N_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def load_artifacts(art_dir: str) -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(art_dir, "*.json")):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def analyse(art_dir: str, mesh: str = "16x16",
+            arch_filter=None, shape_filter=None) -> list[dict]:
+    from repro.launch.dryrun import TRAIN_KNOBS
+    arts = load_artifacts(art_dir)
+    rows = []
+    cache: dict = {}
+    for (arch, shape_name, m), art in sorted(arts.items()):
+        if m != mesh:
+            continue
+        if arch_filter and arch != arch_filter:
+            continue
+        if shape_filter and shape_name != shape_filter:
+            continue
+        cfg = C.get_config(arch)
+        shape = SHAPES[shape_name]
+        accum = TRAIN_KNOBS.get(arch, {}).get("accum_steps", 1) \
+            if shape.kind == "train" else 1
+        key = (arch, shape_name)
+        if key not in cache:
+            _, totals = cost_model(cfg, shape, accum)
+            cache[key] = totals
+        totals = cache[key]
+        coll = art["collectives"]["total_bytes"]
+        terms = roofline_terms(cfg, shape, totals, coll, N_CHIPS[m])
+        rows.append({
+            "arch": arch, "shape": shape_name, "mesh": m,
+            "mode": shape.kind,
+            "mem_gb": art["memory"]["per_device_total_gb"],
+            "mem_adj_gb": art["memory"].get(
+                "adjusted_total_gb", art["memory"]["per_device_total_gb"]),
+            "coll_bytes_per_dev": coll,
+            **{k: terms[k] for k in
+               ("compute_s", "memory_s", "collective_s", "dominant",
+                "model_flops", "hlo_flops", "useful_flops_ratio",
+                "step_time_s", "mfu_bound")},
+        })
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL/HLO | roofline MFU | mem/dev (GB, adj) |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['mfu_bound']:.3f} | {r['mem_adj_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    rows = analyse(args.artifacts, args.mesh, args.arch, args.shape)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

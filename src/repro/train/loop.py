@@ -1,0 +1,72 @@
+"""Training loop with checkpointing cadence, watchdog, and crash recovery.
+
+Designed so that ``run_with_restarts(lambda: make_runner(...))`` recovers a
+killed run bit-exactly: state restores from the latest atomic checkpoint
+and the data pipeline is stateless in the step index.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import lm_batch
+from repro.distributed.fault import StepWatchdog
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.module import init_params
+from repro.train.steps import init_train_state, make_train_step
+
+
+def train_lm(cfg: ModelConfig, tcfg: TrainConfig, *, num_steps: int,
+             batch: int, seq: int, ckpt_dir: Optional[str] = None,
+             seed: int = 0, data_mode: str = "cyclic",
+             batch_fn: Optional[Callable] = None,
+             fail_at_step: Optional[int] = None,
+             log: Optional[Callable[[str], None]] = None):
+    """Returns (state, history). Restores from ckpt_dir if one exists."""
+    defs = (ED.encdec_defs(cfg) if cfg.n_encoder_layers else T.lm_defs(cfg))
+    params = init_params(defs, jax.random.key(seed))
+    state = init_train_state(cfg, params)
+
+    ckpt = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints) \
+        if ckpt_dir else None
+    start = 0
+    if ckpt is not None:
+        got = ckpt.restore_latest(state)
+        if got[0] is not None:
+            start, state = got
+
+    train_step = jax.jit(make_train_step(cfg, tcfg))
+    wd = StepWatchdog()
+    history = []
+    for step in range(start, num_steps):
+        if batch_fn is not None:
+            b = batch_fn(seed, step)
+        else:
+            b = lm_batch(seed, step, batch, seq, cfg.vocab_size, data_mode)
+            if cfg.n_encoder_layers:
+                b = {"frames": jnp.zeros(
+                        (batch, max(seq // 4, 8), cfg.d_model), jnp.float32),
+                     "tokens": b["tokens"], "labels": b["labels"]}
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, b)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        if wd.observe(dt) and log:
+            log(f"step {step}: straggler ({dt:.3f}s)")
+        history.append(metrics)
+        if log and (step % 10 == 0 or step == num_steps - 1):
+            log(f"step {step}: loss={metrics['loss']:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt is not None and ((step + 1) % tcfg.checkpoint_every == 0
+                                 or step == num_steps - 1):
+            ckpt.save(step + 1, state)
+        if fail_at_step is not None and step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+    if ckpt is not None:
+        ckpt.wait()
+    return state, history

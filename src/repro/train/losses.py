@@ -1,0 +1,53 @@
+"""Loss functions per model family (LM / enc-dec / CNN)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.layers import softmax_cross_entropy
+from repro.models.module import cast_tree
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat: bool = True,
+            cost_mode: bool = False):
+    """batch: tokens, labels (+ optional vision_embeds / positions)."""
+    cparams = cast_tree(params, jnp.dtype(cfg.compute_dtype))
+    # pin the bf16 cast before any FSDP gather: without the barrier XLA
+    # reorders to gather(f32-master) -> cast, doubling gather bytes
+    cparams = jax.lax.optimization_barrier(cparams)
+    logits, _, aux = T.apply_lm(
+        cfg, cparams, batch["tokens"],
+        positions=batch.get("positions"),
+        extra_embeds=batch.get("vision_embeds"),
+        remat=remat, cost_mode=cost_mode)
+    loss = softmax_cross_entropy(logits, batch["labels"])
+    total = loss + cfg.moe.router_aux_weight * aux["moe_aux_loss"] \
+        if cfg.moe is not None else loss
+    metrics = {"loss": loss, **aux}
+    return total, metrics
+
+
+def encdec_loss(cfg: ModelConfig, params, batch, *, remat: bool = True,
+                cost_mode: bool = False):
+    cparams = cast_tree(params, jnp.dtype(cfg.compute_dtype))
+    logits = ED.apply_encdec(cfg, cparams, batch["frames"], batch["tokens"],
+                             remat=remat, cost_mode=cost_mode)
+    loss = softmax_cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+def cnn_loss(cnn_cfg, params, batch):
+    from repro.models.cnn import apply_cnn
+    logits = apply_cnn(cnn_cfg, params, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def loss_fn_for(cfg: ModelConfig):
+    return encdec_loss if cfg.n_encoder_layers else lm_loss

@@ -1,0 +1,11 @@
+"""Test config. NOTE: no xla_force_host_platform_device_count here —
+unit/smoke tests must see exactly 1 device. Multi-device behaviour is
+tested via subprocesses (tests/test_distributed.py) and the dry-run."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

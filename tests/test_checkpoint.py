@@ -1,0 +1,72 @@
+"""Checkpoint manager: atomicity, keep-K GC, resume, structure checks."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(v: float):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.zeros((4,))},
+            "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    m.save(5, _state(5.0))
+    step, got = m.restore_latest(_state(0.0))
+    assert step == 5
+    assert float(got["params"]["w"][0, 0]) == 5.0
+    assert int(got["step"]) == 5
+
+
+def test_keep_k_gc(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        m.save(s, _state(float(s)))
+    assert m.all_steps() == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    m.save(7, _state(7.0))
+    m.wait()
+    step, got = m.restore_latest(_state(0.0))
+    assert step == 7 and float(got["params"]["w"][0, 0]) == 7.0
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    """A directory without a manifest (crash mid-write) must be skipped."""
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    m.save(1, _state(1.0))
+    os.makedirs(os.path.join(str(tmp_path), "step_000000009"))
+    # no manifest.json inside -> not a valid checkpoint
+    assert m.latest_step() == 1
+
+
+def test_structure_mismatch_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    m.save(1, _state(1.0))
+    bad = {"params": {"w": jnp.zeros((4, 4))}}  # missing leaf
+    with pytest.raises(ValueError):
+        m.restore(1, bad)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    m.save(1, _state(1.0))
+    bad = _state(0.0)
+    bad["params"]["w"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        m.restore(1, bad)
+
+
+def test_atomic_rename_never_leaves_tmp(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    m.save(3, _state(3.0))
+    names = os.listdir(str(tmp_path))
+    assert not any(n.endswith(".tmp") for n in names)

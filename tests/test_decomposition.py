@@ -1,0 +1,116 @@
+"""Property tests for the decomposition planner (paper §5) + Table 1/Fig 6
+ground truth."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.decomposition import (ALEXNET_LAYERS, PAPER_CONV1_PLAN,
+                                      ConvLayer, evaluate,
+                                      plan_decomposition, tile_grid)
+
+PAPER_TABLE1 = {  # name -> (ops M, in KB, out KB), paper's 1 KB = 1000 B
+    "conv1": (211, 309, 581),
+    "conv2": (448, 140, 373),
+    "conv3": (299, 87, 130),
+    "conv4": (224, 130, 130),
+    "conv5": (150, 130, 87),
+}
+
+
+def test_table1_matches_paper():
+    for l in ALEXNET_LAYERS:
+        ops_m, in_kb, out_kb = PAPER_TABLE1[l.name]
+        assert round(l.num_ops / 1e6) == ops_m, l.name
+        assert round(l.in_bytes / 1000) == in_kb, l.name
+        assert round(l.out_bytes / 1000) == out_kb, l.name
+    total_ops = sum(l.num_ops for l in ALEXNET_LAYERS)
+    assert abs(total_ops / 1e9 - 1.3) < 0.05   # paper: 1.3 G ops
+
+
+def test_fig6_paper_plan_feasible_under_128k():
+    plan = evaluate(ALEXNET_LAYERS[0], **PAPER_CONV1_PLAN)
+    assert plan is not None
+    assert plan.sram_needed <= 128 * 1024
+    # paper quotes ~34 KB input tile and ~33 KB output tile
+    assert 30e3 < plan.in_tile_bytes < 45e3
+    assert 30e3 < plan.out_tile_bytes < 40e3
+
+
+def test_planner_beats_or_matches_paper_plan():
+    l1 = ALEXNET_LAYERS[0]
+    paper = evaluate(l1, **PAPER_CONV1_PLAN)
+    ours = plan_decomposition(l1, 128 * 1024)
+    assert ours.dram_traffic <= paper.dram_traffic
+
+
+def test_all_alexnet_layers_plannable():
+    for l in ALEXNET_LAYERS:
+        p = plan_decomposition(l, 128 * 1024)
+        assert p.sram_needed <= 128 * 1024
+
+
+layer_strategy = st.builds(
+    ConvLayer,
+    name=st.just("prop"),
+    in_h=st.integers(8, 64),
+    in_w=st.integers(8, 64),
+    in_c=st.integers(1, 64),
+    out_c=st.integers(1, 64),
+    kernel=st.sampled_from([1, 3, 5, 7]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.integers(0, 3),
+)
+
+
+@hypothesis.given(layer_strategy, st.integers(16, 512))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_plan_properties(layer, budget_kb):
+    if layer.out_h <= 0 or layer.out_w <= 0:
+        return
+    budget = budget_kb * 1024
+    try:
+        plan = plan_decomposition(layer, budget)
+    except ValueError:
+        return  # infeasible under tiny budgets is legal
+    # 1. fits the budget
+    assert plan.sram_needed <= budget
+    # 2. tiles cover the output exactly, no overlap
+    seen = set()
+    for t in tile_grid(layer, plan):
+        for y in range(t["oy"], t["oy"] + t["oh"]):
+            for x in range(t["ox"], t["ox"] + t["ow"]):
+                assert (y, x) not in seen
+                seen.add((y, x))
+        # input window in bounds of padded input
+        assert 0 <= t["iy"] and t["iy"] + t["ih"] <= layer.in_h + 2 * layer.pad
+        assert 0 <= t["ix"] and t["ix"] + t["iw"] <= layer.in_w + 2 * layer.pad
+    assert len(seen) == layer.out_h * layer.out_w
+    # 3. traffic >= the ideal single pass over the *effective* input (the
+    # streaming executor never reads rows/cols the conv window cannot
+    # reach: trailing remainder rows when (in - K) % stride != 0, or
+    # skipped pixels when kernel < stride).
+    eff_h = (layer.out_h - 1) * layer.stride + layer.kernel
+    eff_w = (layer.out_w - 1) * layer.stride + layer.kernel
+    eff_in = (min(eff_h, layer.in_h + 2 * layer.pad)
+              * min(eff_w, layer.in_w + 2 * layer.pad)
+              * layer.in_c * layer.bytes_per_elem)
+    if layer.kernel >= layer.stride:
+        ideal = min(eff_in, layer.in_bytes) + layer.out_bytes \
+            + layer.weight_bytes
+    else:
+        ideal = layer.out_bytes + layer.weight_bytes
+    assert plan.dram_traffic >= ideal - 1
+
+
+@hypothesis.given(layer_strategy)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_evaluate_monotone_in_tiles(layer):
+    """More image tiles never reduces traffic — when the kernel covers the
+    stride. (For kernel < stride, tiles skip subsampled pixels that a
+    single whole-image pass would stream, so tiling can legally win.)"""
+    if layer.out_h <= 0 or layer.out_w <= 0 or layer.kernel < layer.stride:
+        return
+    p1 = evaluate(layer, 1, 1, 1, 1)
+    p2 = evaluate(layer, 2, 2, 1, 1)
+    if p1 and p2:
+        assert p2.dram_traffic >= p1.dram_traffic - 1

@@ -1,0 +1,93 @@
+"""Shape/dtype sweeps: Pallas conv kernels vs pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.conv_stream import conv2d_stream, conv2d_ref
+from repro.kernels.fused_conv_pool import fused_conv_pool, conv_pool_ref
+from repro.kernels.maxpool_stream import maxpool_stream, maxpool_ref
+
+CONV_CASES = [
+    # H, W, Cin, Cout, K, stride, pad
+    (16, 16, 3, 8, 3, 1, 1),
+    (56, 56, 3, 16, 11, 4, 0),     # AlexNet conv1 geometry (scaled)
+    (13, 13, 64, 96, 3, 1, 1),
+    (27, 27, 24, 32, 5, 1, 2),
+    (8, 8, 4, 4, 1, 1, 0),
+    (16, 16, 8, 8, 3, 2, 1),
+    (17, 19, 5, 7, 3, 1, 1),       # non-divisible dims
+]
+
+
+@pytest.mark.parametrize("H,W,Cin,Cout,K,stride,pad", CONV_CASES)
+def test_conv_stream_matches_ref(H, W, Cin, Cout, K, stride, pad):
+    x = jax.random.normal(jax.random.key(1), (2, H, W, Cin))
+    w = jax.random.normal(jax.random.key(2), (K, K, Cin, Cout)) * 0.1
+    got = conv2d_stream(x, w, stride=stride, pad=pad, row_block=4,
+                        cout_block=8, cin_block=16)
+    ref = conv2d_ref(x, w, stride=stride, pad=pad)
+    assert got.shape == ref.shape
+    assert jnp.max(jnp.abs(got - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_stream_dtypes(dtype):
+    x = jax.random.normal(jax.random.key(1), (1, 12, 12, 4)).astype(dtype)
+    w = (jax.random.normal(jax.random.key(2), (3, 3, 4, 8)) * 0.1).astype(dtype)
+    got = conv2d_stream(x, w, stride=1, pad=1, row_block=4)
+    ref = conv2d_ref(x, w, stride=1, pad=1)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert jnp.max(jnp.abs(got - ref)) < tol
+
+
+def test_conv_stream_bias():
+    x = jax.random.normal(jax.random.key(1), (1, 8, 8, 4))
+    w = jax.random.normal(jax.random.key(2), (3, 3, 4, 8)) * 0.1
+    b = jax.random.normal(jax.random.key(3), (8,))
+    got = conv2d_stream(x, w, b, stride=1, pad=1, row_block=4)
+    ref = conv2d_ref(x, w, stride=1, pad=1) + b
+    assert jnp.max(jnp.abs(got - ref)) < 1e-4
+
+
+POOL_CASES = [(8, 8, 4, 2, 2), (13, 13, 8, 3, 2), (27, 27, 16, 3, 3),
+              (14, 10, 4, 2, 2), (55, 55, 8, 3, 2)]
+
+
+@pytest.mark.parametrize("H,W,C,p,ps", POOL_CASES)
+def test_maxpool_stream_matches_ref(H, W, C, p, ps):
+    x = jax.random.normal(jax.random.key(0), (2, H, W, C))
+    got = maxpool_stream(x, pool=p, stride=ps, row_block=4)
+    ref = maxpool_ref(x, pool=p, stride=ps)
+    assert got.shape == ref.shape
+    assert jnp.max(jnp.abs(got - ref)) == 0.0
+
+
+FUSED_CASES = [(18, 18, 4, 8, 3, 1, 2), (16, 16, 3, 8, 3, 1, 2),
+               (28, 28, 8, 16, 5, 1, 2), (13, 13, 8, 8, 3, 1, 3)]
+
+
+@pytest.mark.parametrize("H,W,Cin,Cout,K,stride,p", FUSED_CASES)
+def test_fused_conv_pool_matches_ref(H, W, Cin, Cout, K, stride, p):
+    x = jax.random.normal(jax.random.key(1), (2, H, W, Cin))
+    w = jax.random.normal(jax.random.key(2), (K, K, Cin, Cout)) * 0.1
+    got = fused_conv_pool(x, w, stride=stride, pool=p, row_block=4,
+                          cout_block=8, cin_block=8)
+    ref = conv_pool_ref(x, w, stride=stride, pool=p)
+    assert got.shape == ref.shape
+    assert jnp.max(jnp.abs(got - ref)) < 1e-4
+
+
+def test_fused_conv_pool_bias_folding():
+    from jax import lax
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 4))
+    w = jax.random.normal(jax.random.key(2), (3, 3, 4, 8)) * 0.1
+    b = jax.random.normal(jax.random.key(3), (8,)) * 0.5
+    got = fused_conv_pool(x, w, b, stride=1, pool=2, row_block=4)
+    y = lax.conv_general_dilated(
+        x, w, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    y = jnp.maximum(y, 0)
+    ref = lax.reduce_window(y, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                            "VALID")
+    assert jnp.max(jnp.abs(got - ref)) < 1e-4

@@ -1,0 +1,47 @@
+"""Cross-entropy correctness (incl. padded-vocab masking)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models.layers import mask_vocab_pad, softmax_cross_entropy
+
+
+def test_ce_matches_naive():
+    B, S, V = 2, 5, 17
+    logits = jax.random.normal(jax.random.key(0), (B, S, V))
+    labels = jax.random.randint(jax.random.key(1), (B, S), 0, V)
+    got = softmax_cross_entropy(logits, labels)
+    logp = jax.nn.log_softmax(logits, -1)
+    ref = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    assert abs(float(got) - float(ref)) < 1e-5
+
+
+def test_ce_with_mask():
+    B, S, V = 2, 6, 11
+    logits = jax.random.normal(jax.random.key(0), (B, S, V))
+    labels = jax.random.randint(jax.random.key(1), (B, S), 0, V)
+    mask = (jnp.arange(S) < 3).astype(jnp.float32)[None, :].repeat(B, 0)
+    got = softmax_cross_entropy(logits, labels, mask)
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    ref = jnp.sum(nll * mask) / jnp.sum(mask)
+    assert abs(float(got) - float(ref)) < 1e-5
+
+
+def test_vocab_padding_carries_no_probability():
+    cfg = dataclasses.replace(reduced_config("seamless_m4t_medium"),
+                              vocab_size=250)  # pads to 256
+    assert cfg.padded_vocab == 256
+    logits = jax.random.normal(jax.random.key(0), (1, 4, 256))
+    masked = mask_vocab_pad(cfg, logits)
+    p = jax.nn.softmax(masked, -1)
+    assert float(jnp.sum(p[..., 250:])) < 1e-12
+    # CE with padded logits == CE over the true vocab only
+    labels = jax.random.randint(jax.random.key(1), (1, 4), 0, 250)
+    got = softmax_cross_entropy(masked, labels)
+    logp = jax.nn.log_softmax(logits[..., :250], -1)
+    ref = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    assert abs(float(got) - float(ref)) < 1e-5

@@ -1,0 +1,28 @@
+"""Paper §7 'supports most popular CNNs': VGG-16 / ResNet-18 layer tables
+decompose under the 128 KB budget; nameplate op counts check out."""
+from repro.core.decomposition import plan_decomposition
+from repro.core.model_zoo import RESNET18_LAYERS, VGG16_LAYERS
+
+BUDGET = 128 * 1024
+
+
+def test_vgg16_all_layers_fit():
+    for l in VGG16_LAYERS:
+        assert plan_decomposition(l, BUDGET).sram_needed <= BUDGET
+
+
+def test_resnet18_all_layers_fit():
+    for l in RESNET18_LAYERS:
+        assert plan_decomposition(l, BUDGET).sram_needed <= BUDGET
+
+
+def test_vgg16_total_ops_matches_literature():
+    # VGG-16 conv ops ~30.7 GFLOPs (2 ops/MAC) at 224x224
+    total = sum(l.num_ops for l in VGG16_LAYERS) / 1e9
+    assert 29.0 < total < 32.0
+
+
+def test_alexnet_config_importable():
+    from repro.configs import get_config
+    cfg = get_config("alexnet")
+    assert cfg.name == "alexnet" and len(cfg.layers) == 5

@@ -1,0 +1,45 @@
+"""Ring-buffer local KV cache (§Perf cell-1 optimization): decode through
+window-sized caches must equal the full forward pass."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import applicable_shapes, ALL_SHAPES
+from repro.models import transformer as T
+from repro.models.module import init_params
+
+
+@pytest.mark.parametrize("arch", ["gemma3_4b", "recurrentgemma_2b"])
+def test_ring_decode_matches_full(arch):
+    cfg = dataclasses.replace(reduced_config(arch), compute_dtype="float32")
+    assert cfg.window_size > 0
+    params = init_params(T.lm_defs(cfg), jax.random.key(0))
+    B, S = 2, cfg.window_size + 8   # exceed the window to exercise wrap
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full, _, _ = T.apply_lm(cfg, params, toks)
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32, ring_local=True)
+    outs = []
+    for t in range(S):
+        lg, cache, _ = T.apply_lm(cfg, params, toks[:, t:t + 1],
+                                  cache=cache, cache_pos=t)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    assert float(jnp.max(jnp.abs(dec - full))) < 1e-3
+
+
+def test_ring_cache_is_window_sized():
+    cfg = reduced_config("gemma3_4b")
+    cache = T.init_cache(cfg, 2, 64, ring_local=True)
+    # local offsets: window-sized; global offset: full length
+    assert cache["periods"][0]["k"].shape[2] == cfg.window_size
+    assert cache["periods"][5]["k"].shape[2] == 64
+
+
+def test_cell_count_is_33():
+    """10 archs x 3 base shapes + 3 long_500k = 33 single-pod cells."""
+    from repro.configs import ARCH_IDS, get_config
+    n = sum(len(applicable_shapes(get_config(a))) for a in ARCH_IDS)
+    assert n == 33

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the paper's system: a CNN trained through
+the streaming substrate learns; quantized streaming inference matches float
+within fixed-point error; tiled large-image inference works (the FPGA
+face-detection demo analogue)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core.decomposition import ConvLayer, plan_decomposition
+from repro.core.quantization import (calibrate_frac_bits, dequantize,
+                                     quantize)
+from repro.core.streaming import (conv2d_direct, maxpool_direct,
+                                  run_layer_streamed)
+from repro.data.pipeline import cnn_batch
+from repro.models.cnn import apply_cnn, cnn_defs, tiny_cnn_config
+from repro.models.module import init_params
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.train.losses import cnn_loss
+
+
+def test_cnn_trains_on_streaming_substrate():
+    cfg = tiny_cnn_config(num_classes=4)
+    params = init_params(cnn_defs(cfg), jax.random.key(0))
+    opt = adamw_init(params)
+    tcfg = TrainConfig(learning_rate=3e-3)
+
+    @jax.jit
+    def step(params, opt, step_i, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: cnn_loss(cfg, p, batch), has_aux=True)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(params, grads, opt, step_i, tcfg)
+        return params, opt, metrics
+
+    losses = []
+    for i in range(25):
+        batch = cnn_batch(0, i, 16, 32, 3, 4)
+        params, opt, m = step(params, opt, jnp.asarray(i + 1), batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+
+
+def test_quantized_streaming_inference_matches_float():
+    """16-bit fixed-point conv (the paper's datapath) through the streaming
+    executor tracks the float result within accumulated LSB error."""
+    layer = ConvLayer("q", 16, 16, 8, 16, 3, pad=0)
+    plan = plan_decomposition(layer, 64 * 1024)
+    x = jax.random.normal(jax.random.key(0), (1, 16, 16, 8))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 8, 16)) * 0.2
+    qx = calibrate_frac_bits(x, 16)
+    qw = calibrate_frac_bits(w, 16)
+    xq = dequantize(quantize(x, qx), qx)
+    wq = dequantize(quantize(w, qw), qw)
+    got = run_layer_streamed(layer, plan, xq, wq)
+    ref = conv2d_direct(x, w, 1, 0)
+    fan_in = 3 * 3 * 8
+    tol = fan_in * (qx.lsb * float(jnp.max(jnp.abs(w)))
+                    + qw.lsb * float(jnp.max(jnp.abs(x))))
+    assert float(jnp.max(jnp.abs(got - ref))) < tol
+
+
+def test_large_image_tiled_inference():
+    """Arbitrary-size input through a fixed small buffer (paper's claim):
+    a 128x96 image convolved under a 24 KB budget, tile by tile."""
+    layer = ConvLayer("big", 96, 128, 3, 8, 3, pad=1, bytes_per_elem=2)
+    plan = plan_decomposition(layer, 24 * 1024)
+    assert plan.tiles_h * plan.tiles_w > 1  # decomposition actually engaged
+    x = jax.random.normal(jax.random.key(0), (1, 96, 128, 3))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 3, 8)) * 0.2
+    got = run_layer_streamed(layer, plan, x, w)
+    ref = conv2d_direct(x, w, 1, 1)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_data_pipeline_deterministic_in_step():
+    a = cnn_batch(7, 3, 4, 16, 3, 10)
+    b = cnn_batch(7, 3, 4, 16, 3, 10)
+    np.testing.assert_array_equal(np.asarray(a["images"]),
+                                  np.asarray(b["images"]))
+    c = cnn_batch(7, 4, 4, 16, 3, 10)
+    assert not np.array_equal(np.asarray(a["images"]),
+                              np.asarray(c["images"]))
