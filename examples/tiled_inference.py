@@ -23,18 +23,31 @@ def main():
     ref = conv2d_direct(x, w, 1, 1)
 
     print(f"{'budget':>10} {'tiles':>8} {'feat':>5} {'sram':>9} "
-          f"{'traffic x':>9} {'ms':>8} {'max err':>9}")
+          f"{'traffic x':>9} {'ms_py':>8} {'ms_jit':>8} {'max err':>9}")
     for budget_kb in (512, 128, 48, 16):
         plan = plan_decomposition(layer, budget_kb * 1024)
         t0 = time.perf_counter()
-        got = run_layer_streamed(layer, plan, x, w)
+        got = run_layer_streamed(layer, plan, x, w, mode="interpret")
         jax.block_until_ready(got)
-        ms = (time.perf_counter() - t0) * 1e3
-        err = float(jnp.max(jnp.abs(got - ref)))
+        ms_py = (time.perf_counter() - t0) * 1e3
+        # compiled scan executor: first call traces, second replays the
+        # cached executable — time the replay (the serving steady state)
+        jax.block_until_ready(run_layer_streamed(layer, plan, x, w))
+        t0 = time.perf_counter()
+        got_jit = run_layer_streamed(layer, plan, x, w)
+        jax.block_until_ready(got_jit)
+        ms_jit = (time.perf_counter() - t0) * 1e3
+        err = float(jnp.max(jnp.abs(got_jit - ref)))
+        # executors agree bitwise for evenly-divisible channel splits; a
+        # ragged split (e.g. 16 features / 6) pads the group, which lets
+        # the conv backend reassociate sums — a few ULP, nothing more
+        assert float(jnp.max(jnp.abs(got - got_jit))) < 1e-5
         print(f"{budget_kb:>9}K {plan.tiles_h}x{plan.tiles_w:<6} "
               f"/{plan.feat_splits:<4} {plan.sram_needed/1024:>8.1f}K "
-              f"{plan.overhead:>9.2f} {ms:>8.0f} {err:>9.1e}")
-    print("\nsame arithmetic, any buffer size — the paper's claim, live.")
+              f"{plan.overhead:>9.2f} {ms_py:>8.0f} {ms_jit:>8.0f} "
+              f"{err:>9.1e}")
+    print("\nsame arithmetic, any buffer size — the paper's claim, live;")
+    print("the compiled schedule replays it at serving speed.")
 
 
 if __name__ == "__main__":

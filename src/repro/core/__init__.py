@@ -1,8 +1,15 @@
 """The paper's primary contribution: streaming execution under an on-chip
 buffer budget, with image / feature / kernel decomposition."""
-from repro.core.decomposition import (ALEXNET_LAYERS, PAPER_CONV1_PLAN,
-                                      ConvLayer, Plan, evaluate,
-                                      plan_decomposition, tile_grid)
+from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
+                                      PAPER_CONV1_PLAN, ConvLayer, Plan,
+                                      evaluate, plan_decomposition,
+                                      tile_grid)
 from repro.core.quantization import (QFormat, calibrate_frac_bits,
                                      dequantize, fake_quant,
                                      fixed_point_matmul, quantize)
+from repro.core.schedule import (TileProgram, compile_layer,
+                                 compile_network)
+from repro.core.streaming import (conv2d_direct, maxpool_direct,
+                                  run_layer_interpreted,
+                                  run_layer_scheduled, run_layer_streamed,
+                                  run_network_streamed)

@@ -130,7 +130,33 @@ def evaluate(layer: ConvLayer, tiles_h: int, tiles_w: int,
     Streaming model (paper §3): for each image tile and each feature group,
     the input tile streams through the CU array once while that group's
     weights are resident; partial sums stay on-chip across in-channel
-    groups (psum buffer)."""
+    groups (psum buffer).
+
+    DRAM-traffic accounting (the quantity the planner minimises; the full
+    derivation and its relation to the paper's Fig. 6 numbers is in
+    DESIGN.md §6):
+
+    * **Input re-read per feature group.** A feature group's weights must
+      see every input pixel of the tile, and the on-chip buffer holds
+      only one group's partial products, so the input tile is fetched
+      from DRAM once per (image tile × feature group):
+      ``in_traffic = in_tile_px * in_c * bytes * n_tiles * feat_splits``.
+      In-channel splitting does NOT multiply input traffic — the c-groups
+      of one tile pass partition the same fetched tile.
+    * **Weights re-fetched per image tile.** Weights are resident across
+      one tile's feature/in-channel walk but evicted between tiles (the
+      weight buffer is sized for one group, not one layer):
+      ``w_traffic = weight_bytes * n_tiles``. Feature/in-channel splits
+      do not multiply weight traffic — each pass loads only its own
+      slice, and the slices of one tile tile the whole tensor once.
+    * **Output written exactly once.** Partial sums stay on-chip in the
+      32-bit psum buffer across in-channel groups, so the output never
+      round-trips: ``out_traffic = out_bytes``.
+
+    Halo overlap between adjacent input tiles is counted as real traffic
+    (tiles re-fetch their overlap rows), which is why ``overhead`` > 1
+    even for pure image tiling.
+    """
     l = layer
     if feat_splits > l.out_c or in_splits > l.in_c:
         return None
@@ -139,7 +165,11 @@ def evaluate(layer: ConvLayer, tiles_h: int, tiles_w: int,
         # keep partial-sum splitting out of grouped layers for simplicity
         if in_splits != 1:
             return None
-        if feat_splits > 1 and feat_splits % l.groups != 0:
+        if feat_splits > 1 and (feat_splits % l.groups != 0
+                                or l.out_c % feat_splits != 0):
+            # each feature block must nest inside one conv group; a ragged
+            # split (e.g. 256 features / 24) straddles the group boundary
+            # and would read the wrong input channels
             return None
     out_th = _ceil_div(l.out_h, tiles_h)
     out_tw = _ceil_div(l.out_w, tiles_w)
@@ -240,3 +270,13 @@ ALEXNET_LAYERS = (
 
 # The paper's own Fig. 6 plan for conv1: image split 3x3 = 9, features /2.
 PAPER_CONV1_PLAN = dict(tiles_h=3, tiles_w=3, feat_splits=2, in_splits=1)
+
+# The chainable end-to-end stack: AlexNet's overlapping 3/2 max-pools after
+# conv1/conv2/conv5 so each layer's output spatial dims feed the next
+# layer's declared input (227 ->55 ->27 ->27 ->13 ->13 ->13 ->13 ->6).
+# ALEXNET_LAYERS above keeps the paper's Table 1 per-layer conventions
+# (no pooling in the op/storage counts); executors chain ALEXNET_STACK.
+ALEXNET_STACK = tuple(
+    dataclasses.replace(l, pool=3, pool_stride=2)
+    if l.name in ("conv1", "conv2", "conv5") else l
+    for l in ALEXNET_LAYERS)

@@ -1,0 +1,170 @@
+"""Static tile schedule — the command-decoder instruction stream in software.
+
+The paper's accelerator (§3) owes its throughput to a *static* schedule:
+the command decoder replays a fixed list of DMA + compute instructions
+per layer, so the CU array never waits on control flow. This module is
+the JAX analogue: it lowers a decomposition ``Plan`` (paper §5) into a
+flat, array-encoded ``TileProgram`` whose per-step operands (input-window
+offsets, output offsets, channel-group offsets) can be scanned by a
+``lax.scan`` executor under ``jax.jit`` — one trace, zero per-tile Python.
+
+Regularisation: ``lax.dynamic_slice`` needs static slice *sizes*, so the
+program pads the (conv-padded) input and the output to a uniform tile
+grid and pads channels up to whole groups. Every step then moves blocks
+of identical shape — exactly the property that lets the paper's DMA
+engine double-buffer (DESIGN.md §2). Padding is zeros, which contribute
+exact 0.0 to every accumulation, so results match the ragged-tile
+interpreter bit for bit; the executor crops the padding off at the end.
+
+Instruction encoding (one row of ``operands()`` per step, int32):
+  [iy, ix,  oy, ox,  c0, wc0, f0]
+   input win  out tile  in-ch  weight-in-ch  out-ch offsets
+Steps are ordered tile-major, feature-group middle, in-channel-group
+innermost — the same walk as the interpreted executor, so partial-sum
+accumulation order (and therefore rounding) is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.decomposition import ConvLayer, Plan, _ceil_div
+
+
+@dataclasses.dataclass(frozen=True)
+class TileProgram:
+    """A lowered, fully static schedule for one CONV layer.
+
+    All geometry fields are Python ints (shape-static under jit); the
+    per-step operand arrays live in ``steps`` as a host-side numpy array
+    and are fed to the executor as a traced ``(n_steps, 7)`` int32 input,
+    so one compiled executable can in principle replay any schedule of
+    identical geometry.
+    """
+    layer: ConvLayer
+    plan: Plan
+    # padded-buffer geometry (static under jit)
+    pad_h: int              # padded input height (conv pad + tile pad)
+    pad_w: int
+    in_c_pad: int           # input channels incl. group-rounding zeros
+    w_in_pad: int           # weight fan-in dim incl. rounding zeros
+    out_h_pad: int          # uniform-tile output height
+    out_w_pad: int
+    out_c_pad: int
+    # per-step block shapes (static under jit)
+    ih: int                 # input window rows (halo-inclusive)
+    iw: int
+    cg: int                 # input channels read per step
+    fan: int                # weight fan-in per step
+    fg: int                 # output channels written per step
+    oh: int                 # output tile rows
+    ow: int
+    gcount: int             # feature_group_count of the per-step conv
+    # the instruction stream
+    steps: Tuple[Tuple[int, int, int, int, int, int, int], ...]
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+    def operands(self) -> np.ndarray:
+        """(n_steps, 7) int32 operand table for the scan executor."""
+        return np.asarray(self.steps, np.int32)
+
+    @property
+    def geometry(self):
+        """Hashable key of everything baked into the compiled executable."""
+        return (self.layer, self.plan.tiles_h, self.plan.tiles_w,
+                self.plan.feat_splits, self.plan.in_splits,
+                self.pad_h, self.pad_w, self.in_c_pad, self.w_in_pad,
+                self.out_h_pad, self.out_w_pad, self.out_c_pad,
+                self.ih, self.iw, self.cg, self.fan, self.fg,
+                self.oh, self.ow, self.gcount, self.n_steps)
+
+    def describe(self) -> str:
+        l = self.layer
+        return (f"{l.name}: {self.n_steps} steps, "
+                f"in-win {self.ih}x{self.iw}x{self.cg}, "
+                f"out-tile {self.oh}x{self.ow}x{self.fg}, "
+                f"weights {l.kernel}x{l.kernel}x{self.fan}x{self.fg}")
+
+
+def compile_layer(layer: ConvLayer, plan: Plan) -> TileProgram:
+    """Lower a Plan to a TileProgram (the §3 instruction stream).
+
+    Mirrors the interpreted executor's channel-group rules exactly:
+      * groups == 1: input channels split into ``in_splits`` groups of
+        ``cg`` (partial sums), features into ``feat_splits`` groups;
+      * groups > 1, feat_splits > 1: each feature group lies inside one
+        conv group (planner-aligned) and reads only that group's inputs;
+      * groups > 1, feat_splits == 1: one grouped conv per tile
+        (``gcount = groups``), no channel slicing.
+    """
+    l = layer
+    oth = _ceil_div(l.out_h, plan.tiles_h)
+    otw = _ceil_div(l.out_w, plan.tiles_w)
+    out_h_pad = plan.tiles_h * oth
+    out_w_pad = plan.tiles_w * otw
+    ih = (oth - 1) * l.stride + l.kernel
+    iw = (otw - 1) * l.stride + l.kernel
+    pad_h = (out_h_pad - 1) * l.stride + l.kernel
+    pad_w = (out_w_pad - 1) * l.stride + l.kernel
+
+    in_per_group = l.in_c // l.groups
+    out_per_group = l.out_c // l.groups
+    if l.groups == 1:
+        cg = _ceil_div(l.in_c, plan.in_splits)
+        fg = _ceil_div(l.out_c, plan.feat_splits)
+        in_c_pad = plan.in_splits * cg
+        out_c_pad = plan.feat_splits * fg
+        w_in_pad = in_c_pad
+        fan, gcount = cg, 1
+        chan_steps = [(c * cg, c * cg) for c in range(plan.in_splits)]
+    elif plan.feat_splits > 1:
+        # planner guarantees in_splits == 1 and feat alignment with groups
+        if l.out_c % plan.feat_splits or plan.feat_splits % l.groups:
+            raise ValueError(
+                f"{l.name}: feat_splits={plan.feat_splits} does not align "
+                f"with groups={l.groups}")
+        cg = fan = in_per_group
+        fg = l.out_c // plan.feat_splits
+        in_c_pad, out_c_pad, w_in_pad = l.in_c, l.out_c, in_per_group
+        gcount = 1
+        chan_steps = None  # c0 depends on the feature group, filled below
+    else:
+        cg, fan, fg = l.in_c, in_per_group, l.out_c
+        in_c_pad, out_c_pad, w_in_pad = l.in_c, l.out_c, in_per_group
+        gcount = l.groups
+        chan_steps = [(0, 0)]
+
+    steps = []
+    for ty in range(plan.tiles_h):
+        for tx in range(plan.tiles_w):
+            oy, ox = ty * oth, tx * otw
+            iy, ix = oy * l.stride, ox * l.stride
+            for f in range(plan.feat_splits):
+                f0 = f * fg
+                if chan_steps is not None:
+                    groups_of_f = chan_steps
+                else:
+                    g = f0 // out_per_group
+                    groups_of_f = [(g * in_per_group, 0)]
+                for c0, wc0 in groups_of_f:
+                    steps.append((iy, ix, oy, ox, c0, wc0, f0))
+
+    return TileProgram(
+        layer=l, plan=plan, pad_h=pad_h, pad_w=pad_w,
+        in_c_pad=in_c_pad, w_in_pad=w_in_pad,
+        out_h_pad=out_h_pad, out_w_pad=out_w_pad, out_c_pad=out_c_pad,
+        ih=ih, iw=iw, cg=cg, fan=fan, fg=fg, oh=oth, ow=otw,
+        gcount=gcount, steps=tuple(steps))
+
+
+def compile_network(layers: Sequence[ConvLayer],
+                    plans: Sequence[Plan]) -> List[TileProgram]:
+    """Lower a whole conv stack — one instruction stream per layer."""
+    if len(layers) != len(plans):
+        raise ValueError("layers and plans must pair up")
+    return [compile_layer(l, p) for l, p in zip(layers, plans)]

@@ -7,18 +7,39 @@ and never touches more than the planned working set per pass. Numerically
 identical to the direct convolution (asserted in tests), demonstrating
 that decomposition trades passes for buffer size without changing results.
 
+Two executors share the schedule (DESIGN.md §2):
+
+  * ``mode="interpret"`` — the original Python triple loop over
+    ``tile_grid``. One conv dispatch per pass, full-output
+    re-materialisation per tile. Faithful to the hardware walk, slow.
+  * ``mode="jit"`` (default) — lowers the Plan to a static
+    ``TileProgram`` (core/schedule.py) and replays it with ``lax.scan``
+    + ``lax.dynamic_slice`` / ``dynamic_update_slice`` under ``jax.jit``.
+    The schedule is traced once per (geometry, batch shape, conv
+    backend) and cached, like the paper's command decoder replaying a
+    fixed instruction stream. Outputs are bit-identical to the
+    interpreter whenever the channel splits divide evenly (all AlexNet
+    planner plans); ragged splits are zero-padded to keep scan shapes
+    static, which can let the conv backend reassociate sums by a few ULP.
+
 The per-tile compute is pluggable: the XLA conv (default) or the Pallas
-streaming kernel (kernels/conv_stream) on TPU.
+streaming kernel (kernels/conv_stream) via ``conv_fn=pallas_tile_conv_fn``
+or ``conv_backend="pallas"`` — tile windows arrive halo-inclusive and
+pre-padded, which is exactly the VALID layout ``conv2d_stream_raw``
+expects, so the planner's tile coordinates hand off to the kernel's
+row-block grid with no extra padding.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import functools
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core.decomposition import ConvLayer, Plan, tile_grid
+from repro.core.schedule import TileProgram, compile_layer
 
 
 def conv2d_direct(x: jax.Array, w: jax.Array, stride: int = 1,
@@ -38,15 +59,60 @@ def maxpool_direct(x: jax.Array, window: int, stride: int = 0) -> jax.Array:
         (1, stride, stride, 1), "VALID")
 
 
-def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
-                       w: jax.Array, b: Optional[jax.Array] = None,
-                       conv_fn: Optional[Callable] = None) -> jax.Array:
-    """Execute one CONV layer via the planned tile schedule.
+# ---------------------------------------------------------------------------
+# Pluggable tile-conv backends
+# ---------------------------------------------------------------------------
+
+def xla_tile_conv_fn(stride: int) -> Callable:
+    """Default backend: one XLA VALID conv per (halo-inclusive) tile."""
+    return lambda xt, wt: conv2d_direct(xt, wt, stride, 0)
+
+
+def pallas_tile_conv_fn(stride: int, row_block: int = 8,
+                        interpret: bool = True) -> Callable:
+    """Pallas streaming-kernel backend for the executor.
+
+    The executor hands over tiles that already carry their stride-aware
+    halo (``ih = (oh-1)*stride + K``), i.e. exactly the pre-padded VALID
+    input ``conv2d_stream_raw`` wants; the kernel's own row-block grid
+    pads/trims internally, and its ``H_out`` recomputed from the tile
+    equals the planner's ``oh`` — so no coordinate fix-up is needed at
+    the boundary.
+    """
+    from repro.kernels.conv_stream.kernel import conv2d_stream_raw
+
+    def fn(xt, wt):
+        rb = min(row_block, (xt.shape[1] - wt.shape[0]) // stride + 1)
+        return conv2d_stream_raw(xt, wt, stride=stride, row_block=rb,
+                                 interpret=interpret)
+    return fn
+
+
+def _resolve_conv_fn(conv_fn, conv_backend, stride):
+    if conv_fn is not None:
+        return conv_fn, id(conv_fn)
+    if conv_backend == "pallas":
+        return pallas_tile_conv_fn(stride), "pallas"
+    return xla_tile_conv_fn(stride), "xla"
+
+
+# ---------------------------------------------------------------------------
+# Interpreted executor (the original Python walk — kept as reference)
+# ---------------------------------------------------------------------------
+
+def run_layer_interpreted(layer: ConvLayer, plan: Plan, x: jax.Array,
+                          w: jax.Array, b: Optional[jax.Array] = None,
+                          conv_fn: Optional[Callable] = None) -> jax.Array:
+    """Execute one CONV layer via the planned tile schedule, in Python.
 
     x: (B, in_h, in_w, in_c); w: (K, K, in_c, out_c). Returns the full
     (B, out_h, out_w, out_c) output, assembled tile by tile."""
     l = layer
-    conv_fn = conv_fn or (lambda xt, wt: conv2d_direct(xt, wt, l.stride, 0))
+    if x.shape[1:] != (l.in_h, l.in_w, l.in_c):
+        raise ValueError(
+            f"{l.name}: input {x.shape[1:]} != declared "
+            f"({l.in_h}, {l.in_w}, {l.in_c})")
+    conv_fn = conv_fn or xla_tile_conv_fn(l.stride)
     B = x.shape[0]
     xp = jnp.pad(x, ((0, 0), (l.pad, l.pad), (l.pad, l.pad), (0, 0)))
     out = jnp.zeros((B, l.out_h, l.out_w, l.out_c), x.dtype)
@@ -93,11 +159,131 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
     return out
 
 
-def run_network_streamed(layers, plans, x, weights, conv_fn=None):
+# ---------------------------------------------------------------------------
+# Compiled executor: replay the TileProgram with lax.scan under jit
+# ---------------------------------------------------------------------------
+
+def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
+                   x, w, b, ops):
+    """Trace-time body shared by all compiled executables."""
+    g, l = program, program.layer
+    B = x.shape[0]
+    # pad up to the uniform tile grid, then trim: when the conv window
+    # never reaches the last input rows/cols ((in - K) % stride != 0),
+    # pad_h/pad_w is *smaller* than the conv-padded input
+    xp = jnp.pad(x, ((0, 0),
+                     (l.pad, max(0, g.pad_h - l.in_h - l.pad)),
+                     (l.pad, max(0, g.pad_w - l.in_w - l.pad)),
+                     (0, g.in_c_pad - l.in_c)))[:, :g.pad_h, :g.pad_w]
+    wp = jnp.pad(w, ((0, 0), (0, 0),
+                     (0, g.w_in_pad - w.shape[2]),
+                     (0, g.out_c_pad - l.out_c)))
+    out0 = jnp.zeros((B, g.out_h_pad, g.out_w_pad, g.out_c_pad), jnp.float32)
+
+    def step(out, op):
+        iy, ix, oy, ox, c0, wc0, f0 = (op[i] for i in range(7))
+        xt = lax.dynamic_slice(xp, (0, iy, ix, c0), (B, g.ih, g.iw, g.cg))
+        wt = lax.dynamic_slice(wp, (0, 0, wc0, f0),
+                               (l.kernel, l.kernel, g.fan, g.fg))
+        if g.gcount > 1:
+            part = conv2d_direct(xt, wt, l.stride, 0, groups=g.gcount)
+        else:
+            part = conv_fn(xt, wt)
+        cur = lax.dynamic_slice(out, (0, oy, ox, f0), (B, g.oh, g.ow, g.fg))
+        out = lax.dynamic_update_slice(
+            out, cur + part.astype(jnp.float32), (0, oy, ox, f0))
+        return out, None
+
+    out, _ = lax.scan(step, out0, ops)
+    out = out[:, :l.out_h, :l.out_w, :l.out_c]
+    if has_bias:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# One jitted executable per (schedule geometry, backend, batch shape).
+# The operand table is a traced input, so replays with the same geometry
+# hit this cache — the software command-decoder replaying its stream.
+_EXECUTOR_CACHE: dict = {}
+
+
+def run_layer_scheduled(program: TileProgram, x: jax.Array, w: jax.Array,
+                        b: Optional[jax.Array] = None,
+                        conv_fn: Optional[Callable] = None,
+                        conv_backend: str = "xla") -> jax.Array:
+    """Execute a pre-lowered TileProgram under the compiled scan executor.
+
+    A custom ``conv_fn`` is cached (and therefore retraced) by identity:
+    pass a *stable* callable, not a fresh per-call lambda, or every call
+    pays a full trace + compile. The named ``conv_backend`` strings cache
+    by name and never have this problem."""
+    l = program.layer
+    if x.shape[1:] != (l.in_h, l.in_w, l.in_c):
+        raise ValueError(
+            f"{l.name}: input {x.shape[1:]} != declared "
+            f"({l.in_h}, {l.in_w}, {l.in_c}) — schedule offsets would "
+            f"silently address the wrong pixels")
+    conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride)
+    key = (program.geometry, conv_key, b is not None, x.shape[0],
+           str(x.dtype))
+    fn = _EXECUTOR_CACHE.get(key)
+    if fn is None:
+        fn = _EXECUTOR_CACHE[key] = jax.jit(
+            functools.partial(_scan_executor, program, conv_fn,
+                              b is not None))
+    ops = jnp.asarray(program.operands())
+    bias = b if b is not None else jnp.zeros((0,), x.dtype)
+    return fn(x, w, bias, ops)
+
+
+def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
+                       w: jax.Array, b: Optional[jax.Array] = None,
+                       conv_fn: Optional[Callable] = None,
+                       mode: str = "jit",
+                       conv_backend: str = "xla") -> jax.Array:
+    """Execute one CONV layer via the planned tile schedule.
+
+    ``mode="jit"`` (default) compiles the schedule once (scan executor);
+    ``mode="interpret"`` runs the original per-tile Python loop."""
+    if mode == "interpret":
+        return run_layer_interpreted(layer, plan, x, w, b, conv_fn)
+    program = compile_layer(layer, plan)
+    return run_layer_scheduled(program, x, w, b, conv_fn=conv_fn,
+                               conv_backend=conv_backend)
+
+
+def run_network_streamed(layers, plans, x, weights, conv_fn=None,
+                         mode: str = "jit", conv_backend: str = "xla"):
     """Run a stack of CONV(+POOL) layers through the streaming executor."""
     for l, p, (w, b) in zip(layers, plans, weights):
-        x = run_layer_streamed(l, p, x, w, b, conv_fn)
+        x = run_layer_streamed(l, p, x, w, b, conv_fn, mode=mode,
+                               conv_backend=conv_backend)
         x = jnp.maximum(x, 0)  # ReLU
         if l.pool > 1:
             x = maxpool_direct(x, l.pool, l.pool_stride or l.pool)
     return x
+
+
+def network_forward_fn(programs: Sequence[TileProgram],
+                       conv_fn: Optional[Callable] = None,
+                       conv_backend: str = "xla") -> Callable:
+    """Whole-network forward over pre-lowered programs, built for one jit.
+
+    Returns ``f(x, weights, ops_list) -> y`` where ``weights`` is a list
+    of (w, b) pairs and ``ops_list`` the per-layer operand tables; the
+    caller jits it once per batch shape (see launch/session.py).
+    """
+    conv_fns = [_resolve_conv_fn(conv_fn, conv_backend, p.layer.stride)[0]
+                for p in programs]
+
+    def forward(x, weights, ops_list):
+        for prog, cf, (w, b), ops in zip(programs, conv_fns, weights,
+                                         ops_list):
+            l = prog.layer
+            x = _scan_executor(prog, cf, b is not None, x, w, b, ops)
+            x = jnp.maximum(x, 0)
+            if l.pool > 1:
+                x = maxpool_direct(x, l.pool, l.pool_stride or l.pool)
+        return x
+
+    return forward

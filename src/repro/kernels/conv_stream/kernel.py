@@ -2,7 +2,8 @@
 buffer, TPU-native (DESIGN.md §2).
 
 Dataflow mapping:
-  * row-block streaming with an Element-mode halo window  <- 2xN row buffer
+  * row-block streaming with an unblocked-indexing halo window <- 2xN row
+    buffer
     (each grid step's input block carries its own K-stride halo rows, so
     the convolution never stalls at block boundaries — paper §3)
   * weights resident across the row grid (weight-stationary CUs, §4.2)
@@ -93,8 +94,12 @@ def conv2d_stream_raw(x: jax.Array, w: jax.Array, *, stride: int = 1,
                                        jnp.float32),
         grid=(B, n_rb, n_co, n_ci),
         in_specs=[
-            pl.BlockSpec((1, pl.Element(R_in), W_pad, ci_b),
-                         lambda b, r, co, ci: (b, r * R * stride, 0, ci)),
+            # halo-overlapping row windows need element (unblocked)
+            # indexing: offsets are in elements for every dim
+            pl.BlockSpec((1, R_in, W_pad, ci_b),
+                         lambda b, r, co, ci: (b, r * R * stride, 0,
+                                               ci * ci_b),
+                         indexing_mode=pl.unblocked),
             pl.BlockSpec((K, K, ci_b, co_b),
                          lambda b, r, co, ci: (0, 0, ci, co)),
         ],

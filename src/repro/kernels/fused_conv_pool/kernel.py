@@ -88,8 +88,10 @@ def fused_conv_pool_raw(x: jax.Array, w: jax.Array, *, stride: int = 1,
             (B, n_rb * (R // pool), W_out // pool, n_co * co_b), jnp.float32),
         grid=(B, n_rb, n_co, n_ci),
         in_specs=[
-            pl.BlockSpec((1, pl.Element(R_in), W_need, ci_b),
-                         lambda b, r, co, ci: (b, r * R * stride, 0, ci)),
+            pl.BlockSpec((1, R_in, W_need, ci_b),
+                         lambda b, r, co, ci: (b, r * R * stride, 0,
+                                               ci * ci_b),
+                         indexing_mode=pl.unblocked),
             pl.BlockSpec((K, K, ci_b, co_b),
                          lambda b, r, co, ci: (0, 0, ci, co)),
         ],

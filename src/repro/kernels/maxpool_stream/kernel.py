@@ -3,8 +3,8 @@
 The paper's pooling module: a comparator + feedback register scanning the
 pool window as rows stream past, reconfigurable to kernel 2 or 3 with
 stride down to kernel-1 (AlexNet's overlapping 3/2). Row blocks stream
-through VMEM with an Element-mode halo of (pool - stride) rows — the
-scratchpad's buffered intermediate rows.
+through VMEM with an unblocked-indexing halo of (pool - stride) rows —
+the scratchpad's buffered intermediate rows.
 """
 from __future__ import annotations
 
@@ -52,8 +52,9 @@ def maxpool_stream_raw(x: jax.Array, *, pool: int, stride: int = 0,
         kern,
         out_shape=jax.ShapeDtypeStruct((B, n_rb * R, W_out, C), x.dtype),
         grid=(B, n_rb),
-        in_specs=[pl.BlockSpec((1, pl.Element(R_in), W_pad, C),
-                               lambda b, r: (b, r * R * ps, 0, 0))],
+        in_specs=[pl.BlockSpec((1, R_in, W_pad, C),
+                               lambda b, r: (b, r * R * ps, 0, 0),
+                               indexing_mode=pl.unblocked)],
         out_specs=pl.BlockSpec((1, R, W_out, C), lambda b, r: (b, r, 0, 0)),
         interpret=interpret,
     )(x)

@@ -1,7 +1,10 @@
-"""Serving entry point: batched prefill + autoregressive decode.
+"""Serving entry point: batched LM decode, or streaming CNN image serving.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --batch 4 --prompt-len 16 --gen-len 32
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn \
+      --batch 8 --requests 32
 """
 import argparse
 import dataclasses
@@ -16,13 +19,58 @@ from repro.models.module import init_params
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
+def cnn_main(args):
+    """Serve single-image requests through a compiled StreamingSession:
+    the whole AlexNet conv stack is lowered to tile schedules once, then
+    every ``--batch`` submits share one cached executable (paper §7)."""
+    from repro.core.decomposition import ALEXNET_STACK
+    from repro.launch.session import StreamingSession
+
+    layers = ALEXNET_STACK
+    weights = []
+    for i, l in enumerate(layers):
+        k1, k2 = jax.random.split(jax.random.key(i))
+        w = jax.random.normal(
+            k1, (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * 0.05
+        b = jax.random.normal(k2, (l.out_c,)) * 0.1
+        weights.append((w, b))
+    sess = StreamingSession.for_network(layers, weights,
+                                        sram_budget=args.sram_kb * 1024,
+                                        max_batch=args.batch)
+    imgs = jax.random.normal(jax.random.key(99),
+                             (args.requests, 227, 227, 3))
+    # warm-up: one padded flush compiles the (only) executable
+    t0 = time.perf_counter()
+    jax.block_until_ready(sess.result(sess.submit(imgs[0])))
+    print(f"compile+first flush: {time.perf_counter()-t0:.2f} s")
+
+    t0 = time.perf_counter()
+    tickets = [sess.submit(imgs[i]) for i in range(args.requests)]
+    sess.flush()
+    outs = [sess.result(t) for t in tickets]
+    jax.block_until_ready(outs[-1])
+    dt = time.perf_counter() - t0
+    print(f"served {args.requests} requests in {dt*1e3:.0f} ms "
+          f"({args.requests/dt:.1f} img/s), "
+          f"compiles={sess.compile_count}, batched calls={sess.calls}")
+    print(sess.describe())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--cnn", action="store_true",
+                    help="serve CNN image requests via StreamingSession")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="number of single-image requests (--cnn)")
+    ap.add_argument("--sram-kb", type=int, default=128,
+                    help="planner buffer budget in KiB (--cnn)")
     args = ap.parse_args()
+    if args.cnn:
+        return cnn_main(args)
 
     cfg = dataclasses.replace(C.reduced_config(args.arch),
                               compute_dtype="float32")

@@ -1,12 +1,16 @@
 """Property tests for the decomposition planner (paper §5) + Table 1/Fig 6
 ground truth."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
 
-from repro.core.decomposition import (ALEXNET_LAYERS, PAPER_CONV1_PLAN,
-                                      ConvLayer, evaluate,
+from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
+                                      PAPER_CONV1_PLAN, ConvLayer, evaluate,
                                       plan_decomposition, tile_grid)
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # dev-only dependency (requirements.txt)
+    hypothesis = None
 
 PAPER_TABLE1 = {  # name -> (ops M, in KB, out KB), paper's 1 KB = 1000 B
     "conv1": (211, 309, 581),
@@ -49,68 +53,94 @@ def test_all_alexnet_layers_plannable():
         assert p.sram_needed <= 128 * 1024
 
 
-layer_strategy = st.builds(
-    ConvLayer,
-    name=st.just("prop"),
-    in_h=st.integers(8, 64),
-    in_w=st.integers(8, 64),
-    in_c=st.integers(1, 64),
-    out_c=st.integers(1, 64),
-    kernel=st.sampled_from([1, 3, 5, 7]),
-    stride=st.sampled_from([1, 2]),
-    pad=st.integers(0, 3),
-)
+def test_grouped_feature_splits_nest_in_conv_groups():
+    """Ragged feature splits of a grouped conv (e.g. 256 features / 24)
+    straddle the group boundary and must be rejected by evaluate()."""
+    conv5 = ALEXNET_LAYERS[4]
+    assert evaluate(conv5, 1, 1, 24, 1) is None      # 256 % 24 != 0
+    assert evaluate(conv5, 1, 1, 16, 1) is not None  # nests cleanly
+    p = plan_decomposition(conv5, 128 * 1024)
+    assert conv5.out_c % p.feat_splits == 0
+    assert p.feat_splits % conv5.groups == 0 or p.feat_splits == 1
 
 
-@hypothesis.given(layer_strategy, st.integers(16, 512))
-@hypothesis.settings(max_examples=60, deadline=None)
-def test_plan_properties(layer, budget_kb):
-    if layer.out_h <= 0 or layer.out_w <= 0:
-        return
-    budget = budget_kb * 1024
-    try:
-        plan = plan_decomposition(layer, budget)
-    except ValueError:
-        return  # infeasible under tiny budgets is legal
-    # 1. fits the budget
-    assert plan.sram_needed <= budget
-    # 2. tiles cover the output exactly, no overlap
-    seen = set()
-    for t in tile_grid(layer, plan):
-        for y in range(t["oy"], t["oy"] + t["oh"]):
-            for x in range(t["ox"], t["ox"] + t["ow"]):
-                assert (y, x) not in seen
-                seen.add((y, x))
-        # input window in bounds of padded input
-        assert 0 <= t["iy"] and t["iy"] + t["ih"] <= layer.in_h + 2 * layer.pad
-        assert 0 <= t["ix"] and t["ix"] + t["iw"] <= layer.in_w + 2 * layer.pad
-    assert len(seen) == layer.out_h * layer.out_w
-    # 3. traffic >= the ideal single pass over the *effective* input (the
-    # streaming executor never reads rows/cols the conv window cannot
-    # reach: trailing remainder rows when (in - K) % stride != 0, or
-    # skipped pixels when kernel < stride).
-    eff_h = (layer.out_h - 1) * layer.stride + layer.kernel
-    eff_w = (layer.out_w - 1) * layer.stride + layer.kernel
-    eff_in = (min(eff_h, layer.in_h + 2 * layer.pad)
-              * min(eff_w, layer.in_w + 2 * layer.pad)
-              * layer.in_c * layer.bytes_per_elem)
-    if layer.kernel >= layer.stride:
-        ideal = min(eff_in, layer.in_bytes) + layer.out_bytes \
-            + layer.weight_bytes
-    else:
-        ideal = layer.out_bytes + layer.weight_bytes
-    assert plan.dram_traffic >= ideal - 1
+def test_alexnet_stack_chains():
+    """ALEXNET_STACK's pooled output dims feed the next layer's input."""
+    h, w = ALEXNET_STACK[0].in_h, ALEXNET_STACK[0].in_w
+    for l in ALEXNET_STACK:
+        assert (l.in_h, l.in_w) == (h, w), l.name
+        h, w = l.pooled_h, l.pooled_w
+    assert (h, w) == (6, 6)
 
 
-@hypothesis.given(layer_strategy)
-@hypothesis.settings(max_examples=30, deadline=None)
-def test_evaluate_monotone_in_tiles(layer):
-    """More image tiles never reduces traffic — when the kernel covers the
-    stride. (For kernel < stride, tiles skip subsampled pixels that a
-    single whole-image pass would stream, so tiling can legally win.)"""
-    if layer.out_h <= 0 or layer.out_w <= 0 or layer.kernel < layer.stride:
-        return
-    p1 = evaluate(layer, 1, 1, 1, 1)
-    p2 = evaluate(layer, 2, 2, 1, 1)
-    if p1 and p2:
-        assert p2.dram_traffic >= p1.dram_traffic - 1
+if hypothesis is not None:
+    layer_strategy = st.builds(
+        ConvLayer,
+        name=st.just("prop"),
+        in_h=st.integers(8, 64),
+        in_w=st.integers(8, 64),
+        in_c=st.integers(1, 64),
+        out_c=st.integers(1, 64),
+        kernel=st.sampled_from([1, 3, 5, 7]),
+        stride=st.sampled_from([1, 2]),
+        pad=st.integers(0, 3),
+    )
+
+    @hypothesis.given(layer_strategy, st.integers(16, 512))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_plan_properties(layer, budget_kb):
+        if layer.out_h <= 0 or layer.out_w <= 0:
+            return
+        budget = budget_kb * 1024
+        try:
+            plan = plan_decomposition(layer, budget)
+        except ValueError:
+            return  # infeasible under tiny budgets is legal
+        # 1. fits the budget
+        assert plan.sram_needed <= budget
+        # 2. tiles cover the output exactly, no overlap
+        seen = set()
+        for t in tile_grid(layer, plan):
+            for y in range(t["oy"], t["oy"] + t["oh"]):
+                for x in range(t["ox"], t["ox"] + t["ow"]):
+                    assert (y, x) not in seen
+                    seen.add((y, x))
+            # input window in bounds of padded input
+            assert (0 <= t["iy"]
+                    and t["iy"] + t["ih"] <= layer.in_h + 2 * layer.pad)
+            assert (0 <= t["ix"]
+                    and t["ix"] + t["iw"] <= layer.in_w + 2 * layer.pad)
+        assert len(seen) == layer.out_h * layer.out_w
+        # 3. traffic >= the ideal single pass over the *effective* input
+        # (the streaming executor never reads rows/cols the conv window
+        # cannot reach: trailing remainder rows when (in - K) % stride
+        # != 0, or skipped pixels when kernel < stride).
+        eff_h = (layer.out_h - 1) * layer.stride + layer.kernel
+        eff_w = (layer.out_w - 1) * layer.stride + layer.kernel
+        eff_in = (min(eff_h, layer.in_h + 2 * layer.pad)
+                  * min(eff_w, layer.in_w + 2 * layer.pad)
+                  * layer.in_c * layer.bytes_per_elem)
+        if layer.kernel >= layer.stride:
+            ideal = min(eff_in, layer.in_bytes) + layer.out_bytes \
+                + layer.weight_bytes
+        else:
+            ideal = layer.out_bytes + layer.weight_bytes
+        assert plan.dram_traffic >= ideal - 1
+
+    @hypothesis.given(layer_strategy)
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_evaluate_monotone_in_tiles(layer):
+        """More image tiles never reduces traffic — when the kernel covers
+        the stride. (For kernel < stride, tiles skip subsampled pixels
+        that a single whole-image pass would stream, so tiling can
+        legally win.)"""
+        if (layer.out_h <= 0 or layer.out_w <= 0
+                or layer.kernel < layer.stride):
+            return
+        p1 = evaluate(layer, 1, 1, 1, 1)
+        p2 = evaluate(layer, 2, 2, 1, 1)
+        if p1 and p2:
+            assert p2.dram_traffic >= p1.dram_traffic - 1
+else:
+    def test_property_cases_need_hypothesis():
+        pytest.importorskip("hypothesis")  # skips, visibly
