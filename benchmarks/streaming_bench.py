@@ -1,15 +1,23 @@
 """Streaming-executor benchmark: the AlexNet conv stack under the paper's
-128 KB plans, executed four ways —
+128 KB plans, executed every way the repo knows —
 
   direct               one fused XLA conv per layer (no decomposition)
   streamed-interpreted the original Python tile loop (one dispatch/pass)
-  streamed-jit         the compiled lax.scan TileProgram executor
-  streamed-pallas      the same executor with the Pallas conv kernel
+  streamed-scan        the compiled lax.scan TileProgram executor
+  streamed-wave        wave-parallel replay: every dependency-free wave
+                       of the schedule is ONE batched dispatch
+  streamed-pallas      the scan executor with the Pallas conv kernel
                        as its tile backend (interpret mode off-TPU)
+  wave+fused-pool      wave executor with CONV+POOL layers routed
+                       through the fused Pallas conv+ReLU+pool kernel
 
-The jit/pallas rows replay a static schedule from one compiled
+The scan/wave rows replay a static schedule from one compiled
 executable — the software analogue of the paper's command decoder — so
-the speedup over the interpreted walk is measured here, not asserted."""
+the speedups over the interpreted walk (and of wave over scan) are
+measured here, not asserted. ``run_structured`` returns machine-readable
+records; ``benchmarks/run.py --json-out`` persists them as
+``BENCH_streaming.json`` for the perf trajectory.
+"""
 import time
 
 import jax
@@ -17,7 +25,9 @@ import jax.numpy as jnp
 
 from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
                                       plan_decomposition)
+from repro.core.schedule import compile_network, partition_waves
 from repro.core.streaming import (conv2d_direct, maxpool_direct,
+                                  network_forward_fn, network_operands,
                                   run_layer_interpreted, run_layer_streamed,
                                   run_network_streamed)
 
@@ -32,39 +42,54 @@ def _time(fn, *args, reps: int = 3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def _conv1_rows() -> list[str]:
-    rows = []
+def _record(name, us, **meta):
+    return {"name": name, "us_per_call": round(us, 1), "meta": meta}
+
+
+def _conv1_records(reps: int) -> list[dict]:
+    recs = []
     l1 = ALEXNET_LAYERS[0]
     plan = plan_decomposition(l1, 128 * 1024)
     x = jax.random.normal(jax.random.key(0), (1, 227, 227, 3))
     w = jax.random.normal(jax.random.key(1), (11, 11, 3, 96)) * 0.05
 
     direct = jax.jit(lambda a, b: conv2d_direct(a, b, 4, 0))
-    us_direct, ref = _time(direct, x, w)
+    us_direct, ref = _time(direct, x, w, reps=reps)
 
     us_interp, got_i = _time(run_layer_interpreted, l1, plan, x, w, reps=1)
-    us_jit, got_j = _time(run_layer_streamed, l1, plan, x, w)
-    us_pal, got_p = _time(run_layer_streamed, l1, plan, x, w,
+    us_scan, got_s = _time(run_layer_streamed, l1, plan, x, w, mode="jit",
+                           reps=reps)
+    us_wave, got_w = _time(run_layer_streamed, l1, plan, x, w, mode="wave",
+                           reps=reps)
+    us_pal, got_p = _time(run_layer_streamed, l1, plan, x, w, mode="jit",
                           conv_backend="pallas", reps=1)
 
     err = max(float(jnp.max(jnp.abs(g - ref)))
-              for g in (got_i, got_j, got_p))
+              for g in (got_i, got_s, got_w, got_p))
     plan_s = f"{plan.tiles_h}x{plan.tiles_w}/f{plan.feat_splits}"
-    rows.append(f"streaming_conv1_direct,{us_direct:.0f},plan={plan_s}")
-    rows.append(f"streaming_conv1_interpreted,{us_interp:.0f},"
-                f"x{us_interp/us_direct:.1f}_vs_direct")
-    rows.append(f"streaming_conv1_jit,{us_jit:.0f},"
-                f"x{us_interp/us_jit:.1f}_vs_interpreted")
-    rows.append(f"streaming_conv1_pallas,{us_pal:.0f},"
-                f"sram={plan.sram_needed/1024:.0f}KiB max_err={err:.1e}")
-    return rows
+    n_steps = plan.tiles_h * plan.tiles_w * plan.feat_splits * plan.in_splits
+    recs.append(_record("streaming_conv1_direct", us_direct, plan=plan_s))
+    recs.append(_record("streaming_conv1_interpreted", us_interp,
+                        speedup_vs="direct",
+                        slowdown=round(us_interp / us_direct, 2)))
+    recs.append(_record("streaming_conv1_scan", us_scan,
+                        speedup_vs_interpreted=round(us_interp / us_scan, 2),
+                        n_steps=n_steps))
+    recs.append(_record("streaming_conv1_wave", us_wave,
+                        speedup_vs_scan=round(us_scan / us_wave, 2),
+                        n_waves=plan.in_splits))
+    recs.append(_record("streaming_conv1_pallas", us_pal,
+                        sram_kib=round(plan.sram_needed / 1024),
+                        max_err=err))
+    return recs
 
 
-def _stack_rows() -> list[str]:
+def _stack_records(reps: int) -> list[dict]:
     """Whole AlexNet conv stack (the paper's end-to-end workload)."""
-    rows = []
+    recs = []
     layers = ALEXNET_STACK
     plans = [plan_decomposition(l, 128 * 1024) for l in layers]
+    programs = compile_network(layers, plans)
     weights = []
     for i, l in enumerate(layers):
         w = jax.random.normal(
@@ -82,18 +107,57 @@ def _stack_rows() -> list[str]:
                 y = maxpool_direct(y, l.pool, l.pool_stride or l.pool)
         return y
 
-    us_direct, ref = _time(jax.jit(direct_net), x)
+    us_direct, ref = _time(jax.jit(direct_net), x, reps=reps)
     us_interp, got_i = _time(run_network_streamed, layers, plans, x,
                              weights, mode="interpret", reps=1)
-    us_jit, got_j = _time(run_network_streamed, layers, plans, x, weights)
-    err = max(float(jnp.max(jnp.abs(g - ref))) for g in (got_i, got_j))
-    rows.append(f"streaming_alexnet_direct,{us_direct:.0f},batch=1")
-    rows.append(f"streaming_alexnet_interpreted,{us_interp:.0f},"
-                f"x{us_interp/us_direct:.1f}_vs_direct")
-    rows.append(f"streaming_alexnet_jit,{us_jit:.0f},"
-                f"x{us_interp/us_jit:.1f}_vs_interpreted max_err={err:.1e}")
+
+    timings = {}
+    outs = {}
+    for label, mode, pool_backend in (("scan", "scan", "xla"),
+                                      ("wave", "wave", "xla"),
+                                      ("wave_fused_pool", "wave", "fused")):
+        fwd = jax.jit(network_forward_fn(programs, mode=mode,
+                                         pool_backend=pool_backend))
+        ops = network_operands(programs, mode)
+        r = 1 if pool_backend == "fused" else reps
+        timings[label], outs[label] = _time(fwd, x, weights, ops, reps=r)
+
+    n_steps = sum(p.n_steps for p in programs)
+    n_disp = sum(partition_waves(p).n_waves for p in programs)
+    err = max(float(jnp.max(jnp.abs(g - ref)))
+              for g in (got_i, *outs.values()))
+    recs.append(_record("streaming_alexnet_direct", us_direct, batch=1))
+    recs.append(_record("streaming_alexnet_interpreted", us_interp,
+                        slowdown_vs_direct=round(us_interp / us_direct, 2)))
+    recs.append(_record(
+        "streaming_alexnet_scan", timings["scan"],
+        speedup_vs_interpreted=round(us_interp / timings["scan"], 2),
+        serial_steps=n_steps))
+    recs.append(_record(
+        "streaming_alexnet_wave", timings["wave"],
+        speedup_vs_scan=round(timings["scan"] / timings["wave"], 2),
+        fused_dispatches=n_disp, serial_steps=n_steps))
+    recs.append(_record(
+        "streaming_alexnet_wave_fused_pool", timings["wave_fused_pool"],
+        speedup_vs_scan=round(timings["scan"]
+                              / timings["wave_fused_pool"], 2),
+        max_err=err))
+    return recs
+
+
+def run_structured(smoke: bool = False) -> list[dict]:
+    """All records; ``smoke=True`` is the 1-repeat CI configuration."""
+    reps = 1 if smoke else 3
+    return _conv1_records(reps) + _stack_records(reps)
+
+
+def format_rows(records: list[dict]) -> list[str]:
+    rows = []
+    for r in records:
+        meta = " ".join(f"{k}={v}" for k, v in r["meta"].items())
+        rows.append(f"{r['name']},{r['us_per_call']:.0f},{meta}")
     return rows
 
 
 def run() -> list[str]:
-    return _conv1_rows() + _stack_rows()
+    return format_rows(run_structured())

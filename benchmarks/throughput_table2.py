@@ -57,7 +57,7 @@ def run() -> list[str]:
 
 
 def _measured_rows(plans) -> list[str]:
-    """Wall-clock GOPS for conv1 under the same plans, all four executors.
+    """Wall-clock GOPS for conv1 under the same plans, all executors.
 
     Effective GOPS = layer num_ops / measured time: the analytic model
     above predicts the ASIC; these rows show what the software executors
@@ -79,9 +79,13 @@ def _measured_rows(plans) -> list[str]:
         ("direct", lambda: conv2d_direct(x, w, l.stride, l.pad)),
         ("streamed_interpreted",
          lambda: run_layer_interpreted(l, plan, x, w)),
-        ("streamed_jit", lambda: run_layer_streamed(l, plan, x, w)),
+        ("streamed_jit",
+         lambda: run_layer_streamed(l, plan, x, w, mode="jit")),
+        ("streamed_wave",
+         lambda: run_layer_streamed(l, plan, x, w, mode="wave")),
         ("streamed_pallas",
-         lambda: run_layer_streamed(l, plan, x, w, conv_backend="pallas")),
+         lambda: run_layer_streamed(l, plan, x, w, mode="jit",
+                                    conv_backend="pallas")),
     )
     rows = []
     for name, fn in execs:

@@ -7,9 +7,14 @@ from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
 from repro.core.quantization import (QFormat, calibrate_frac_bits,
                                      dequantize, fake_quant,
                                      fixed_point_matmul, quantize)
-from repro.core.schedule import (TileProgram, compile_layer,
-                                 compile_network)
-from repro.core.streaming import (conv2d_direct, maxpool_direct,
+from repro.core.schedule import (TileProgram, WaveProgram, compile_layer,
+                                 compile_layer_waves, compile_network,
+                                 compile_network_waves, partition_waves,
+                                 validate_waves)
+from repro.core.streaming import (clear_executor_cache, conv2d_direct,
+                                  executor_cache_size, maxpool_direct,
+                                  network_forward_fn, network_operands,
                                   run_layer_interpreted,
                                   run_layer_scheduled, run_layer_streamed,
-                                  run_network_streamed)
+                                  run_layer_wave, run_network_streamed,
+                                  set_executor_cache_limit)

@@ -168,3 +168,168 @@ def compile_network(layers: Sequence[ConvLayer],
     if len(layers) != len(plans):
         raise ValueError("layers and plans must pair up")
     return [compile_layer(l, p) for l, p in zip(layers, plans)]
+
+
+# ---------------------------------------------------------------------------
+# Wave partitioning — dependency-free dispatch groups (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WaveProgram:
+    """A TileProgram re-cut into dependency-free *waves*.
+
+    Two steps of a TileProgram depend on each other only when they write
+    the same output block (a partial-sum chain over in-channel groups);
+    steps with distinct ``(oy, ox, f0)`` are independent — the paper's
+    observation that independent tiles can keep every CU busy while DMA
+    double-buffers (§3). Wave ``k`` holds the ``k``-th step of every
+    chain, so within a wave all output blocks are distinct and the wave
+    can be dispatched as ONE batched conv; chains still accumulate in
+    their original order across waves, so rounding matches the serial
+    replay bit for bit.
+
+    ``compile_layer`` orders steps tile-major / feature-middle /
+    in-channel-innermost with equal-length chains, which makes every
+    wave (a) the same size, (b) an exact raster tiling of the padded
+    output, and (c) single-sourced per wave: every step of a wave reads
+    the same input-channel group, so the wave's feature axis collapses
+    into the conv's output-channel width and its tile axis into the
+    batch axis — ONE ordinary (or ``groups``-grouped) conv per wave,
+    encoded by ``tile_operands()``. ``partition_waves`` verifies all
+    three; the wave executor's static reassembly (transpose instead of
+    scatter) relies on them.
+    """
+    program: TileProgram
+    n_waves: int            # == chain length (in_splits for ungrouped)
+    wave_size: int          # steps per wave (tiles * feature groups)
+    waves: Tuple[Tuple[Tuple[int, int, int, int, int, int, int], ...], ...]
+    # per-wave, per-tile dispatch rows [iy, ix, oy, ox, c0, wc0]; the
+    # feature axis is folded into the conv's output-channel width
+    tile_waves: Tuple[Tuple[Tuple[int, int, int, int, int, int], ...], ...]
+    # channel geometry of one wave dispatch (static under jit)
+    c_width: int            # input channels read per dispatch
+    fan_width: int          # weight fan-in sliced per dispatch
+    dispatch_groups: int    # feature_group_count of the wave conv
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.tile_waves[0])
+
+    def operands(self) -> np.ndarray:
+        """(n_waves, wave_size, 7) int32 step table (analysis/tests)."""
+        return np.asarray(self.waves, np.int32)
+
+    def tile_operands(self) -> np.ndarray:
+        """(n_waves, n_tiles, 6) int32 dispatch table for the executor."""
+        return np.asarray(self.tile_waves, np.int32)
+
+    @property
+    def geometry(self):
+        return self.program.geometry + ("wave", self.n_waves,
+                                        self.wave_size, self.c_width,
+                                        self.fan_width, self.dispatch_groups)
+
+    def describe(self) -> str:
+        return (f"{self.program.layer.name}: {self.n_waves} wave(s) x "
+                f"{self.n_tiles} tiles "
+                f"({self.program.n_steps} serial steps fused)")
+
+
+def partition_waves(program: TileProgram) -> WaveProgram:
+    """Cut a TileProgram's step stream into dependency-free waves.
+
+    A step's wave index is its position within its output-block chain
+    (the number of earlier steps writing the same ``(oy, ox, f0)``), so
+    by construction no wave contains two writers of one block and
+    cross-wave order preserves every chain's accumulation order.
+    """
+    chain_pos: dict = {}
+    waves: List[List[tuple]] = []
+    for s in program.steps:
+        key = (s[2], s[3], s[6])            # (oy, ox, f0)
+        k = chain_pos.get(key, 0)
+        chain_pos[key] = k + 1
+        if k == len(waves):
+            waves.append([])
+        waves[k].append(s)
+
+    sizes = {len(w) for w in waves}
+    if len(sizes) > 1:
+        raise ValueError(
+            f"{program.layer.name}: ragged waves {sorted(sizes)} — "
+            f"chains of unequal length cannot batch into one dispatch")
+
+    l = program.layer
+    grouped = l.groups > 1
+    tile_waves = []
+    for k, wave in enumerate(waves):
+        rows, seen = [], set()
+        for s in wave:
+            tile = (s[0], s[1], s[2], s[3])     # (iy, ix, oy, ox)
+            if tile in seen:
+                continue
+            seen.add(tile)
+            # grouped layers read the full channel width per dispatch
+            # (the conv group structure routes each feature to its
+            # inputs); ungrouped layers read this wave's channel group
+            rows.append(tile + ((0, 0) if grouped else (s[4], s[5])))
+        tile_waves.append(tuple(rows))
+
+    wp = WaveProgram(
+        program=program, n_waves=len(waves), wave_size=len(waves[0]),
+        waves=tuple(tuple(w) for w in waves),
+        tile_waves=tuple(tile_waves),
+        c_width=program.in_c_pad if grouped else program.cg,
+        fan_width=program.w_in_pad if grouped else program.cg,
+        dispatch_groups=l.groups)
+    validate_waves(wp)
+    return wp
+
+
+def validate_waves(wp: WaveProgram) -> None:
+    """Check the invariants the wave executor's fused dispatch bakes in.
+
+    1. No wave co-schedules two steps writing the same output block
+       (independence — the property tests exercise this directly).
+    2. Every wave lists blocks in raster order (tile-major, feature
+       innermost) and exactly tiles the padded output, so stacked conv
+       results reassemble by reshape/transpose with no scatter.
+    3. Ungrouped layers: all steps of a wave read one input-channel
+       group, so the feature axis can fold into the conv's output
+       channels (grouped layers instead read the full width and let
+       ``feature_group_count`` route features to their inputs).
+    """
+    g, plan = wp.program, wp.program.plan
+    expect = [(ty * g.oh, tx * g.ow, f * g.fg)
+              for ty in range(plan.tiles_h)
+              for tx in range(plan.tiles_w)
+              for f in range(plan.feat_splits)]
+    for k, wave in enumerate(wp.waves):
+        blocks = [(s[2], s[3], s[6]) for s in wave]
+        if len(set(blocks)) != len(blocks):
+            dupes = {b for b in blocks if blocks.count(b) > 1}
+            raise ValueError(
+                f"{g.layer.name} wave {k}: output blocks written twice "
+                f"within one wave: {sorted(dupes)}")
+        if blocks != expect:
+            raise ValueError(
+                f"{g.layer.name} wave {k}: blocks deviate from the "
+                f"raster tiling the batched reassembly assumes")
+        if g.layer.groups == 1:
+            chans = {(s[4], s[5]) for s in wave}
+            if len(chans) != 1:
+                raise ValueError(
+                    f"{g.layer.name} wave {k}: mixed input-channel "
+                    f"groups {sorted(chans)} cannot fuse into one "
+                    f"dispatch")
+
+
+def compile_layer_waves(layer: ConvLayer, plan: Plan) -> WaveProgram:
+    """Lower straight to the wave-parallel form."""
+    return partition_waves(compile_layer(layer, plan))
+
+
+def compile_network_waves(layers: Sequence[ConvLayer],
+                          plans: Sequence[Plan]) -> List[WaveProgram]:
+    """Wave-partitioned instruction streams for a whole conv stack."""
+    return [partition_waves(p) for p in compile_network(layers, plans)]

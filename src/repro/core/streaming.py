@@ -7,13 +7,13 @@ and never touches more than the planned working set per pass. Numerically
 identical to the direct convolution (asserted in tests), demonstrating
 that decomposition trades passes for buffer size without changing results.
 
-Two executors share the schedule (DESIGN.md §2):
+Three executors share the schedule (DESIGN.md §2):
 
   * ``mode="interpret"`` — the original Python triple loop over
     ``tile_grid``. One conv dispatch per pass, full-output
     re-materialisation per tile. Faithful to the hardware walk, slow.
-  * ``mode="jit"`` (default) — lowers the Plan to a static
-    ``TileProgram`` (core/schedule.py) and replays it with ``lax.scan``
+  * ``mode="jit"`` — lowers the Plan to a static ``TileProgram``
+    (core/schedule.py) and replays it with ``lax.scan``
     + ``lax.dynamic_slice`` / ``dynamic_update_slice`` under ``jax.jit``.
     The schedule is traced once per (geometry, batch shape, conv
     backend) and cached, like the paper's command decoder replaying a
@@ -21,6 +21,18 @@ Two executors share the schedule (DESIGN.md §2):
     interpreter whenever the channel splits divide evenly (all AlexNet
     planner plans); ragged splits are zero-padded to keep scan shapes
     static, which can let the conv backend reassociate sums by a few ULP.
+  * ``mode="wave"`` (default) — partitions the step stream into
+    dependency-free *waves* (core/schedule.py ``partition_waves``):
+    every step of a wave writes a distinct output block, so the whole
+    wave's input windows are gathered with one vmapped
+    ``dynamic_slice``, convolved by ONE batched dispatch, and
+    reassembled into the padded output by a static transpose. Only
+    in-channel partial-sum chains serialise — across waves — so a layer
+    costs O(in_splits) big dispatches instead of O(n_steps) small ones
+    (the paper's §3 point that independent tiles keep the CU array
+    saturated). Accumulation order per output element is unchanged
+    (wave k is always chain position k), so outputs stay bit-identical
+    to the interpreter on evenly-split plans.
 
 The per-tile compute is pluggable: the XLA conv (default) or the Pallas
 streaming kernel (kernels/conv_stream) via ``conv_fn=pallas_tile_conv_fn``
@@ -32,6 +44,9 @@ row-block grid with no extra padding.
 from __future__ import annotations
 
 import functools
+import itertools
+import weakref
+from collections import OrderedDict
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -39,7 +54,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.decomposition import ConvLayer, Plan, tile_grid
-from repro.core.schedule import TileProgram, compile_layer
+from repro.core.schedule import (TileProgram, WaveProgram, compile_layer,
+                                 partition_waves)
 
 
 def conv2d_direct(x: jax.Array, w: jax.Array, stride: int = 1,
@@ -63,13 +79,34 @@ def maxpool_direct(x: jax.Array, window: int, stride: int = 0) -> jax.Array:
 # Pluggable tile-conv backends
 # ---------------------------------------------------------------------------
 
+# single policy point for all Pallas launches (kernels import it too)
+from repro.kernels.common import pallas_interpret_default  # noqa: E402
+
+
+# partition_waves is pure on a hashable frozen TileProgram; memoizing it
+# means a session's forward builder, its operand tables, and benchmarks
+# re-partitioning the same program all share one lowering + validation
+_partition_waves_cached = functools.lru_cache(maxsize=128)(partition_waves)
+
+
+def _normalize_mode(mode: str) -> str:
+    """One executor vocabulary across layer- and network-level APIs:
+    ``jit`` and ``scan`` name the same serial scan replay."""
+    if mode in ("jit", "scan"):
+        return "scan"
+    if mode in ("wave", "interpret"):
+        return mode
+    raise ValueError(f"unknown executor mode {mode!r} "
+                     f"(expected wave | scan/jit | interpret)")
+
+
 def xla_tile_conv_fn(stride: int) -> Callable:
     """Default backend: one XLA VALID conv per (halo-inclusive) tile."""
     return lambda xt, wt: conv2d_direct(xt, wt, stride, 0)
 
 
 def pallas_tile_conv_fn(stride: int, row_block: int = 8,
-                        interpret: bool = True) -> Callable:
+                        interpret: Optional[bool] = None) -> Callable:
     """Pallas streaming-kernel backend for the executor.
 
     The executor hands over tiles that already carry their stride-aware
@@ -78,8 +115,14 @@ def pallas_tile_conv_fn(stride: int, row_block: int = 8,
     pads/trims internally, and its ``H_out`` recomputed from the tile
     equals the planner's ``oh`` — so no coordinate fix-up is needed at
     the boundary.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter
+    elsewhere (``pallas_interpret_default``).
     """
     from repro.kernels.conv_stream.kernel import conv2d_stream_raw
+
+    if interpret is None:
+        interpret = pallas_interpret_default()
 
     def fn(xt, wt):
         rb = min(row_block, (xt.shape[1] - wt.shape[0]) // stride + 1)
@@ -88,9 +131,39 @@ def pallas_tile_conv_fn(stride: int, row_block: int = 8,
     return fn
 
 
-def _resolve_conv_fn(conv_fn, conv_backend, stride):
+# Stable identities for custom conv_fn callables: id() can be recycled
+# after a GC'd callable, which would silently serve an executable traced
+# for the *wrong* conv function. Tokens from a monotonic counter held in
+# a WeakKeyDictionary are never reused, and die with the callable.
+_CONV_FN_TOKENS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_TOKEN_COUNTER = itertools.count()
+
+
+def _conv_fn_token(fn: Callable) -> str:
+    try:
+        tok = _CONV_FN_TOKENS.get(fn)
+        if tok is None:
+            tok = f"custom:{next(_TOKEN_COUNTER)}"
+            _CONV_FN_TOKENS[fn] = tok
+        return tok
+    except TypeError:
+        # unhashable / non-weakrefable callable: unique token per call —
+        # always retraces, never aliases
+        return f"custom-uncacheable:{next(_TOKEN_COUNTER)}"
+
+
+def _resolve_conv_fn(conv_fn, conv_backend, stride,
+                     conv_fn_name: Optional[str] = None):
+    """Pick the tile-conv callable and a *stable* cache key for it.
+
+    A caller-supplied ``conv_fn_name`` keys the executable cache
+    directly (the caller asserts two same-named callables trace
+    identically); otherwise custom callables get a weakref-backed token
+    that is never recycled.
+    """
     if conv_fn is not None:
-        return conv_fn, id(conv_fn)
+        return conv_fn, (f"named:{conv_fn_name}" if conv_fn_name
+                         else _conv_fn_token(conv_fn))
     if conv_backend == "pallas":
         return pallas_tile_conv_fn(stride), "pallas"
     return xla_tile_conv_fn(stride), "xla"
@@ -163,14 +236,13 @@ def run_layer_interpreted(layer: ConvLayer, plan: Plan, x: jax.Array,
 # Compiled executor: replay the TileProgram with lax.scan under jit
 # ---------------------------------------------------------------------------
 
-def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
-                   x, w, b, ops):
-    """Trace-time body shared by all compiled executables."""
-    g, l = program, program.layer
-    B = x.shape[0]
-    # pad up to the uniform tile grid, then trim: when the conv window
-    # never reaches the last input rows/cols ((in - K) % stride != 0),
-    # pad_h/pad_w is *smaller* than the conv-padded input
+def _pad_to_grid(g: TileProgram, x, w):
+    """Pad input/weights up to the program's uniform tile grid.
+
+    When the conv window never reaches the last input rows/cols
+    ((in - K) % stride != 0), pad_h/pad_w is *smaller* than the
+    conv-padded input, hence the trailing trim."""
+    l = g.layer
     xp = jnp.pad(x, ((0, 0),
                      (l.pad, max(0, g.pad_h - l.in_h - l.pad)),
                      (l.pad, max(0, g.pad_w - l.in_w - l.pad)),
@@ -178,6 +250,15 @@ def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
     wp = jnp.pad(w, ((0, 0), (0, 0),
                      (0, g.w_in_pad - w.shape[2]),
                      (0, g.out_c_pad - l.out_c)))
+    return xp, wp
+
+
+def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
+                   x, w, b, ops):
+    """Trace-time body shared by all compiled executables."""
+    g, l = program, program.layer
+    B = x.shape[0]
+    xp, wp = _pad_to_grid(g, x, w)
     out0 = jnp.zeros((B, g.out_h_pad, g.out_w_pad, g.out_c_pad), jnp.float32)
 
     def step(out, op):
@@ -201,36 +282,159 @@ def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
     return out.astype(x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Wave executor: one fused dispatch per dependency-free wave (ISSUE 2)
+# ---------------------------------------------------------------------------
+
+def _wave_executor(wprog: WaveProgram, conv_fn: Callable, has_bias: bool,
+                   x, w, b, wave_ops):
+    """Replay a WaveProgram: ONE fused conv dispatch per wave.
+
+    Per wave: every tile's halo-inclusive input window is gathered with
+    a vmapped ``dynamic_slice`` (the DMA engine fetching all of a wave's
+    tiles at once) and stacked along the batch axis; the wave's feature
+    groups all read the same input-channel group, so they collapse into
+    the conv's output-channel width. The whole wave is then one ordinary
+    ``(n_tiles·B, ih, iw, c)`` conv over the wave's weight slice — the
+    software analogue of the paper's saturated CU array. Because
+    ``validate_waves`` pinned the wave's blocks to the raster tiling of
+    the padded output, the stacked results reassemble with a static
+    transpose — no scatter, no serial update chain.
+
+    Waves accumulate in chain order onto a zero-initialised fp32 buffer,
+    reproducing the interpreter's per-element partial-sum order exactly
+    (0 + p_0 + p_1 + ... + bias), hence bit-identical outputs on
+    evenly-split plans.
+    """
+    g = wprog.program
+    l, plan = g.layer, g.plan
+    B = x.shape[0]
+    T = wprog.n_tiles
+    xp, wp = _pad_to_grid(g, x, w)
+
+    if wprog.dispatch_groups > 1:
+        conv = lambda xt, wt: conv2d_direct(xt, wt, l.stride, 0,
+                                            groups=wprog.dispatch_groups)
+    else:
+        conv = conv_fn
+
+    def one_wave(ops):
+        # ops (n_tiles, 6): [iy, ix, oy, ox, c0, wc0]
+        wins = jax.vmap(lambda op: lax.dynamic_slice(
+            xp, (0, op[0], op[1], op[4]),
+            (B, g.ih, g.iw, wprog.c_width)))(ops)
+        wt = lax.dynamic_slice(
+            wp, (0, 0, ops[0, 5], 0),
+            (l.kernel, l.kernel, wprog.fan_width, g.out_c_pad))
+        part = conv(wins.reshape(T * B, g.ih, g.iw, wprog.c_width), wt)
+        part = part.astype(jnp.float32)     # (T*B, oh, ow, out_c_pad)
+        img = part.reshape(plan.tiles_h, plan.tiles_w, B, g.oh, g.ow,
+                           g.out_c_pad)
+        img = img.transpose(2, 0, 3, 1, 4, 5)
+        return img.reshape(B, g.out_h_pad, g.out_w_pad, g.out_c_pad)
+
+    out0 = jnp.zeros((B, g.out_h_pad, g.out_w_pad, g.out_c_pad),
+                     jnp.float32)
+    if wprog.n_waves == 1:
+        out = out0 + one_wave(wave_ops[0])
+    else:
+        # partial-sum chains serialise across waves (and only there);
+        # scanning the wave axis keeps the traced graph O(1) in n_waves
+        out, _ = lax.scan(lambda acc, ops: (acc + one_wave(ops), None),
+                          out0, wave_ops)
+    out = out[:, :l.out_h, :l.out_w, :l.out_c]
+    if has_bias:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def run_layer_wave(wprog: WaveProgram, x: jax.Array, w: jax.Array,
+                   b: Optional[jax.Array] = None,
+                   conv_fn: Optional[Callable] = None,
+                   conv_backend: str = "xla",
+                   conv_fn_name: Optional[str] = None) -> jax.Array:
+    """Execute a pre-partitioned WaveProgram under the wave executor."""
+    l = wprog.program.layer
+    _check_input(l, x)
+    conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride,
+                                         conv_fn_name)
+    key = (wprog.geometry, conv_key, b is not None, x.shape[0],
+           str(x.dtype))
+    fn = _cached_executable(key, lambda: jax.jit(
+        functools.partial(_wave_executor, wprog, conv_fn, b is not None)))
+    ops = jnp.asarray(wprog.tile_operands())
+    bias = b if b is not None else jnp.zeros((0,), x.dtype)
+    return fn(x, w, bias, ops)
+
+
 # One jitted executable per (schedule geometry, backend, batch shape).
 # The operand table is a traced input, so replays with the same geometry
 # hit this cache — the software command-decoder replaying its stream.
-_EXECUTOR_CACHE: dict = {}
+# LRU-bounded: long-lived servers cycling through many geometries or
+# custom conv_fns evict the coldest executable instead of growing
+# without bound.
+_EXECUTOR_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_EXECUTOR_CACHE_LIMIT = 64
 
 
-def run_layer_scheduled(program: TileProgram, x: jax.Array, w: jax.Array,
-                        b: Optional[jax.Array] = None,
-                        conv_fn: Optional[Callable] = None,
-                        conv_backend: str = "xla") -> jax.Array:
-    """Execute a pre-lowered TileProgram under the compiled scan executor.
+def clear_executor_cache() -> None:
+    """Drop every cached executable (tests; long-lived server hygiene)."""
+    _EXECUTOR_CACHE.clear()
 
-    A custom ``conv_fn`` is cached (and therefore retraced) by identity:
-    pass a *stable* callable, not a fresh per-call lambda, or every call
-    pays a full trace + compile. The named ``conv_backend`` strings cache
-    by name and never have this problem."""
-    l = program.layer
+
+def executor_cache_size() -> int:
+    return len(_EXECUTOR_CACHE)
+
+
+def set_executor_cache_limit(limit: int) -> None:
+    """Bound the executable cache; evicts least-recently-used over it."""
+    global _EXECUTOR_CACHE_LIMIT
+    if limit < 1:
+        raise ValueError("executor cache limit must be >= 1")
+    _EXECUTOR_CACHE_LIMIT = limit
+    while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_LIMIT:
+        _EXECUTOR_CACHE.popitem(last=False)
+
+
+def _cached_executable(key: tuple, build: Callable) -> Callable:
+    fn = _EXECUTOR_CACHE.get(key)
+    if fn is None:
+        fn = _EXECUTOR_CACHE[key] = build()
+    else:
+        _EXECUTOR_CACHE.move_to_end(key)
+    while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_LIMIT:
+        _EXECUTOR_CACHE.popitem(last=False)
+    return fn
+
+
+def _check_input(l: ConvLayer, x: jax.Array) -> None:
     if x.shape[1:] != (l.in_h, l.in_w, l.in_c):
         raise ValueError(
             f"{l.name}: input {x.shape[1:]} != declared "
             f"({l.in_h}, {l.in_w}, {l.in_c}) — schedule offsets would "
             f"silently address the wrong pixels")
-    conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride)
+
+
+def run_layer_scheduled(program: TileProgram, x: jax.Array, w: jax.Array,
+                        b: Optional[jax.Array] = None,
+                        conv_fn: Optional[Callable] = None,
+                        conv_backend: str = "xla",
+                        conv_fn_name: Optional[str] = None) -> jax.Array:
+    """Execute a pre-lowered TileProgram under the compiled scan executor.
+
+    A custom ``conv_fn`` caches by a stable weakref-backed token (or by
+    ``conv_fn_name`` when given): pass a *stable* callable or a name,
+    not a fresh per-call lambda, or every call pays a full trace +
+    compile. The named ``conv_backend`` strings cache by name and never
+    have this problem."""
+    l = program.layer
+    _check_input(l, x)
+    conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride,
+                                         conv_fn_name)
     key = (program.geometry, conv_key, b is not None, x.shape[0],
            str(x.dtype))
-    fn = _EXECUTOR_CACHE.get(key)
-    if fn is None:
-        fn = _EXECUTOR_CACHE[key] = jax.jit(
-            functools.partial(_scan_executor, program, conv_fn,
-                              b is not None))
+    fn = _cached_executable(key, lambda: jax.jit(
+        functools.partial(_scan_executor, program, conv_fn, b is not None)))
     ops = jnp.asarray(program.operands())
     bias = b if b is not None else jnp.zeros((0,), x.dtype)
     return fn(x, w, bias, ops)
@@ -239,21 +443,31 @@ def run_layer_scheduled(program: TileProgram, x: jax.Array, w: jax.Array,
 def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
                        w: jax.Array, b: Optional[jax.Array] = None,
                        conv_fn: Optional[Callable] = None,
-                       mode: str = "jit",
-                       conv_backend: str = "xla") -> jax.Array:
+                       mode: str = "wave",
+                       conv_backend: str = "xla",
+                       conv_fn_name: Optional[str] = None) -> jax.Array:
     """Execute one CONV layer via the planned tile schedule.
 
-    ``mode="jit"`` (default) compiles the schedule once (scan executor);
-    ``mode="interpret"`` runs the original per-tile Python loop."""
+    ``mode="wave"`` (default) batches each dependency-free wave into one
+    fused dispatch; ``mode="jit"`` (alias ``"scan"``) compiles the
+    serial scan replay; ``mode="interpret"`` runs the original per-tile
+    Python loop."""
+    mode = _normalize_mode(mode)
     if mode == "interpret":
         return run_layer_interpreted(layer, plan, x, w, b, conv_fn)
+    if mode == "wave":
+        wprog = _partition_waves_cached(compile_layer(layer, plan))
+        return run_layer_wave(wprog, x, w, b, conv_fn=conv_fn,
+                              conv_backend=conv_backend,
+                              conv_fn_name=conv_fn_name)
     program = compile_layer(layer, plan)
     return run_layer_scheduled(program, x, w, b, conv_fn=conv_fn,
-                               conv_backend=conv_backend)
+                               conv_backend=conv_backend,
+                               conv_fn_name=conv_fn_name)
 
 
 def run_network_streamed(layers, plans, x, weights, conv_fn=None,
-                         mode: str = "jit", conv_backend: str = "xla"):
+                         mode: str = "wave", conv_backend: str = "xla"):
     """Run a stack of CONV(+POOL) layers through the streaming executor."""
     for l, p, (w, b) in zip(layers, plans, weights):
         x = run_layer_streamed(l, p, x, w, b, conv_fn, mode=mode,
@@ -266,24 +480,69 @@ def run_network_streamed(layers, plans, x, weights, conv_fn=None,
 
 def network_forward_fn(programs: Sequence[TileProgram],
                        conv_fn: Optional[Callable] = None,
-                       conv_backend: str = "xla") -> Callable:
+                       conv_backend: str = "xla",
+                       mode: str = "wave",
+                       pool_backend: str = "xla") -> Callable:
     """Whole-network forward over pre-lowered programs, built for one jit.
 
     Returns ``f(x, weights, ops_list) -> y`` where ``weights`` is a list
-    of (w, b) pairs and ``ops_list`` the per-layer operand tables; the
-    caller jits it once per batch shape (see launch/session.py).
+    of (w, b) pairs and ``ops_list`` the per-layer operand tables (build
+    them with ``network_operands(programs, mode)`` — wave mode expects
+    wave-encoded tables); the caller jits it once per batch shape (see
+    launch/session.py).
+
+    ``mode`` picks the executor per conv layer: ``"wave"`` (default, one
+    fused dispatch per dependency-free wave) or ``"scan"`` (alias
+    ``"jit"``, serial replay). ``pool_backend="fused"`` routes
+    CONV+POOL layers through the Pallas fused conv+ReLU+pool kernel
+    instead — the pre-pool activation then never round-trips through a
+    standalone ``maxpool_direct`` (paper §4.3); grouped pool layers run
+    one fused call per conv group.
     """
+    mode = _normalize_mode(mode)
+    if mode == "interpret":
+        raise ValueError("the compiled network path has no interpret "
+                         "mode — use run_network_streamed for that")
+    if pool_backend not in ("xla", "fused"):
+        raise ValueError(f"unknown pool backend {pool_backend!r} "
+                         f"(expected xla | fused)")
     conv_fns = [_resolve_conv_fn(conv_fn, conv_backend, p.layer.stride)[0]
                 for p in programs]
+    wprogs = [_partition_waves_cached(p) if mode == "wave" else None
+              for p in programs]
+    if pool_backend == "fused":
+        from repro.kernels.fused_conv_pool.ops import fused_conv_pool
 
     def forward(x, weights, ops_list):
-        for prog, cf, (w, b), ops in zip(programs, conv_fns, weights,
-                                         ops_list):
+        for prog, wprog, cf, (w, b), ops in zip(programs, wprogs, conv_fns,
+                                                weights, ops_list):
             l = prog.layer
-            x = _scan_executor(prog, cf, b is not None, x, w, b, ops)
+            if pool_backend == "fused" and l.pool > 1:
+                x = fused_conv_pool(
+                    x, w, b, stride=l.stride, pad=l.pad, pool=l.pool,
+                    pool_stride=l.pool_stride or l.pool, relu=True,
+                    groups=l.groups).astype(x.dtype)
+                continue
+            if wprog is not None:
+                x = _wave_executor(wprog, cf, b is not None, x, w, b, ops)
+            else:
+                x = _scan_executor(prog, cf, b is not None, x, w, b, ops)
             x = jnp.maximum(x, 0)
             if l.pool > 1:
                 x = maxpool_direct(x, l.pool, l.pool_stride or l.pool)
         return x
 
     return forward
+
+
+def network_operands(programs: Sequence[TileProgram], mode: str = "wave"):
+    """Per-layer operand tables matching ``network_forward_fn(mode=...)``:
+    wave-encoded ``(n_waves, n_tiles, 6)`` dispatch tables for wave
+    mode, flat ``(n_steps, 7)`` step tables for scan."""
+    mode = _normalize_mode(mode)
+    if mode == "interpret":
+        raise ValueError("interpret mode has no operand tables")
+    if mode == "wave":
+        return [jnp.asarray(_partition_waves_cached(p).tile_operands())
+                for p in programs]
+    return [jnp.asarray(p.operands()) for p in programs]

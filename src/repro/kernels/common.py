@@ -1,0 +1,14 @@
+"""Shared kernel-launch policy helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def pallas_interpret_default() -> bool:
+    """Pallas interpret mode unless a real TPU backs the computation.
+
+    Compiled Pallas lowering needs Mosaic/TPU; everywhere else (CPU CI,
+    GPU hosts) the kernels run under the interpreter. Callers pass
+    ``interpret=None`` to defer to this single policy point.
+    """
+    return jax.default_backend() != "tpu"

@@ -59,11 +59,15 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, stride: int, R: int,
 def conv2d_stream_raw(x: jax.Array, w: jax.Array, *, stride: int = 1,
                       row_block: int = 8, cout_block: int = 128,
                       cin_block: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """x (B, H, W, Cin) pre-padded; w (K, K, Cin, Cout). VALID conv.
 
-    Returns (B, H_out, W_out, Cout) float32.
+    ``interpret=None`` auto-detects the backend: compiled on TPU,
+    interpreter elsewhere. Returns (B, H_out, W_out, Cout) float32.
     """
+    if interpret is None:
+        from repro.kernels.common import pallas_interpret_default
+        interpret = pallas_interpret_default()
     B, H, W, Cin = x.shape
     K, _, _, Cout = w.shape
     H_out = (H - K) // stride + 1

@@ -15,8 +15,11 @@ from repro.kernels.conv_stream.kernel import conv2d_stream_raw
 def conv2d_stream(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
                   stride: int = 1, pad: int = 0, row_block: int = 8,
                   cout_block: int = 128, cin_block: int = 128,
-                  interpret: bool = True) -> jax.Array:
-    """SAME/VALID streaming conv with optional bias. Output fp32."""
+                  interpret: bool | None = None) -> jax.Array:
+    """SAME/VALID streaming conv with optional bias. Output fp32.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter off it.
+    """
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
     out = conv2d_stream_raw(x, w, stride=stride, row_block=row_block,

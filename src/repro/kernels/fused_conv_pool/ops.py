@@ -1,4 +1,6 @@
 """jit'd public wrapper for fused conv+pool."""
+from __future__ import annotations
+
 import functools
 
 import jax
@@ -7,15 +9,8 @@ import jax.numpy as jnp
 from repro.kernels.fused_conv_pool.kernel import fused_conv_pool_raw
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad", "pool", "relu",
-                                             "row_block", "cout_block",
-                                             "cin_block", "interpret"))
-def fused_conv_pool(x, w, b=None, *, stride: int = 1, pad: int = 0,
-                    pool: int = 2, relu: bool = True, row_block: int = 8,
-                    cout_block: int = 128, cin_block: int = 128,
-                    interpret: bool = True):
-    if pad:
-        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+def _one_group(x, w, b, *, stride, pool, pool_stride, relu, row_block,
+               cout_block, cin_block, interpret):
     if b is not None:
         # fold bias into an extra all-ones input channel
         B, H, W, _ = x.shape
@@ -25,6 +20,40 @@ def fused_conv_pool(x, w, b=None, *, stride: int = 1, pad: int = 0,
         center = K // 2
         wb = wb.at[center, center, 0, :].set(b.astype(w.dtype))
         w = jnp.concatenate([w, wb], axis=2)
-    return fused_conv_pool_raw(x, w, stride=stride, pool=pool, relu=relu,
+    return fused_conv_pool_raw(x, w, stride=stride, pool=pool,
+                               pool_stride=pool_stride, relu=relu,
                                row_block=row_block, cout_block=cout_block,
                                cin_block=cin_block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "pool",
+                                             "pool_stride", "relu", "groups",
+                                             "row_block", "cout_block",
+                                             "cin_block", "interpret"))
+def fused_conv_pool(x, w, b=None, *, stride: int = 1, pad: int = 0,
+                    pool: int = 2, pool_stride: int = 0, relu: bool = True,
+                    groups: int = 1, row_block: int = 8,
+                    cout_block: int = 128, cin_block: int = 128,
+                    interpret: bool | None = None):
+    """Conv + bias + ReLU + max-pool in one fused kernel.
+
+    ``pool_stride`` 0 means ``pool``; smaller values overlap (AlexNet
+    3/2). Grouped convs (w is (K, K, Cin/groups, Cout)) run one fused
+    call per group over that group's channel slices. ``interpret=None``
+    auto-detects the backend (compiled on TPU, interpreter elsewhere).
+    """
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    kw = dict(stride=stride, pool=pool, pool_stride=pool_stride, relu=relu,
+              row_block=row_block, cout_block=cout_block,
+              cin_block=cin_block, interpret=interpret)
+    if groups == 1:
+        return _one_group(x, w, b, **kw)
+    cin_g = x.shape[-1] // groups
+    cout_g = w.shape[-1] // groups
+    outs = [_one_group(x[..., g * cin_g:(g + 1) * cin_g],
+                       w[..., g * cout_g:(g + 1) * cout_g],
+                       None if b is None else b[g * cout_g:(g + 1) * cout_g],
+                       **kw)
+            for g in range(groups)]
+    return jnp.concatenate(outs, axis=-1)

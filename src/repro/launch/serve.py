@@ -36,7 +36,9 @@ def cnn_main(args):
         weights.append((w, b))
     sess = StreamingSession.for_network(layers, weights,
                                         sram_budget=args.sram_kb * 1024,
-                                        max_batch=args.batch)
+                                        max_batch=args.batch,
+                                        mode=args.mode,
+                                        pool_backend=args.pool_backend)
     imgs = jax.random.normal(jax.random.key(99),
                              (args.requests, 227, 227, 3))
     # warm-up: one padded flush compiles the (only) executable
@@ -68,6 +70,13 @@ def main():
                     help="number of single-image requests (--cnn)")
     ap.add_argument("--sram-kb", type=int, default=128,
                     help="planner buffer budget in KiB (--cnn)")
+    ap.add_argument("--mode", choices=("wave", "scan"), default="wave",
+                    help="streaming executor: wave-parallel fused "
+                         "dispatches (default) or serial scan replay")
+    ap.add_argument("--pool-backend", choices=("xla", "fused"),
+                    default="xla",
+                    help="CONV+POOL layers: XLA maxpool after the "
+                         "executor, or the fused Pallas conv+pool kernel")
     args = ap.parse_args()
     if args.cnn:
         return cnn_main(args)

@@ -4,10 +4,12 @@ The paper's deployment story (§7, the FPGA face-detection demo) is a
 fixed network whose tile schedule is burned into the command decoder
 once, then replayed per frame. ``StreamingSession`` is that story for
 the JAX executor: it lowers every layer of a conv stack to a static
-``TileProgram`` (core/schedule.py) at construction, then compiles ONE
-whole-network executable per batch shape and replays it for every
-request — weights and operand tables are traced arguments, so weight
-updates and schedule replays never retrigger compilation.
+``TileProgram`` (core/schedule.py) at construction — wave-partitioned
+by default, so every dependency-free wave of a layer's schedule is one
+fused dispatch — then compiles ONE whole-network executable per batch
+shape and replays it for every request — weights and operand tables are
+traced arguments, so weight updates and schedule replays never
+retrigger compilation.
 
 Serving modes:
 
@@ -30,24 +32,35 @@ import jax.numpy as jnp
 
 from repro.core.decomposition import ConvLayer, Plan, plan_decomposition
 from repro.core.schedule import TileProgram, compile_network
-from repro.core.streaming import network_forward_fn
+from repro.core.streaming import network_forward_fn, network_operands
 
 
 class StreamingSession:
-    """One compiled (network, plan-set, batch-shape) serving session."""
+    """One compiled (network, plan-set, batch-shape) serving session.
+
+    ``mode`` picks the per-layer executor the session compiles:
+    ``"wave"`` (default — each dependency-free wave of the schedule is
+    one fused dispatch) or ``"scan"`` (serial step replay).
+    ``pool_backend="fused"`` serves CONV+POOL layers through the Pallas
+    fused conv+ReLU+pool kernel.
+    """
 
     def __init__(self, layers: Sequence[ConvLayer], plans: Sequence[Plan],
                  weights: Sequence[Tuple[jax.Array, Optional[jax.Array]]],
                  conv_fn: Optional[Callable] = None,
-                 conv_backend: str = "xla", max_batch: int = 8):
+                 conv_backend: str = "xla", max_batch: int = 8,
+                 mode: str = "wave", pool_backend: str = "xla"):
         self.layers = tuple(layers)
         self.plans = tuple(plans)
         self.weights = list(weights)
         self.max_batch = int(max_batch)
+        self.mode = mode
+        self.pool_backend = pool_backend
         self.programs: List[TileProgram] = compile_network(layers, plans)
-        self._ops = [jnp.asarray(p.operands()) for p in self.programs]
+        self._ops = network_operands(self.programs, mode)
         self._forward = network_forward_fn(self.programs, conv_fn,
-                                           conv_backend)
+                                           conv_backend, mode=mode,
+                                           pool_backend=pool_backend)
         self._executables: Dict[tuple, Callable] = {}
         self.compile_count = 0          # traces performed (the spy)
         self.calls = 0                  # compiled-executable invocations
@@ -144,6 +157,7 @@ class StreamingSession:
 
     def describe(self) -> str:
         lines = [f"StreamingSession: {len(self.programs)} layers, "
+                 f"mode={self.mode}, pool_backend={self.pool_backend}, "
                  f"max_batch={self.max_batch}, "
                  f"executables={len(self._executables)}, "
                  f"compiles={self.compile_count}, calls={self.calls}"]

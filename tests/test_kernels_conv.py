@@ -78,6 +78,60 @@ def test_fused_conv_pool_matches_ref(H, W, Cin, Cout, K, stride, p):
     assert jnp.max(jnp.abs(got - ref)) < 1e-4
 
 
+OVERLAP_CASES = [
+    # H, W, Cin, Cout, K, stride, pool, pool_stride
+    (18, 18, 4, 8, 3, 1, 3, 2),     # AlexNet-style overlapping 3/2
+    (27, 27, 8, 16, 5, 1, 3, 2),
+    (58, 58, 3, 16, 11, 4, 3, 2),   # conv1-like stride-4 + 3/2 pool
+    (16, 16, 4, 8, 3, 1, 3, 1),     # dense overlap
+]
+
+
+@pytest.mark.parametrize("H,W,Cin,Cout,K,stride,p,ps", OVERLAP_CASES)
+def test_fused_conv_pool_overlapping(H, W, Cin, Cout, K, stride, p, ps):
+    """Overlapping max-pool (stride < pool) fused behind the conv."""
+    from jax import lax
+    x = jax.random.normal(jax.random.key(1), (2, H, W, Cin))
+    w = jax.random.normal(jax.random.key(2), (K, K, Cin, Cout)) * 0.1
+    got = fused_conv_pool(x, w, stride=stride, pool=p, pool_stride=ps,
+                          row_block=6, cout_block=8, cin_block=8)
+    y = jnp.maximum(lax.conv_general_dilated(
+        x, w, (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")), 0)
+    ref = lax.reduce_window(y, -jnp.inf, lax.max, (1, p, p, 1),
+                            (1, ps, ps, 1), "VALID")
+    assert got.shape == ref.shape
+    assert jnp.max(jnp.abs(got - ref)) < 1e-4
+
+
+def test_fused_conv_pool_grouped():
+    """Grouped conv (AlexNet conv2/4/5 style) runs one fused call per
+    group over that group's channel slices."""
+    from jax import lax
+    x = jax.random.normal(jax.random.key(1), (2, 27, 27, 8))
+    w = jax.random.normal(jax.random.key(2), (5, 5, 4, 16)) * 0.1
+    b = jax.random.normal(jax.random.key(3), (16,)) * 0.5
+    got = fused_conv_pool(x, w, b, stride=1, pad=2, pool=3, pool_stride=2,
+                          groups=2, row_block=8, cout_block=8, cin_block=8)
+    xp = jnp.pad(x, ((0, 0), (2, 2), (2, 2), (0, 0)))
+    y = lax.conv_general_dilated(
+        xp, w, (1, 1), "VALID", feature_group_count=2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    y = jnp.maximum(y, 0)
+    ref = lax.reduce_window(y, -jnp.inf, lax.max, (1, 3, 3, 1),
+                            (1, 2, 2, 1), "VALID")
+    assert got.shape == ref.shape
+    assert jnp.max(jnp.abs(got - ref)) < 1e-4
+
+
+def test_fused_conv_pool_rejects_bad_pool_stride():
+    from repro.kernels.fused_conv_pool.kernel import fused_conv_pool_raw
+    x = jnp.zeros((1, 8, 8, 4))
+    w = jnp.zeros((3, 3, 4, 8))
+    with pytest.raises(ValueError, match="pool_stride"):
+        fused_conv_pool_raw(x, w, pool=2, pool_stride=3)
+
+
 def test_fused_conv_pool_bias_folding():
     from jax import lax
     x = jax.random.normal(jax.random.key(1), (2, 16, 16, 4))
