@@ -1,0 +1,143 @@
+"""Benchmark-regression gate: diff a fresh ``BENCH_streaming.json``
+against the committed baseline and fail on executor slowdowns.
+
+CI runners and the machine that recorded the committed baseline differ,
+so absolute microseconds are not comparable across them. The gate
+therefore normalises every executor record by the summed executor time
+of its benchmark group (conv1 / alexnet) in the same run — a mode's
+*share* of the group is machine-portable (a uniformly faster or slower
+machine cancels exactly, and the sum is far less noisy than any single
+row) — and fails when any executor mode's share grew by more than
+``--threshold`` (default 20%, relative) over the baseline.
+``--absolute`` compares raw microseconds instead (same-machine runs).
+
+Also checks the modelled DRAM traffic (``dram_traffic_bytes``): traffic
+is a pure function of the plans, so any *increase* is a planner/lowering
+regression, not noise, and fails at any size.
+
+``--current`` accepts several measurement files; they merge by
+per-record minimum before comparing. CI runs the smoke bench more than
+once and gates on the merge: contention tends to poison a whole run at
+a time, so each mode's best-of-runs is a far steadier estimator, while
+a genuine regression survives every run.
+
+    python -m benchmarks.regression_gate \
+        --baseline BENCH_streaming.json --current bench_1.json bench_2.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# benchmark groups: records sharing a normalising sum
+GROUPS = ("streaming_conv1", "streaming_alexnet")
+# the gate covers the multi-rep executor-mode rows (scan/wave/
+# megakernel). Skipped: direct rows (the undecomposed reference, they
+# only anchor the group sum's scale), and the one-shot rows —
+# interpreted walk, Pallas tile backend, fused-pool backend — which are
+# single-rep by design (benchmarks/run.py --smoke omits them entirely)
+# and far too noisy to gate
+SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool")
+
+
+def _records(payload: dict) -> dict:
+    return {r["name"]: r for r in payload["records"]}
+
+
+def merge_min(payloads: "list[dict]") -> dict:
+    """Merge measurement runs by per-record minimum ``us_per_call``
+    (meta rides along from the winning run)."""
+    merged: dict = {}
+    for payload in payloads:
+        for name, rec in _records(payload).items():
+            if name not in merged \
+                    or rec["us_per_call"] < merged[name]["us_per_call"]:
+                merged[name] = rec
+    return {"records": list(merged.values())}
+
+
+def _group(name: str) -> str | None:
+    for prefix in GROUPS:
+        if name.startswith(prefix):
+            return prefix
+    return None
+
+
+def _gated(names) -> list[str]:
+    return [n for n in names
+            if not n.endswith(SKIP_SUFFIXES) and _group(n)]
+
+
+def _group_sums(recs: dict, names) -> dict:
+    sums: dict = {}
+    for n in names:
+        sums[_group(n)] = sums.get(_group(n), 0.0) \
+            + recs[n]["us_per_call"]
+    return sums
+
+
+def compare(baseline: dict, current: dict, threshold: float = 0.20,
+            absolute: bool = False) -> list[str]:
+    """Return a list of failure strings (empty = gate passes)."""
+    base, cur = _records(baseline), _records(current)
+    shared = [n for n in _gated(base) if n in cur]
+    b_sums, c_sums = _group_sums(base, shared), _group_sums(cur, shared)
+    failures = []
+    for name in shared:
+        brec, crec = base[name], cur[name]
+        if absolute:
+            b_cost, c_cost = brec["us_per_call"], crec["us_per_call"]
+        else:
+            b_cost = brec["us_per_call"] / b_sums[_group(name)]
+            c_cost = crec["us_per_call"] / c_sums[_group(name)]
+        if b_cost <= 0:
+            continue
+        slowdown = c_cost / b_cost - 1.0
+        if slowdown > threshold:
+            unit = "us" if absolute else "share of group"
+            failures.append(
+                f"{name}: {b_cost:.3g} -> {c_cost:.3g} {unit} "
+                f"(+{slowdown * 100:.0f}% > {threshold * 100:.0f}%)")
+        b_traffic = brec.get("meta", {}).get("dram_traffic_bytes")
+        c_traffic = crec.get("meta", {}).get("dram_traffic_bytes")
+        if b_traffic and c_traffic and c_traffic > b_traffic:
+            failures.append(
+                f"{name}: modelled DRAM traffic grew "
+                f"{b_traffic} -> {c_traffic} bytes (plan regression)")
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_streaming.json")
+    ap.add_argument("--current", required=True, nargs="+",
+                    help="freshly measured BENCH_streaming.json file(s); "
+                         "several merge by per-record minimum")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed fractional slowdown (default 0.20)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw us_per_call (same-machine runs)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    currents = []
+    for path in args.current:
+        with open(path) as f:
+            currents.append(json.load(f))
+    current = merge_min(currents)
+    failures = compare(baseline, current, args.threshold, args.absolute)
+    compared = [n for n in _gated(_records(baseline))
+                if n in _records(current)]
+    if failures:
+        print("benchmark regression gate FAILED:", file=sys.stderr)
+        for fail in failures:
+            print("  " + fail, file=sys.stderr)
+        raise SystemExit(1)
+    print(f"benchmark regression gate passed "
+          f"({len(compared)} records within {args.threshold:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,10 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   streaming_bench    — tiled streaming executor end-to-end
 
 ``--json-out BENCH_streaming.json`` additionally persists the streaming
-records machine-readably (the perf trajectory future PRs diff against);
-``--smoke`` is the 1-repeat CI configuration and ``--only`` restricts
-which modules run, e.g.::
+records machine-readably (the perf trajectory future PRs diff against —
+``benchmarks/regression_gate.py`` fails CI on >20% normalised executor
+slowdowns); ``--smoke`` is the reduced-reps CI configuration and
+``--only`` restricts which modules run, e.g.::
 
     python -m benchmarks.run --only streaming_bench --smoke \
         --json-out BENCH_streaming.json
@@ -25,7 +26,7 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="1 repeat per timing (CI smoke mode)")
+                    help="reduced repeats per timing (CI smoke mode)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write streaming records as JSON (runs "
                          "streaming_bench even if --only excludes it)")

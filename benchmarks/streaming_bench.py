@@ -10,13 +10,21 @@
                        as its tile backend (interpret mode off-TPU)
   wave+fused-pool      wave executor with CONV+POOL layers routed
                        through the fused Pallas conv+ReLU+pool kernel
+  streamed-megakernel  ONE persistent Pallas kernel per layer: VMEM
+                       scratch carries partial sums across the chain,
+                       bias+ReLU+pool fused in the epilogue
 
 The scan/wave rows replay a static schedule from one compiled
 executable — the software analogue of the paper's command decoder — so
-the speedups over the interpreted walk (and of wave over scan) are
-measured here, not asserted. ``run_structured`` returns machine-readable
-records; ``benchmarks/run.py --json-out`` persists them as
-``BENCH_streaming.json`` for the perf trajectory.
+the speedups over the interpreted walk (and of wave over scan, and of
+the megakernel over wave) are measured here, not asserted. Every
+executor row also reports its estimated DRAM traffic from the
+decomposition model (``dram_traffic_bytes``; wave/scan additionally
+``psum_hbm_bytes`` — the fp32 partial-sum round-trips the megakernel's
+VMEM accumulator eliminates). ``run_structured`` returns
+machine-readable records; ``benchmarks/run.py --json-out`` persists
+them as ``BENCH_streaming.json`` for the perf trajectory, which
+``benchmarks/regression_gate.py`` diffs in CI.
 """
 import time
 
@@ -26,27 +34,51 @@ import jax.numpy as jnp
 from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
                                       plan_decomposition)
 from repro.core.schedule import compile_network, partition_waves
-from repro.core.streaming import (conv2d_direct, maxpool_direct,
-                                  network_forward_fn, network_operands,
-                                  run_layer_interpreted, run_layer_streamed,
-                                  run_network_streamed)
+from repro.core.streaming import (_network_kernel_program, conv2d_direct,
+                                  maxpool_direct, network_forward_fn,
+                                  network_operands, run_layer_interpreted,
+                                  run_layer_streamed, run_network_streamed)
+
+
+def psum_hbm_bytes(programs) -> int:
+    """fp32 partial-sum HBM round-trips of the wave/scan executors: the
+    accumulator is re-read and re-written once per chain step beyond
+    the first — exactly the traffic the megakernel's VMEM scratch
+    removes (paper §3's on-chip psum bank)."""
+    total = 0
+    for p in programs:
+        n_waves = partition_waves(p).n_waves
+        total += 2 * (n_waves - 1) * p.out_h_pad * p.out_w_pad \
+            * p.out_c_pad * 4
+    return total
+
+
+def plan_traffic_bytes(plans) -> int:
+    """Decomposition-model DRAM bytes (paper §5 accounting) for a set
+    of layer plans."""
+    return sum(p.dram_traffic for p in plans)
 
 
 def _time(fn, *args, reps: int = 3, **kw):
+    """min-of-reps timing: robust to CI-runner interference, which the
+    regression gate needs (a co-scheduled neighbour inflates means but
+    rarely every single rep)."""
     out = fn(*args, **kw)          # warm-up / compile
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
 
 
 def _record(name, us, **meta):
     return {"name": name, "us_per_call": round(us, 1), "meta": meta}
 
 
-def _conv1_records(reps: int) -> list[dict]:
+def _conv1_records(reps: int, smoke: bool) -> list[dict]:
     recs = []
     l1 = ALEXNET_LAYERS[0]
     plan = plan_decomposition(l1, 128 * 1024)
@@ -56,35 +88,47 @@ def _conv1_records(reps: int) -> list[dict]:
     direct = jax.jit(lambda a, b: conv2d_direct(a, b, 4, 0))
     us_direct, ref = _time(direct, x, w, reps=reps)
 
-    us_interp, got_i = _time(run_layer_interpreted, l1, plan, x, w, reps=1)
     us_scan, got_s = _time(run_layer_streamed, l1, plan, x, w, mode="jit",
                            reps=reps)
     us_wave, got_w = _time(run_layer_streamed, l1, plan, x, w, mode="wave",
                            reps=reps)
-    us_pal, got_p = _time(run_layer_streamed, l1, plan, x, w, mode="jit",
-                          conv_backend="pallas", reps=1)
+    us_mega, got_m = _time(run_layer_streamed, l1, plan, x, w,
+                           mode="megakernel", reps=reps)
+    outs = [got_s, got_w, got_m]
 
-    err = max(float(jnp.max(jnp.abs(g - ref)))
-              for g in (got_i, got_s, got_w, got_p))
     plan_s = f"{plan.tiles_h}x{plan.tiles_w}/f{plan.feat_splits}"
     n_steps = plan.tiles_h * plan.tiles_w * plan.feat_splits * plan.in_splits
+    traffic = plan.dram_traffic
     recs.append(_record("streaming_conv1_direct", us_direct, plan=plan_s))
-    recs.append(_record("streaming_conv1_interpreted", us_interp,
-                        speedup_vs="direct",
-                        slowdown=round(us_interp / us_direct, 2)))
+    if not smoke:            # one-shot rows: skipped in CI smoke mode
+        us_interp, got_i = _time(run_layer_interpreted, l1, plan, x, w,
+                                 reps=1)
+        recs.append(_record("streaming_conv1_interpreted", us_interp,
+                            speedup_vs="direct",
+                            slowdown=round(us_interp / us_direct, 2),
+                            dram_traffic_bytes=traffic))
+        outs.append(got_i)
     recs.append(_record("streaming_conv1_scan", us_scan,
-                        speedup_vs_interpreted=round(us_interp / us_scan, 2),
-                        n_steps=n_steps))
+                        n_steps=n_steps, dram_traffic_bytes=traffic))
     recs.append(_record("streaming_conv1_wave", us_wave,
                         speedup_vs_scan=round(us_scan / us_wave, 2),
-                        n_waves=plan.in_splits))
-    recs.append(_record("streaming_conv1_pallas", us_pal,
-                        sram_kib=round(plan.sram_needed / 1024),
-                        max_err=err))
+                        n_waves=plan.in_splits,
+                        dram_traffic_bytes=traffic))
+    recs.append(_record("streaming_conv1_megakernel", us_mega,
+                        speedup_vs_wave=round(us_wave / us_mega, 2),
+                        dram_traffic_bytes=traffic))
+    if not smoke:
+        us_pal, got_p = _time(run_layer_streamed, l1, plan, x, w,
+                              mode="jit", conv_backend="pallas", reps=1)
+        outs.append(got_p)
+        recs.append(_record(
+            "streaming_conv1_pallas", us_pal,
+            sram_kib=round(plan.sram_needed / 1024),
+            max_err=max(float(jnp.max(jnp.abs(g - ref))) for g in outs)))
     return recs
 
 
-def _stack_records(reps: int) -> list[dict]:
+def _stack_records(reps: int, smoke: bool) -> list[dict]:
     """Whole AlexNet conv stack (the paper's end-to-end workload)."""
     recs = []
     layers = ALEXNET_STACK
@@ -108,14 +152,15 @@ def _stack_records(reps: int) -> list[dict]:
         return y
 
     us_direct, ref = _time(jax.jit(direct_net), x, reps=reps)
-    us_interp, got_i = _time(run_network_streamed, layers, plans, x,
-                             weights, mode="interpret", reps=1)
 
+    modes = [("scan", "scan", "xla"),
+             ("wave", "wave", "xla"),
+             ("megakernel", "megakernel", "xla")]
+    if not smoke:            # one-shot row: skipped in CI smoke mode
+        modes.append(("wave_fused_pool", "wave", "fused"))
     timings = {}
     outs = {}
-    for label, mode, pool_backend in (("scan", "scan", "xla"),
-                                      ("wave", "wave", "xla"),
-                                      ("wave_fused_pool", "wave", "fused")):
+    for label, mode, pool_backend in modes:
         fwd = jax.jit(network_forward_fn(programs, mode=mode,
                                          pool_backend=pool_backend))
         ops = network_operands(programs, mode)
@@ -124,31 +169,55 @@ def _stack_records(reps: int) -> list[dict]:
 
     n_steps = sum(p.n_steps for p in programs)
     n_disp = sum(partition_waves(p).n_waves for p in programs)
-    err = max(float(jnp.max(jnp.abs(g - ref)))
-              for g in (got_i, *outs.values()))
+    traffic = plan_traffic_bytes(plans)
+    psum = psum_hbm_bytes(programs)
+    kprogs = [_network_kernel_program(p) for p in programs]
+    mega_traffic = plan_traffic_bytes(
+        [kp.wave.program.plan for kp in kprogs])
     recs.append(_record("streaming_alexnet_direct", us_direct, batch=1))
-    recs.append(_record("streaming_alexnet_interpreted", us_interp,
-                        slowdown_vs_direct=round(us_interp / us_direct, 2)))
+    if not smoke:
+        us_interp, got_i = _time(run_network_streamed, layers, plans, x,
+                                 weights, mode="interpret", reps=1)
+        outs["interpreted"] = got_i
+        recs.append(_record(
+            "streaming_alexnet_interpreted", us_interp,
+            slowdown_vs_direct=round(us_interp / us_direct, 2),
+            dram_traffic_bytes=traffic))
     recs.append(_record(
         "streaming_alexnet_scan", timings["scan"],
-        speedup_vs_interpreted=round(us_interp / timings["scan"], 2),
-        serial_steps=n_steps))
+        serial_steps=n_steps, dram_traffic_bytes=traffic,
+        psum_hbm_bytes=psum))
     recs.append(_record(
         "streaming_alexnet_wave", timings["wave"],
         speedup_vs_scan=round(timings["scan"] / timings["wave"], 2),
-        fused_dispatches=n_disp, serial_steps=n_steps))
+        fused_dispatches=n_disp, serial_steps=n_steps,
+        dram_traffic_bytes=traffic, psum_hbm_bytes=psum))
+    if not smoke:
+        recs.append(_record(
+            "streaming_alexnet_wave_fused_pool",
+            timings["wave_fused_pool"],
+            speedup_vs_scan=round(timings["scan"]
+                                  / timings["wave_fused_pool"], 2),
+            max_err=max(float(jnp.max(jnp.abs(g - ref)))
+                        for g in outs.values())))
     recs.append(_record(
-        "streaming_alexnet_wave_fused_pool", timings["wave_fused_pool"],
-        speedup_vs_scan=round(timings["scan"]
-                              / timings["wave_fused_pool"], 2),
-        max_err=err))
+        "streaming_alexnet_megakernel", timings["megakernel"],
+        speedup_vs_wave=round(timings["wave"] / timings["megakernel"], 2),
+        pallas_calls=len(programs),
+        grid_steps=sum(kp.n_tiles * kp.n_chain for kp in kprogs),
+        dram_traffic_bytes=mega_traffic, psum_hbm_bytes=0))
     return recs
 
 
 def run_structured(smoke: bool = False) -> list[dict]:
-    """All records; ``smoke=True`` is the 1-repeat CI configuration."""
-    reps = 1 if smoke else 3
-    return _conv1_records(reps) + _stack_records(reps)
+    """All records. ``smoke=True`` is the CI configuration: the gated
+    executor rows keep the full 5 reps (min-of-reps feeds the
+    regression gate, so the estimator must stay comparable to the
+    committed baseline) while the expensive one-shot rows — interpreted
+    walk, Pallas tile backend, fused-pool backend — are skipped
+    entirely (the gate ignores them anyway)."""
+    reps = 5
+    return _conv1_records(reps, smoke) + _stack_records(reps, smoke)
 
 
 def format_rows(records: list[dict]) -> list[str]:

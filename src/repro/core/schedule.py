@@ -298,6 +298,12 @@ def validate_waves(wp: WaveProgram) -> None:
        group, so the feature axis can fold into the conv's output
        channels (grouped layers instead read the full width and let
        ``feature_group_count`` route features to their inputs).
+    4. Tile windows are wave-invariant: wave ``k``'s dispatch rows name
+       the same ``(iy, ix, oy, ox)`` windows (in the same order) as wave
+       0 — only the channel offsets change along a chain. The wave
+       executor's hoisted gather (slice each unique window once, then
+       slice channels per wave) and the megakernel's per-tile operand
+       columns both bake this in.
     """
     g, plan = wp.program, wp.program.plan
     expect = [(ty * g.oh, tx * g.ow, f * g.fg)
@@ -322,11 +328,333 @@ def validate_waves(wp: WaveProgram) -> None:
                     f"{g.layer.name} wave {k}: mixed input-channel "
                     f"groups {sorted(chans)} cannot fuse into one "
                     f"dispatch")
+        tiles = [r[:4] for r in wp.tile_waves[k]]
+        if tiles != [r[:4] for r in wp.tile_waves[0]]:
+            raise ValueError(
+                f"{g.layer.name} wave {k}: tile windows differ from "
+                f"wave 0 — the once-per-window gather and the "
+                f"megakernel operand tables assume wave-invariant "
+                f"windows")
 
 
 def compile_layer_waves(layer: ConvLayer, plan: Plan) -> WaveProgram:
     """Lower straight to the wave-parallel form."""
     return partition_waves(compile_layer(layer, plan))
+
+
+# ---------------------------------------------------------------------------
+# Megakernel lowering — WaveProgram -> KernelProgram (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+
+# operand-table column layout (one row per (chain step, tile), int32):
+#   IY, IX   input-window origin, elements into the padded input buffer
+#   TY, TX   output block index (blocked: multiplied by the block shape)
+#   C0, WC0  input-channel / weight fan-in offsets of the step's chunk
+#   VR, VC   write mask: valid rows/cols of this tile's output block
+KERNEL_OP_COLS = 8
+(OP_IY, OP_IX, OP_TY, OP_TX, OP_C0, OP_WC0, OP_VR, OP_VC) = range(8)
+
+# Default VMEM budget for chain coarsening and megakernel re-planning:
+# half a TPU core's ~16 MB VMEM, leaving room for double-buffered
+# windows and the output block.
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelProgram:
+    """A WaveProgram lowered for the persistent Pallas megakernel.
+
+    The whole layer becomes ONE ``pallas_call`` whose grid iterates
+    (tile, wave): the wave (in-channel-group) axis is innermost, so a
+    VMEM scratch accumulator plays the paper's partial-sum SRAM bank —
+    it is zeroed when a tile's chain starts (wave 0) and carried across
+    the chain with **zero HBM round-trips**; the epilogue (bias + optional
+    ReLU + optional fused max-pool, masked write) runs on the last wave
+    (kernels/wave_replay). The operand ``table`` is the §3 command
+    stream: a static int32 array prefetched to SMEM whose rows steer
+    every DMA (window origin, channel-group offsets, output block index,
+    write mask) — index maps read it, never the tensor data.
+
+    The grid is rectangular by construction: ``partition_waves``
+    guarantees equal-size waves with wave-invariant tile windows
+    (``validate_waves`` invariant 4), so the table is a dense
+    ``(n_chain, n_tiles, 8)`` block with no ragged padding rows.
+
+    Chain coarsening: the plan's ``in_splits`` was sized for the paper's
+    128 KB SRAM, but the megakernel's scratch is real VMEM (~16 MB), so
+    the lowering re-runs the planner's budget math at the kernel's
+    budget point (DESIGN.md §6) and folds ``chain_chunk`` consecutive
+    schedule waves into each grid step — the CU array's Tn-wide
+    input-channel parallelism, in software. Chunks accumulate in chain
+    order; within a chunk the reduction happens inside one im2col
+    matmul, so coarsened outputs match the serial replay to fp32
+    tolerance rather than bit-exactly (``vmem_budget=None`` disables
+    coarsening for 1:1 replays).
+
+    With ``fuse_pool`` the tile geometry is re-derived over the *pooled*
+    output (the fused_conv_pool trick): each tile's accumulator covers
+    exactly the conv rows its pooled rows need (``acc = (blk-1)*ps +
+    pool``), re-computing the (pool - stride)-row overlap between
+    adjacent tiles instead of exchanging it — the conv->pool
+    intermediate never exists outside VMEM.
+    """
+    wave: WaveProgram
+    relu: bool
+    fuse_pool: bool
+    # padded input-buffer geometry (static under jit)
+    pad_h: int
+    pad_w: int
+    in_c_kpad: int          # input channels incl. chain-chunk rounding
+    w_in_kpad: int          # weight fan-in incl. chain-chunk rounding
+    # per-grid-step block geometry
+    ih: int                 # input-window rows (halo-inclusive)
+    iw: int
+    acc_h: int              # conv rows accumulated per tile (VMEM scratch)
+    acc_w: int
+    blk_h: int              # output block per tile (pooled if fuse_pool)
+    blk_w: int
+    c_width: int            # input channels read per step
+    fan_width: int          # weight fan-in sliced per step
+    out_c_pad: int
+    groups: int             # conv groups executed inside the kernel body
+    pool: int               # epilogue pool window (1 = bias/ReLU only)
+    pool_stride: int
+    # valid (cropped) output dims
+    out_h: int
+    out_w: int
+    chain_chunk: int        # schedule waves folded per grid step
+    n_chain: int            # grid steps per tile chain
+    n_tiles: int
+    table: Tuple[Tuple[Tuple[int, ...], ...], ...]
+
+    def operand_table(self) -> np.ndarray:
+        """(n_chain, n_tiles, 8) int32 SMEM operand table."""
+        return np.asarray(self.table, np.int32)
+
+    @property
+    def tiles_h(self) -> int:
+        return self.wave.program.plan.tiles_h
+
+    @property
+    def tiles_w(self) -> int:
+        return self.wave.program.plan.tiles_w
+
+    @property
+    def out_h_pad(self) -> int:
+        return self.tiles_h * self.blk_h
+
+    @property
+    def out_w_pad(self) -> int:
+        return self.tiles_w * self.blk_w
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Per-grid-step fp32 working set (batch 1): accumulator +
+        input-window chunk + weight chunk — what ``vmem_budget`` bounds."""
+        l = self.wave.program.layer
+        return 4 * (self.acc_h * self.acc_w * self.out_c_pad
+                    + self.ih * self.iw * self.c_width
+                    + l.kernel * l.kernel * self.fan_width
+                    * self.out_c_pad)
+
+    @property
+    def geometry(self):
+        """The table is a pure function of these, so they key the cache."""
+        return self.wave.geometry + (
+            "megakernel", self.relu, self.fuse_pool, self.pad_h, self.pad_w,
+            self.in_c_kpad, self.w_in_kpad,
+            self.ih, self.iw, self.acc_h, self.acc_w, self.blk_h, self.blk_w,
+            self.c_width, self.fan_width, self.out_c_pad, self.groups,
+            self.pool, self.pool_stride, self.out_h, self.out_w,
+            self.chain_chunk, self.n_chain)
+
+    def describe(self) -> str:
+        l = self.wave.program.layer
+        fused = f"+pool{self.pool}/{self.pool_stride}" if self.fuse_pool \
+            else ""
+        chunk = f" (x{self.chain_chunk} waves/step)" \
+            if self.chain_chunk > 1 else ""
+        return (f"{l.name}: 1 pallas_call, grid {self.n_tiles}x"
+                f"{self.n_chain} (tile x chain{chunk}), acc {self.acc_h}x"
+                f"{self.acc_w}x{self.out_c_pad} VMEM"
+                f"{fused}, table {self.n_chain}x{self.n_tiles}x"
+                f"{KERNEL_OP_COLS} SMEM")
+
+
+def lower_kernel_program(
+        wprog: WaveProgram, *, relu: bool = False, fuse_pool: bool = False,
+        vmem_budget: "int | None" = DEFAULT_VMEM_BUDGET) -> KernelProgram:
+    """Lower a WaveProgram to the megakernel's static operand tables.
+
+    ``relu`` bakes max(x, 0) into the epilogue; ``fuse_pool`` additionally
+    max-pools the accumulator in VMEM (requires ``layer.pool > 1``) and
+    re-derives the tile grid over the pooled output. ``vmem_budget``
+    bounds the per-step VMEM working set (accumulator + input-window
+    chunk + weight chunk, fp32) used to coarsen long partial-sum chains;
+    ``None`` keeps the schedule's 1:1 wave chain (bit-faithful replay).
+    """
+    g = wprog.program
+    l, plan = g.layer, g.plan
+    if fuse_pool and l.pool <= 1:
+        raise ValueError(f"{l.name}: fuse_pool on a layer without a pool")
+
+    if fuse_pool:
+        ps = l.pool_stride or l.pool
+        if l.pooled_h < 1 or l.pooled_w < 1:
+            raise ValueError(
+                f"{l.name}: conv output {l.out_h}x{l.out_w} smaller than "
+                f"pool {l.pool}")
+        blk_h = _ceil_div(l.pooled_h, plan.tiles_h)
+        blk_w = _ceil_div(l.pooled_w, plan.tiles_w)
+        acc_h = (blk_h - 1) * ps + l.pool
+        acc_w = (blk_w - 1) * ps + l.pool
+        ih = (acc_h - 1) * l.stride + l.kernel
+        iw = (acc_w - 1) * l.stride + l.kernel
+        pad_h = (plan.tiles_h - 1) * blk_h * ps * l.stride + ih
+        pad_w = (plan.tiles_w - 1) * blk_w * ps * l.stride + iw
+        out_h, out_w = l.pooled_h, l.pooled_w
+        pool = l.pool
+    else:
+        ps, pool = 1, 1
+        blk_h = acc_h = g.oh
+        blk_w = acc_w = g.ow
+        ih, iw = g.ih, g.iw
+        pad_h, pad_w = g.pad_h, g.pad_w
+        out_h, out_w = l.out_h, l.out_w
+
+    # chain coarsening: fold `chunk` consecutive waves per grid step so
+    # the per-step working set fills (but stays under) the kernel's VMEM
+    # budget — the planner's feasibility math re-run at the VMEM budget
+    # point. Grouped layers have single-step chains; nothing to fold.
+    chunk = 1
+    if wprog.n_waves > 1 and vmem_budget is not None:
+        acc_bytes = acc_h * acc_w * g.out_c_pad * 4
+        per_wave = (ih * iw * wprog.c_width * 4
+                    + l.kernel * l.kernel * wprog.fan_width
+                    * g.out_c_pad * 4)
+        if vmem_budget > acc_bytes + per_wave:
+            chunk = min(wprog.n_waves,
+                        (vmem_budget - acc_bytes) // per_wave)
+        chunk = max(1, chunk)
+    n_chain = _ceil_div(wprog.n_waves, chunk)
+    c_width = wprog.c_width * chunk
+    # the kernel always runs one dense matmul per step: grouped layers'
+    # weights are expanded block-diagonally by ops.pad_operands, so the
+    # weight fan equals the input-channel width everywhere
+    fan_width = c_width
+    # round the channel axes up to whole chunks (zeros accumulate 0.0)
+    in_c_kpad = max(g.in_c_pad, n_chain * c_width) if chunk > 1 \
+        else g.in_c_pad
+    w_in_kpad = in_c_kpad
+
+    table = []
+    for j in range(n_chain):
+        rows = wprog.tile_waves[j * chunk]
+        c0, wc0 = rows[0][4], rows[0][5]
+        step_rows = []
+        i = 0
+        for ty in range(plan.tiles_h):
+            for tx in range(plan.tiles_w):
+                if fuse_pool:
+                    iy = ty * blk_h * ps * l.stride
+                    ix = tx * blk_w * ps * l.stride
+                else:
+                    # reuse the wave rows (raster order per invariant 2/4)
+                    iy, ix = rows[i][0], rows[i][1]
+                    if (rows[i][2], rows[i][3]) != (ty * blk_h, tx * blk_w):
+                        raise ValueError(
+                            f"{l.name}: wave {j * chunk} tile {i} out of "
+                            f"raster order — cannot index a rectangular "
+                            f"grid")
+                vr = max(0, min(blk_h, out_h - ty * blk_h))
+                vc = max(0, min(blk_w, out_w - tx * blk_w))
+                step_rows.append((iy, ix, ty, tx, c0, wc0, vr, vc))
+                i += 1
+        table.append(tuple(step_rows))
+
+    kp = KernelProgram(
+        wave=wprog, relu=relu, fuse_pool=fuse_pool,
+        pad_h=pad_h, pad_w=pad_w,
+        in_c_kpad=in_c_kpad, w_in_kpad=w_in_kpad,
+        ih=ih, iw=iw,
+        acc_h=acc_h, acc_w=acc_w, blk_h=blk_h, blk_w=blk_w,
+        c_width=c_width, fan_width=fan_width,
+        out_c_pad=g.out_c_pad, groups=l.groups,
+        pool=pool, pool_stride=ps, out_h=out_h, out_w=out_w,
+        chain_chunk=chunk, n_chain=n_chain, n_tiles=wprog.n_tiles,
+        table=tuple(table))
+    validate_kernel_program(kp)
+    return kp
+
+
+def validate_kernel_program(kp: KernelProgram) -> None:
+    """Check the invariants the persistent kernel's grid bakes in.
+
+    1. The table is a dense rectangular (n_chain, n_tiles, 8) block and
+       the chain covers every schedule wave exactly once
+       (``n_chain * chain_chunk >= n_waves``, no overlap).
+    2. Every input window, channel chunk, and weight slice lies inside
+       the padded buffers — a stale offset would make the kernel's
+       unblocked DMA read out of bounds.
+    3. Output block indices raster-tile the padded output exactly once
+       per chain step, and the write masks cover the valid output
+       exactly: per tile column the VR masks sum to out_h, per row VC
+       to out_w.
+    4. Channel offsets are constant within a step and walk the chain in
+       order (step j reads chunk j — the VMEM accumulator assumes grid
+       step j holds chain position j of every tile).
+    """
+    g = kp.wave.program
+    l, plan = g.layer, g.plan
+    tab = kp.operand_table()
+    if tab.shape != (kp.n_chain, kp.n_tiles, KERNEL_OP_COLS):
+        raise ValueError(
+            f"{l.name}: operand table {tab.shape} is not the dense "
+            f"({kp.n_chain}, {kp.n_tiles}, {KERNEL_OP_COLS}) grid")
+    if kp.n_chain * kp.chain_chunk < kp.wave.n_waves:
+        raise ValueError(
+            f"{l.name}: {kp.n_chain} steps x chunk {kp.chain_chunk} "
+            f"drop waves of the {kp.wave.n_waves}-long chain")
+    expect_blocks = [(ty, tx) for ty in range(plan.tiles_h)
+                     for tx in range(plan.tiles_w)]
+    for j in range(kp.n_chain):
+        rows = tab[j]
+        if [(r[OP_TY], r[OP_TX]) for r in rows] != expect_blocks:
+            raise ValueError(
+                f"{l.name} step {j}: output blocks deviate from the "
+                f"raster tiling")
+        c0s = {(r[OP_C0], r[OP_WC0]) for r in rows}
+        if len(c0s) != 1:
+            raise ValueError(
+                f"{l.name} step {j}: mixed channel offsets {sorted(c0s)}")
+        if l.groups == 1 and c0s != {(j * kp.c_width, j * kp.fan_width)}:
+            raise ValueError(
+                f"{l.name} step {j}: channel offsets {sorted(c0s)} break "
+                f"chain order (expected chunk {j} at {j * kp.c_width})")
+        for r in rows:
+            if not (0 <= r[OP_IY] and r[OP_IY] + kp.ih <= kp.pad_h
+                    and 0 <= r[OP_IX] and r[OP_IX] + kp.iw <= kp.pad_w):
+                raise ValueError(
+                    f"{l.name} step {j}: input window ({r[OP_IY]}, "
+                    f"{r[OP_IX]})+({kp.ih}, {kp.iw}) outside the padded "
+                    f"({kp.pad_h}, {kp.pad_w}) buffer")
+            if r[OP_C0] + kp.c_width > kp.in_c_kpad:
+                raise ValueError(
+                    f"{l.name} step {j}: channel offset {r[OP_C0]} + "
+                    f"width {kp.c_width} exceeds {kp.in_c_kpad}")
+            if r[OP_WC0] + kp.fan_width > kp.w_in_kpad:
+                raise ValueError(
+                    f"{l.name} step {j}: weight fan offset {r[OP_WC0]} "
+                    f"+ {kp.fan_width} exceeds {kp.w_in_kpad}")
+    # masks tile the valid output exactly (step 0 suffices: masks are
+    # chain-invariant by construction)
+    vr_sum = sum(int(tab[0][ty * plan.tiles_w][OP_VR])
+                 for ty in range(plan.tiles_h))
+    vc_sum = sum(int(tab[0][tx][OP_VC]) for tx in range(plan.tiles_w))
+    if vr_sum != kp.out_h or vc_sum != kp.out_w:
+        raise ValueError(
+            f"{l.name}: write masks cover {vr_sum}x{vc_sum}, valid "
+            f"output is {kp.out_h}x{kp.out_w}")
 
 
 def compile_network_waves(layers: Sequence[ConvLayer],

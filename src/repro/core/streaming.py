@@ -7,7 +7,7 @@ and never touches more than the planned working set per pass. Numerically
 identical to the direct convolution (asserted in tests), demonstrating
 that decomposition trades passes for buffer size without changing results.
 
-Three executors share the schedule (DESIGN.md §2):
+Four executors share the schedule (DESIGN.md §2):
 
   * ``mode="interpret"`` — the original Python triple loop over
     ``tile_grid``. One conv dispatch per pass, full-output
@@ -33,6 +33,16 @@ Three executors share the schedule (DESIGN.md §2):
     saturated). Accumulation order per output element is unchanged
     (wave k is always chain position k), so outputs stay bit-identical
     to the interpreter on evenly-split plans.
+  * ``mode="megakernel"`` — the whole layer inside ONE persistent
+    Pallas kernel (kernels/wave_replay): the grid walks (tile, wave)
+    with the chain axis innermost, a VMEM scratch accumulator carries
+    partial sums across each tile's in-channel-group chain (the paper's
+    128 KB SRAM bank), halo windows are indexed via a scalar-prefetched
+    SMEM operand table instead of gathered into fresh copies, and
+    bias+ReLU+max-pool run in the kernel epilogue on the last chain
+    step — zero HBM round-trips for partials, one launch per layer.
+    In-tile reductions run as im2col matmuls, so outputs match the
+    interpreter to fp32 tolerance (not bit-exactly).
 
 The per-tile compute is pluggable: the XLA conv (default) or the Pallas
 streaming kernel (kernels/conv_stream) via ``conv_fn=pallas_tile_conv_fn``
@@ -53,8 +63,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.decomposition import ConvLayer, Plan, tile_grid
-from repro.core.schedule import (TileProgram, WaveProgram, compile_layer,
+from repro.core.decomposition import ConvLayer, Plan, evaluate, tile_grid
+from repro.core.schedule import (DEFAULT_VMEM_BUDGET as _VMEM_DEFAULT,
+                                 KernelProgram, TileProgram, WaveProgram,
+                                 compile_layer, lower_kernel_program,
                                  partition_waves)
 
 
@@ -88,16 +100,19 @@ from repro.kernels.common import pallas_interpret_default  # noqa: E402
 # re-partitioning the same program all share one lowering + validation
 _partition_waves_cached = functools.lru_cache(maxsize=128)(partition_waves)
 
+# same deal for the megakernel lowering: pure on (WaveProgram, flags)
+_lower_kernel_cached = functools.lru_cache(maxsize=128)(lower_kernel_program)
+
 
 def _normalize_mode(mode: str) -> str:
     """One executor vocabulary across layer- and network-level APIs:
     ``jit`` and ``scan`` name the same serial scan replay."""
     if mode in ("jit", "scan"):
         return "scan"
-    if mode in ("wave", "interpret"):
+    if mode in ("wave", "interpret", "megakernel"):
         return mode
     raise ValueError(f"unknown executor mode {mode!r} "
-                     f"(expected wave | scan/jit | interpret)")
+                     f"(expected megakernel | wave | scan/jit | interpret)")
 
 
 def xla_tile_conv_fn(stride: int) -> Callable:
@@ -305,6 +320,14 @@ def _wave_executor(wprog: WaveProgram, conv_fn: Callable, has_bias: bool,
     reproducing the interpreter's per-element partial-sum order exactly
     (0 + p_0 + p_1 + ... + bias), hence bit-identical outputs on
     evenly-split plans.
+
+    Multi-wave chains gather each *unique* tile window exactly once:
+    tile windows are wave-invariant (``validate_waves`` invariant 4 —
+    only the channel offset walks along a chain), so the spatial gather
+    is hoisted out of the wave scan at full channel width and each wave
+    takes a cheap channel slice of the pre-gathered stack, instead of
+    re-materialising identical halo windows once per (tile,
+    channel-group) as the original executor did.
     """
     g = wprog.program
     l, plan = g.layer, g.plan
@@ -318,13 +341,10 @@ def _wave_executor(wprog: WaveProgram, conv_fn: Callable, has_bias: bool,
     else:
         conv = conv_fn
 
-    def one_wave(ops):
-        # ops (n_tiles, 6): [iy, ix, oy, ox, c0, wc0]
-        wins = jax.vmap(lambda op: lax.dynamic_slice(
-            xp, (0, op[0], op[1], op[4]),
-            (B, g.ih, g.iw, wprog.c_width)))(ops)
+    def conv_wave(wins, wc0):
+        # wins (T, B, ih, iw, c_width); wc0 the wave's weight fan offset
         wt = lax.dynamic_slice(
-            wp, (0, 0, ops[0, 5], 0),
+            wp, (0, 0, wc0, 0),
             (l.kernel, l.kernel, wprog.fan_width, g.out_c_pad))
         part = conv(wins.reshape(T * B, g.ih, g.iw, wprog.c_width), wt)
         part = part.astype(jnp.float32)     # (T*B, oh, ow, out_c_pad)
@@ -333,15 +353,32 @@ def _wave_executor(wprog: WaveProgram, conv_fn: Callable, has_bias: bool,
         img = img.transpose(2, 0, 3, 1, 4, 5)
         return img.reshape(B, g.out_h_pad, g.out_w_pad, g.out_c_pad)
 
+    def gather(ops, c0, width):
+        # ops (n_tiles, 6): [iy, ix, oy, ox, c0, wc0]
+        return jax.vmap(lambda op: lax.dynamic_slice(
+            xp, (0, op[0], op[1], c0), (B, g.ih, g.iw, width)))(ops)
+
     out0 = jnp.zeros((B, g.out_h_pad, g.out_w_pad, g.out_c_pad),
                      jnp.float32)
     if wprog.n_waves == 1:
-        out = out0 + one_wave(wave_ops[0])
+        ops = wave_ops[0]
+        out = out0 + conv_wave(gather(ops, ops[0, 4], wprog.c_width),
+                               ops[0, 5])
     else:
+        # gather once per unique window (full channel width), then scan
+        # the chain: each wave slices its channel group from the stack —
+        # O(T) gathers total instead of O(T * n_waves)
+        wins_all = gather(wave_ops[0], 0, g.in_c_pad)
+
+        def step(acc, ops):
+            wins = lax.dynamic_slice(
+                wins_all, (0, 0, 0, 0, ops[0, 4]),
+                (T, B, g.ih, g.iw, wprog.c_width))
+            return acc + conv_wave(wins, ops[0, 5]), None
+
         # partial-sum chains serialise across waves (and only there);
         # scanning the wave axis keeps the traced graph O(1) in n_waves
-        out, _ = lax.scan(lambda acc, ops: (acc + one_wave(ops), None),
-                          out0, wave_ops)
+        out, _ = lax.scan(step, out0, wave_ops)
     out = out[:, :l.out_h, :l.out_w, :l.out_c]
     if has_bias:
         out = out + b.astype(jnp.float32)
@@ -365,6 +402,65 @@ def run_layer_wave(wprog: WaveProgram, x: jax.Array, w: jax.Array,
     ops = jnp.asarray(wprog.tile_operands())
     bias = b if b is not None else jnp.zeros((0,), x.dtype)
     return fn(x, w, bias, ops)
+
+
+# ---------------------------------------------------------------------------
+# Megakernel executor: ONE persistent pallas_call per layer (ISSUE 3)
+# ---------------------------------------------------------------------------
+
+def _megakernel_executor(kprog: KernelProgram, has_bias: bool,
+                         x, w, b, table):
+    """Replay a whole layer inside one persistent Pallas kernel.
+
+    The grid walks (tile, wave) with the chain axis innermost; a VMEM
+    scratch accumulator carries each tile's partial sums across its
+    in-channel-group chain (zeroed at wave 0, finished in the epilogue on
+    the last wave), so — unlike the wave executor, whose per-wave conv
+    results accumulate into an HBM-resident fp32 buffer — partials never
+    round-trip off-chip, and halo windows are *indexed* via the SMEM
+    operand table instead of materialised by a gather. Bias, and (when
+    the program was lowered with ``relu``/``fuse_pool``) ReLU + max-pool,
+    run in the same epilogue; cropping happens here.
+    """
+    from repro.kernels.wave_replay.ops import wave_replay_layer
+    y = wave_replay_layer(kprog, x, w, b if has_bias else None,
+                          table=table)
+    return y.astype(x.dtype)
+
+
+def run_layer_megakernel(wprog: WaveProgram, x: jax.Array, w: jax.Array,
+                         b: Optional[jax.Array] = None,
+                         relu: bool = False,
+                         fuse_pool: bool = False,
+                         vmem_budget: Optional[int] = _VMEM_DEFAULT
+                         ) -> jax.Array:
+    """Execute a WaveProgram as ONE persistent Pallas megakernel launch.
+
+    Parity with the other ``run_layer_*`` entry points: by default the
+    epilogue applies bias only (no ReLU, no pool), so outputs compare
+    against ``run_layer_interpreted`` within fp32 tolerance (the in-tile
+    reduction runs on the MXU as an im2col matmul, so per-partial
+    rounding can differ by a few ULP from the XLA conv). The per-tile
+    conv backend is *not* pluggable here — the megakernel IS the
+    backend. ``vmem_budget`` mirrors ``lower_kernel_program``: the
+    working-set bound for coarsening long partial-sum chains
+    (``None`` = keep the schedule's 1:1 wave chain).
+    """
+    l = wprog.program.layer
+    _check_input(l, x)
+    kprog = _lower_kernel_cached(wprog, relu=relu, fuse_pool=fuse_pool,
+                                 vmem_budget=vmem_budget)
+    return _run_kernel_program(kprog, x, w, b)
+
+
+def _run_kernel_program(kprog: KernelProgram, x, w, b):
+    key = (kprog.geometry, "megakernel", b is not None, x.shape[0],
+           str(x.dtype))
+    fn = _cached_executable(key, lambda: jax.jit(
+        functools.partial(_megakernel_executor, kprog, b is not None)))
+    table = jnp.asarray(kprog.operand_table())
+    bias = b if b is not None else jnp.zeros((0,), x.dtype)
+    return fn(x, w, bias, table)
 
 
 # One jitted executable per (schedule geometry, backend, batch shape).
@@ -449,12 +545,17 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
     """Execute one CONV layer via the planned tile schedule.
 
     ``mode="wave"`` (default) batches each dependency-free wave into one
-    fused dispatch; ``mode="jit"`` (alias ``"scan"``) compiles the
-    serial scan replay; ``mode="interpret"`` runs the original per-tile
-    Python loop."""
+    fused dispatch; ``mode="megakernel"`` replays the whole layer inside
+    ONE persistent Pallas kernel (partial sums live in VMEM scratch; the
+    pluggable conv backend is ignored — the kernel is the backend);
+    ``mode="jit"`` (alias ``"scan"``) compiles the serial scan replay;
+    ``mode="interpret"`` runs the original per-tile Python loop."""
     mode = _normalize_mode(mode)
     if mode == "interpret":
         return run_layer_interpreted(layer, plan, x, w, b, conv_fn)
+    if mode == "megakernel":
+        wprog = _partition_waves_cached(compile_layer(layer, plan))
+        return run_layer_megakernel(wprog, x, w, b)
     if mode == "wave":
         wprog = _partition_waves_cached(compile_layer(layer, plan))
         return run_layer_wave(wprog, x, w, b, conv_fn=conv_fn,
@@ -482,7 +583,9 @@ def network_forward_fn(programs: Sequence[TileProgram],
                        conv_fn: Optional[Callable] = None,
                        conv_backend: str = "xla",
                        mode: str = "wave",
-                       pool_backend: str = "xla") -> Callable:
+                       pool_backend: str = "xla",
+                       vmem_budget: Optional[int] = _VMEM_DEFAULT
+                       ) -> Callable:
     """Whole-network forward over pre-lowered programs, built for one jit.
 
     Returns ``f(x, weights, ops_list) -> y`` where ``weights`` is a list
@@ -492,12 +595,20 @@ def network_forward_fn(programs: Sequence[TileProgram],
     launch/session.py).
 
     ``mode`` picks the executor per conv layer: ``"wave"`` (default, one
-    fused dispatch per dependency-free wave) or ``"scan"`` (alias
-    ``"jit"``, serial replay). ``pool_backend="fused"`` routes
-    CONV+POOL layers through the Pallas fused conv+ReLU+pool kernel
-    instead — the pre-pool activation then never round-trips through a
-    standalone ``maxpool_direct`` (paper §4.3); grouped pool layers run
-    one fused call per conv group.
+    fused dispatch per dependency-free wave), ``"megakernel"`` (ONE
+    persistent Pallas kernel per layer — partial sums in VMEM scratch,
+    bias+ReLU+max-pool fused into the kernel epilogue, so streamed pool
+    layers never touch ``fused_conv_pool`` or ``maxpool_direct``), or
+    ``"scan"`` (alias ``"jit"``, serial replay). ``pool_backend="fused"``
+    routes CONV+POOL layers through the Pallas fused conv+ReLU+pool
+    kernel instead — the pre-pool activation then never round-trips
+    through a standalone ``maxpool_direct`` (paper §4.3); grouped pool
+    layers run one fused call per conv group. The megakernel subsumes
+    that fusion, so ``pool_backend`` (like ``conv_fn``/``conv_backend``)
+    is ignored in megakernel mode. ``vmem_budget`` (megakernel only)
+    re-plans each layer's schedule at the kernel's VMEM budget point
+    (``plan_for_vmem``; ``None`` replays the given programs 1:1) — pass
+    the SAME value to ``network_operands`` so the tables match.
     """
     mode = _normalize_mode(mode)
     if mode == "interpret":
@@ -506,6 +617,17 @@ def network_forward_fn(programs: Sequence[TileProgram],
     if pool_backend not in ("xla", "fused"):
         raise ValueError(f"unknown pool backend {pool_backend!r} "
                          f"(expected xla | fused)")
+    if mode == "megakernel":
+        kprogs = [_network_kernel_program(p, vmem_budget)
+                  for p in programs]
+
+        def forward_mega(x, weights, ops_list):
+            for kp, (w, b), ops in zip(kprogs, weights, ops_list):
+                x = _megakernel_executor(kp, b is not None, x, w, b, ops)
+            return x
+
+        return forward_mega
+
     conv_fns = [_resolve_conv_fn(conv_fn, conv_backend, p.layer.stride)[0]
                 for p in programs]
     wprogs = [_partition_waves_cached(p) if mode == "wave" else None
@@ -535,13 +657,81 @@ def network_forward_fn(programs: Sequence[TileProgram],
     return forward
 
 
-def network_operands(programs: Sequence[TileProgram], mode: str = "wave"):
+@functools.lru_cache(maxsize=128)
+def plan_for_vmem(layer: ConvLayer,
+                  vmem_budget: int = _VMEM_DEFAULT,
+                  fuse_pool: bool = False,
+                  max_tiles: int = 8) -> Plan:
+    """Re-plan a layer's decomposition at the megakernel's VMEM budget.
+
+    DESIGN.md §6's point made literal: the decomposition planner serves
+    any buffer budget, and the megakernel's scratch is real VMEM (MBs),
+    not the paper's 128 KB SRAM — so the kernel replays the schedule the
+    planner produces *for its own budget point*: the fewest (tile x
+    chain) grid steps whose fp32 working set (``KernelProgram.
+    vmem_bytes``) fits, ties broken toward the smaller working set.
+    Feature splits stay at 1 — the kernel folds the feature axis into
+    its matmul width. When nothing fits the budget (working sets shrink
+    with more tiles/splits only down to the halo/weight floor), the
+    over-budget candidate with the fewest steps wins — an oversubscribed
+    scratch beats a grid that explodes the step count.
+    """
+    best = None          # ((over_budget, grid_steps, ws), plan)
+    in_choices = sorted({1, 2, 4, 8, 16, 32, 64, 128, layer.in_c})
+    for th in range(1, max_tiles + 1):
+        for tw in range(1, max_tiles + 1):
+            for cs in in_choices:
+                if cs > layer.in_c:
+                    continue
+                p = evaluate(layer, th, tw, 1, cs)
+                if p is None:
+                    continue
+                kp = _lower_kernel_cached(
+                    _partition_waves_cached(compile_layer(layer, p)),
+                    relu=True, fuse_pool=fuse_pool, vmem_budget=None)
+                ws = kp.vmem_bytes
+                key = (ws > vmem_budget, kp.n_tiles * kp.n_chain, ws)
+                if best is None or key < best[0]:
+                    best = (key, p)
+    if best is None:
+        raise ValueError(f"{layer.name}: no feasible megakernel plan")
+    return best[1]
+
+
+def _network_kernel_program(
+        program: TileProgram,
+        vmem_budget: Optional[int] = _VMEM_DEFAULT) -> KernelProgram:
+    """The network path's megakernel lowering: ReLU always fused, the
+    layer's max-pool fused whenever it has one, and the schedule
+    re-planned at the kernel's VMEM budget point (``plan_for_vmem``).
+    ``vmem_budget=None`` replays the session's own plan 1:1 instead.
+    """
+    l = program.layer
+    fuse = l.pool > 1
+    if vmem_budget is None:
+        return _lower_kernel_cached(_partition_waves_cached(program),
+                                    relu=True, fuse_pool=fuse,
+                                    vmem_budget=None)
+    plan = plan_for_vmem(l, vmem_budget, fuse)
+    return _lower_kernel_cached(
+        _partition_waves_cached(compile_layer(l, plan)),
+        relu=True, fuse_pool=fuse, vmem_budget=vmem_budget)
+
+
+def network_operands(programs: Sequence[TileProgram], mode: str = "wave",
+                     vmem_budget: Optional[int] = _VMEM_DEFAULT):
     """Per-layer operand tables matching ``network_forward_fn(mode=...)``:
     wave-encoded ``(n_waves, n_tiles, 6)`` dispatch tables for wave
-    mode, flat ``(n_steps, 7)`` step tables for scan."""
+    mode, SMEM ``(n_chain, n_tiles, 8)`` megakernel tables for
+    megakernel (pass the same ``vmem_budget`` as the forward builder),
+    flat ``(n_steps, 7)`` step tables for scan."""
     mode = _normalize_mode(mode)
     if mode == "interpret":
         raise ValueError("interpret mode has no operand tables")
+    if mode == "megakernel":
+        return [jnp.asarray(
+            _network_kernel_program(p, vmem_budget).operand_table())
+            for p in programs]
     if mode == "wave":
         return [jnp.asarray(_partition_waves_cached(p).tile_operands())
                 for p in programs]

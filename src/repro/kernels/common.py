@@ -1,7 +1,10 @@
-"""Shared kernel-launch policy helpers."""
+"""Shared kernel-launch policy helpers and in-kernel building blocks."""
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 
 def pallas_interpret_default() -> bool:
@@ -12,3 +15,28 @@ def pallas_interpret_default() -> bool:
     ``interpret=None`` to defer to this single policy point.
     """
     return jax.default_backend() != "tpu"
+
+
+def pool_max_subsampled(a: jax.Array, *, pool: int, stride: int,
+                        out_h: int, out_w: int) -> jax.Array:
+    """In-VMEM max-pool over the trailing (H, W, C) dims of ``a``.
+
+    The subsampled-slice trick shared by the fused conv+pool kernel and
+    the wave-replay megakernel epilogue: the max over ``pool*pool``
+    strided slices handles overlapping pools (stride < pool, e.g.
+    AlexNet's 3/2) without any window primitive — each candidate slice
+    is one (ky, kx) tap of every pool window at once. Leading dims
+    (e.g. batch) pass through untouched.
+    """
+    lead = a.ndim - 3
+    cands = []
+    for dy in range(pool):
+        for dx in range(pool):
+            cands.append(jax.lax.slice(
+                a,
+                (0,) * lead + (dy, dx, 0),
+                a.shape[:lead] + (dy + (out_h - 1) * stride + 1,
+                                  dx + (out_w - 1) * stride + 1,
+                                  a.shape[-1]),
+                (1,) * lead + (stride, stride, 1)))
+    return functools.reduce(jnp.maximum, cands)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import pool_max_subsampled
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, K: int, stride: int, R: int,
             W_out: int, n_ci: int, pool: int, ps: int, RP: int, WP: int,
@@ -48,16 +50,10 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, K: int, stride: int, R: int,
         a = acc_ref[...]
         if relu:
             a = jnp.maximum(a, 0.0)
-        # in-VMEM pooling: (R, W_out, C) -> (RP, WP, C) via a max over
-        # pool*pool subsampled slices (handles ps < pool overlap)
-        cands = []
-        for dy in range(pool):
-            for dx in range(pool):
-                cands.append(jax.lax.slice(
-                    a, (dy, dx, 0),
-                    (dy + (RP - 1) * ps + 1, dx + (WP - 1) * ps + 1,
-                     a.shape[-1]), (ps, ps, 1)))
-        o_ref[...] = functools.reduce(jnp.maximum, cands)[None]
+        # in-VMEM pooling: (R, W_out, C) -> (RP, WP, C); shared with
+        # the wave-replay megakernel epilogue
+        o_ref[...] = pool_max_subsampled(a, pool=pool, stride=ps,
+                                         out_h=RP, out_w=WP)[None]
 
 
 def fused_conv_pool_raw(x: jax.Array, w: jax.Array, *, stride: int = 1,

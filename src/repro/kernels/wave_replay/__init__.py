@@ -1,0 +1,5 @@
+from repro.kernels.wave_replay.ops import (expand_grouped, launch_count,
+                                           pad_operands,
+                                           reset_launch_count,
+                                           wave_replay_layer)
+from repro.kernels.wave_replay.ref import wave_replay_ref

@@ -1,0 +1,158 @@
+"""Persistent wave-replay Pallas megakernel (ISSUE 3 tentpole).
+
+One ``pallas_call`` replays a whole CONV layer's wave schedule. The grid
+iterates (tile, wave) with the wave (in-channel-group) axis innermost,
+so for each tile the VMEM scratch accumulator is zeroed at chain start
+and carried across the entire partial-sum chain — the software analogue
+of the paper's 128 KB partial-sum SRAM bank: **partials never round-trip
+HBM**, unlike the wave executor whose per-wave conv results accumulate
+into an HBM-resident buffer.
+
+Control path: a static int32 operand table (``KernelProgram.table``,
+core/schedule.py) is scalar-prefetched to SMEM — the §3 command decoder
+stream. BlockSpec index maps read it to steer every DMA: the
+halo-inclusive input window origin (unblocked element offsets, so
+overlapping halos are *indexed*, never materialised as fresh copies the
+way the wave executor's vmapped gather stacks them), the wave's
+channel-group offsets into input/weights, and the output block index.
+
+Epilogue (last wave of each tile's chain): bias + optional ReLU +
+optional in-VMEM max-pool over the accumulator (re-deriving the
+(pool - stride)-row overlap per tile, like fused_conv_pool), then a
+masked write that zeroes the grid-padding lanes — the conv->pool
+intermediate and every partial sum live only in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_IX, OP_IY,
+                                 OP_TX, OP_TY, OP_VC, OP_VR, OP_WC0,
+                                 KernelProgram)
+from repro.kernels.common import pool_max_subsampled
+
+
+def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                   K: int, stride: int, acc_h: int, acc_w: int,
+                   n_waves: int, pool: int, ps: int,
+                   blk_h: int, blk_w: int, relu: bool, fuse_pool: bool):
+    """One grid step: tile t (program_id 0), chain position k (id 1)."""
+    t = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():                      # chain start: zero the psum bank
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                    # (B, ih, iw, c_width) halo-inclusive
+    B, cin = x.shape[0], x.shape[-1]
+    patches = []
+    for ky in range(K):
+        for kx in range(K):
+            patches.append(jax.lax.slice(
+                x, (0, ky, kx, 0),
+                (B, ky + (acc_h - 1) * stride + 1,
+                 kx + (acc_w - 1) * stride + 1, cin),
+                (1, stride, stride, 1)))
+    pat = jnp.concatenate(patches, -1).reshape(
+        B * acc_h * acc_w, K * K * cin)
+    # one dense MXU matmul per step: grouped layers arrive with their
+    # weights pre-expanded block-diagonally (ops.pad_operands), so the
+    # cross-group zeros contribute exact 0.0 and no in-kernel group
+    # loop (with its skinny per-group gemms) is needed
+    w = w_ref[...].reshape(K * K * cin, -1)
+    acc_ref[...] += jax.lax.dot_general(
+        pat, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(B, acc_h, acc_w, -1)
+
+    @pl.when(k == n_waves - 1)
+    def _epilogue():                  # chain end: finish in VMEM, write once
+        a = acc_ref[...] + b_ref[0]
+        if relu:
+            a = jnp.maximum(a, 0.0)
+        if fuse_pool:
+            # overlapping pools (ps < pool) re-derive their overlap
+            # rows in-block; shared with fused_conv_pool
+            a = pool_max_subsampled(a, pool=pool, stride=ps,
+                                    out_h=blk_h, out_w=blk_w)
+        # masked write: zero the uniform-grid padding lanes so the padded
+        # output is deterministic (VR/VC columns of the operand table)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (blk_h, blk_w), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (blk_h, blk_w), 1)
+        mask = ((rows < tbl_ref[k, t, OP_VR])
+                & (cols < tbl_ref[k, t, OP_VC]))[None, :, :, None]
+        o_ref[...] = jnp.where(mask, a, 0.0)
+
+
+def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
+                    b: jax.Array, table: jax.Array,
+                    interpret: bool | None = None) -> jax.Array:
+    """Launch the persistent megakernel for one layer.
+
+    ``x`` (B, pad_h, pad_w, in_c_pad) pre-padded to the program's buffer
+    geometry; ``w`` (K, K, w_in_pad, out_c_pad); ``b`` (1, out_c_pad)
+    fp32 (zeros when the layer has no bias); ``table`` the program's
+    (n_waves, n_tiles, 8) int32 operand table. Returns the padded
+    (B, out_h_pad, out_w_pad, out_c_pad) fp32 output (masked lanes are
+    exact zeros); the caller crops to the valid dims.
+    """
+    if interpret is None:
+        from repro.kernels.common import pallas_interpret_default
+        interpret = pallas_interpret_default()
+    g = kp.wave.program
+    l = g.layer
+    B = x.shape[0]
+    if x.shape != (B, kp.pad_h, kp.pad_w, kp.in_c_kpad):
+        raise ValueError(
+            f"{l.name}: megakernel input {x.shape} != padded "
+            f"({B}, {kp.pad_h}, {kp.pad_w}, {kp.in_c_kpad})")
+    if w.shape != (l.kernel, l.kernel, kp.w_in_kpad, g.out_c_pad):
+        raise ValueError(
+            f"{l.name}: megakernel weights {w.shape} != padded "
+            f"({l.kernel}, {l.kernel}, {kp.w_in_kpad}, {g.out_c_pad})")
+    if table.shape != (kp.n_chain, kp.n_tiles, KERNEL_OP_COLS):
+        raise ValueError(
+            f"{l.name}: operand table {table.shape} != "
+            f"({kp.n_chain}, {kp.n_tiles}, {KERNEL_OP_COLS})")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,        # the SMEM operand table
+        grid=(kp.n_tiles, kp.n_chain),
+        in_specs=[
+            # halo windows via table-driven unblocked element offsets:
+            # overlap is indexed in place, never copied out
+            pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
+                         lambda t, k, tbl: (0, tbl[k, t, OP_IY],
+                                            tbl[k, t, OP_IX],
+                                            tbl[k, t, OP_C0]),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((l.kernel, l.kernel, kp.fan_width, kp.out_c_pad),
+                         lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((1, kp.out_c_pad), lambda t, k, tbl: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (B, kp.blk_h, kp.blk_w, kp.out_c_pad),
+            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)),
+        # the psum SRAM bank: one tile's chain lives here, never in HBM
+        scratch_shapes=[pltpu.VMEM((B, kp.acc_h, kp.acc_w, kp.out_c_pad),
+                                   jnp.float32)],
+    )
+    kern = functools.partial(
+        _replay_kernel, K=l.kernel, stride=l.stride,
+        acc_h=kp.acc_h, acc_w=kp.acc_w,
+        n_waves=kp.n_chain, pool=kp.pool, ps=kp.pool_stride,
+        blk_h=kp.blk_h, blk_w=kp.blk_w, relu=kp.relu,
+        fuse_pool=kp.fuse_pool)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(
+            (B, kp.out_h_pad, kp.out_w_pad, kp.out_c_pad), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(table, x, w, b)

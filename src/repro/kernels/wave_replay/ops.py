@@ -1,0 +1,96 @@
+"""Public wrapper for the persistent wave-replay megakernel.
+
+``wave_replay_layer`` takes a layer's *natural* tensors (unpadded input,
+per-group weights, optional bias), pads them to the KernelProgram's
+buffer geometry, launches the ONE ``pallas_call``, and crops the valid
+output — the whole streamed layer in a single kernel launch.
+
+``launch_count()`` counts megakernel launches at trace time (each
+``jax.jit`` trace of a network forward launches exactly one per layer) —
+the dispatch-counting hook the ISSUE 3 acceptance gate verifies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import KernelProgram
+from repro.kernels.wave_replay.kernel import wave_replay_raw
+
+_LAUNCHES = 0
+
+
+def launch_count() -> int:
+    """Megakernel launches since ``reset_launch_count`` (trace-time)."""
+    return _LAUNCHES
+
+
+def reset_launch_count() -> None:
+    global _LAUNCHES
+    _LAUNCHES = 0
+
+
+def expand_grouped(w: jax.Array, groups: int) -> jax.Array:
+    """(K, K, Cin/groups, Cout) -> block-diagonal dense (K, K, Cin, Cout).
+
+    Cross-group blocks are zeros, which contribute exact 0.0 to the
+    kernel's dense matmul — one well-shaped MXU gemm replaces ``groups``
+    skinny per-group gemms.
+    """
+    if groups == 1:
+        return w
+    oc = w.shape[-1]
+    opg = oc // groups
+    rows = [jnp.pad(w[:, :, :, g * opg:(g + 1) * opg],
+                    ((0, 0), (0, 0), (0, 0),
+                     (g * opg, oc - (g + 1) * opg)))
+            for g in range(groups)]
+    return jnp.concatenate(rows, axis=2)
+
+
+def pad_operands(kp: KernelProgram, x: jax.Array, w: jax.Array,
+                 b: jax.Array | None):
+    """Pad (x, w, b) to the megakernel's static buffer geometry.
+
+    Conv padding goes top/left; the tile grid's trailing zeros (or trim,
+    when the conv window never reaches the last rows) complete ``pad_h``
+    x ``pad_w``; channels round up to whole chunks; grouped weights are
+    expanded block-diagonally (``expand_grouped``). All padding is
+    zeros, which add exact 0.0 into every accumulation.
+    """
+    g = kp.wave.program
+    l = g.layer
+    xp = jnp.pad(x, ((0, 0),
+                     (l.pad, max(0, kp.pad_h - l.in_h - l.pad)),
+                     (l.pad, max(0, kp.pad_w - l.in_w - l.pad)),
+                     (0, kp.in_c_kpad - l.in_c)))[:, :kp.pad_h, :kp.pad_w]
+    wd = expand_grouped(w, kp.groups)
+    wp = jnp.pad(wd, ((0, 0), (0, 0),
+                      (0, kp.w_in_kpad - wd.shape[2]),
+                      (0, g.out_c_pad - l.out_c)))
+    bias = jnp.zeros((1, g.out_c_pad), jnp.float32)
+    if b is not None:
+        bias = bias.at[0, :l.out_c].set(b.astype(jnp.float32))
+    return xp, wp, bias
+
+
+def wave_replay_layer(kp: KernelProgram, x: jax.Array, w: jax.Array,
+                      b: jax.Array | None = None,
+                      table: jax.Array | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Execute one streamed CONV layer as ONE persistent pallas_call.
+
+    ``x`` (B, in_h, in_w, in_c); ``w`` (K, K, in_c/groups, out_c);
+    ``table`` defaults to the program's own operand table (pass it
+    pre-uploaded to keep it a traced argument under an outer jit).
+    Returns the valid (B, out_h, out_w, out_c) output — pooled dims when
+    the program fuses its pool — as fp32.
+    """
+    global _LAUNCHES
+    _LAUNCHES += 1
+    l = kp.wave.program.layer
+    if table is None:
+        table = jnp.asarray(kp.operand_table())
+    xp, wp, bias = pad_operands(kp, x, w, b)
+    y = wave_replay_raw(kp, xp, wp, bias, table, interpret=interpret)
+    return y[:, :kp.out_h, :kp.out_w, :l.out_c]

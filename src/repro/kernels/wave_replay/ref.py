@@ -1,0 +1,24 @@
+"""Pure-XLA oracle for the wave-replay megakernel: direct conv + bias
+(+ ReLU + overlapping max-pool), NHWC, matching the layer declaration."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def wave_replay_ref(layer, x, w, b=None, *, relu: bool = False,
+                    fuse_pool: bool = False):
+    l = layer
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(l.stride, l.stride),
+        padding=[(l.pad, l.pad), (l.pad, l.pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=l.groups)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if fuse_pool:
+        ps = l.pool_stride or l.pool
+        y = lax.reduce_window(y, -jnp.inf, lax.max, (1, l.pool, l.pool, 1),
+                              (1, ps, ps, 1), "VALID")
+    return y

@@ -70,13 +70,19 @@ def main():
                     help="number of single-image requests (--cnn)")
     ap.add_argument("--sram-kb", type=int, default=128,
                     help="planner buffer budget in KiB (--cnn)")
-    ap.add_argument("--mode", choices=("wave", "scan"), default="wave",
+    ap.add_argument("--mode", choices=("wave", "scan", "megakernel"),
+                    default="wave",
                     help="streaming executor: wave-parallel fused "
-                         "dispatches (default) or serial scan replay")
+                         "dispatches (default), serial scan replay, or "
+                         "one persistent Pallas megakernel per layer "
+                         "(partial sums stay in VMEM; bias+ReLU+pool "
+                         "fused in the kernel epilogue)")
     ap.add_argument("--pool-backend", choices=("xla", "fused"),
                     default="xla",
                     help="CONV+POOL layers: XLA maxpool after the "
-                         "executor, or the fused Pallas conv+pool kernel")
+                         "executor, or the fused Pallas conv+pool kernel "
+                         "(ignored by --mode megakernel, which fuses "
+                         "pooling itself)")
     args = ap.parse_args()
     if args.cnn:
         return cnn_main(args)

@@ -25,6 +25,7 @@ DESIGN.md §2 maps this onto the paper's control path in detail.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -40,22 +41,33 @@ class StreamingSession:
 
     ``mode`` picks the per-layer executor the session compiles:
     ``"wave"`` (default — each dependency-free wave of the schedule is
-    one fused dispatch) or ``"scan"`` (serial step replay).
+    one fused dispatch), ``"megakernel"`` (one persistent Pallas kernel
+    per layer; bias+ReLU+pool fused in the kernel epilogue, so
+    ``pool_backend`` is ignored), or ``"scan"`` (serial step replay).
     ``pool_backend="fused"`` serves CONV+POOL layers through the Pallas
     fused conv+ReLU+pool kernel.
+
+    ``donate`` (default True) donates the input batch buffer to the
+    compiled executable, so XLA reuses it for the inter-layer
+    activations in place instead of doubling peak HBM — callers must
+    treat the array passed to ``run_batch`` as consumed (the
+    micro-batch queue always builds a fresh batch, so ``submit`` /
+    ``flush`` are unaffected).
     """
 
     def __init__(self, layers: Sequence[ConvLayer], plans: Sequence[Plan],
                  weights: Sequence[Tuple[jax.Array, Optional[jax.Array]]],
                  conv_fn: Optional[Callable] = None,
                  conv_backend: str = "xla", max_batch: int = 8,
-                 mode: str = "wave", pool_backend: str = "xla"):
+                 mode: str = "wave", pool_backend: str = "xla",
+                 donate: bool = True):
         self.layers = tuple(layers)
         self.plans = tuple(plans)
         self.weights = list(weights)
         self.max_batch = int(max_batch)
         self.mode = mode
         self.pool_backend = pool_backend
+        self.donate = bool(donate)
         self.programs: List[TileProgram] = compile_network(layers, plans)
         self._ops = network_operands(self.programs, mode)
         self._forward = network_forward_fn(self.programs, conv_fn,
@@ -89,11 +101,30 @@ class StreamingSession:
                 # runs only while jax traces: counts (re)compilations
                 self.compile_count += 1
                 return self._forward(x, weights, ops_list)
-            self._executables[key] = jax.jit(traced)
+            # donate the input batch: XLA reuses its buffer for the
+            # inter-layer activations instead of doubling peak HBM.
+            # Weights and operand tables are NOT donated — they serve
+            # every subsequent call of the cached executable.
+            jitted = jax.jit(
+                traced, donate_argnums=(0,) if self.donate else ())
+            if self.donate:
+                # backends without donation support (CPU) warn on every
+                # compile; suppress just that, just here — not with a
+                # process-global filter
+                def jitted(*args, _fn=jitted):
+                    with warnings.catch_warnings():
+                        warnings.filterwarnings(
+                            "ignore",
+                            message="Some donated buffers were not usable")
+                        return _fn(*args)
+            self._executables[key] = jitted
         return self._executables[key]
 
     def run_batch(self, x: jax.Array) -> jax.Array:
-        """(B, H, W, C) -> network output, through the cached executable."""
+        """(B, H, W, C) -> network output, through the cached executable.
+
+        With ``donate=True`` (default) ``x``'s buffer is donated — treat
+        it as consumed after this call."""
         fn = self._executable(x.shape, x.dtype)
         self.calls += 1
         return fn(x, self.weights, self._ops)

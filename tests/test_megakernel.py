@@ -1,0 +1,376 @@
+"""Persistent wave-replay megakernel (ISSUE 3): fp32-tolerance parity
+with the interpreted tile walk on every AlexNet 128 KB plan, one
+pallas_call per layer (dispatch counting), KernelProgram lowering
+invariants on randomized geometries/budgets, chain coarsening, VMEM
+re-planning, fused bias+ReLU+pool epilogue, and session serving with
+donated input buffers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.decomposition import (ALEXNET_STACK, ConvLayer, evaluate,
+                                      plan_decomposition)
+from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_VC, OP_VR,
+                                 KernelProgram, compile_layer,
+                                 compile_network, lower_kernel_program,
+                                 partition_waves, validate_kernel_program)
+from repro.core.streaming import (conv2d_direct, maxpool_direct,
+                                  network_forward_fn, network_operands,
+                                  plan_for_vmem, run_layer_interpreted,
+                                  run_layer_megakernel, run_layer_streamed)
+from repro.kernels.wave_replay import (expand_grouped, launch_count,
+                                       reset_launch_count,
+                                       wave_replay_layer, wave_replay_ref)
+from repro.launch.session import StreamingSession
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # dev-only dependency (requirements.txt)
+    hypothesis = None
+
+
+def _weights(layer, key=1, scale=0.1):
+    l = layer
+    k1, k2 = jax.random.split(jax.random.key(key))
+    w = jax.random.normal(
+        k1, (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * scale
+    b = jax.random.normal(k2, (l.out_c,)) * scale
+    return w, b
+
+
+def _wave(layer, plan):
+    return partition_waves(compile_layer(layer, plan))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance gate: fp32-tolerance parity on every AlexNet 128 KB plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layer", ALEXNET_STACK, ids=lambda l: l.name)
+def test_megakernel_matches_interpreter_alexnet(layer):
+    """Every ALEXNET_STACK layer under its own 128 KB plan — grouped
+    conv2/4/5 (block-diagonal dense weights) and conv3's in_splits=256
+    partial-sum chain included. The megakernel's im2col matmuls may
+    round differently from the XLA conv by a few ULP, hence tolerance
+    rather than bit-equality (the ISSUE 3 acceptance gate)."""
+    l = layer
+    plan = plan_decomposition(l, 128 * 1024)
+    x = jax.random.normal(jax.random.key(0), (2, l.in_h, l.in_w, l.in_c))
+    w, b = _weights(l, scale=0.05)
+    mega = run_layer_streamed(l, plan, x, w, b, mode="megakernel")
+    interp = run_layer_interpreted(l, plan, x, w, b)
+    scale = float(jnp.max(jnp.abs(interp))) + 1e-6
+    assert float(jnp.max(jnp.abs(mega - interp))) / scale < 1e-5
+
+
+@pytest.mark.parametrize("vmem_kib", [64, 256, None])
+def test_megakernel_chain_coarsening_levels(vmem_kib):
+    """A deep partial-sum chain replayed 1:1 (``vmem_budget=None``) and
+    coarsened under two budget points — all three within fp32 tolerance
+    of the interpreter, exercising multi-step VMEM accumulation."""
+    layer = ConvLayer("chain", 13, 13, 64, 32, 3, pad=1)
+    plan = evaluate(layer, 2, 2, 1, 16)       # 16-wave chain, 4 tiles
+    assert plan is not None
+    wprog = _wave(layer, plan)
+    budget = vmem_kib * 1024 if vmem_kib else None
+    kp = lower_kernel_program(wprog, vmem_budget=budget)
+    if vmem_kib is None:
+        assert kp.chain_chunk == 1 and kp.n_chain == 16
+    x = jax.random.normal(jax.random.key(1), (1, 13, 13, 64))
+    w, b = _weights(layer)
+    got = run_layer_megakernel(wprog, x, w, b, vmem_budget=budget)
+    ref = run_layer_interpreted(layer, plan, x, w, b)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_megakernel_fused_epilogue_relu_pool():
+    """bias+ReLU+overlapping max-pool on the last chain step, per tile,
+    entirely in VMEM — against the direct conv+pool oracle."""
+    layer = ConvLayer("ep", 20, 20, 8, 16, 3, pad=1, pool=3, pool_stride=2)
+    plan = evaluate(layer, 2, 3, 1, 2)
+    assert plan is not None
+    wprog = _wave(layer, plan)
+    x = jax.random.normal(jax.random.key(2), (2, 20, 20, 8))
+    w, b = _weights(layer)
+    got = run_layer_megakernel(wprog, x, w, b, relu=True, fuse_pool=True)
+    ref = wave_replay_ref(layer, x, w, b, relu=True, fuse_pool=True)
+    assert got.shape == ref.shape == (2, layer.pooled_h, layer.pooled_w, 16)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_megakernel_grouped_dense_expansion():
+    """Grouped layers run ONE dense matmul over block-diagonal weights;
+    the cross-group zeros change nothing but the gemm shape."""
+    layer = ConvLayer("g", 14, 14, 8, 12, 3, pad=1, groups=2)
+    w, _ = _weights(layer)
+    wd = expand_grouped(w, 2)
+    assert wd.shape == (3, 3, 8, 12)
+    # block-diagonal: group 0's inputs never feed group 1's features
+    assert float(jnp.max(jnp.abs(wd[:, :, :4, 6:]))) == 0.0
+    assert float(jnp.max(jnp.abs(wd[:, :, 4:, :6]))) == 0.0
+    plan = evaluate(layer, 2, 2, 1, 1)
+    x = jax.random.normal(jax.random.key(3), (1, 14, 14, 8))
+    got = run_layer_streamed(layer, plan, x, w, mode="megakernel")
+    ref = conv2d_direct(x, w, 1, 1, groups=2)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_megakernel_masked_write_zeroes_grid_padding():
+    """The epilogue's VR/VC masks zero the uniform-grid padding lanes,
+    so the padded output is deterministic (not bias-polluted)."""
+    layer = ConvLayer("m", 11, 11, 4, 8, 3, pad=1)   # out 11x11
+    plan = evaluate(layer, 2, 2, 1, 1)               # blk 6 -> pad 12
+    wprog = _wave(layer, plan)
+    kp = lower_kernel_program(wprog)
+    tab = kp.operand_table()
+    assert (kp.out_h_pad, kp.out_w_pad) == (12, 12)
+    assert {(r[OP_VR], r[OP_VC]) for r in tab[0]} == \
+        {(6, 6), (6, 5), (5, 6), (5, 5)}
+    from repro.kernels.wave_replay.kernel import wave_replay_raw
+    from repro.kernels.wave_replay.ops import pad_operands
+    x = jax.random.normal(jax.random.key(4), (1, 11, 11, 4))
+    w, b = _weights(layer)
+    xp, wp, bias = pad_operands(kp, x, w, b)
+    padded = wave_replay_raw(kp, xp, wp, bias, jnp.asarray(tab))
+    assert float(jnp.max(jnp.abs(padded[:, 11:, :, :]))) == 0.0
+    assert float(jnp.max(jnp.abs(padded[:, :, 11:, :]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# One pallas_call per layer (dispatch counting) + network/serving paths
+# ---------------------------------------------------------------------------
+
+def _small_net():
+    layers = (ConvLayer("a", 16, 16, 3, 8, 3, pad=1, pool=2),
+              ConvLayer("b", 8, 8, 8, 16, 3, pad=1, groups=2))
+    weights = []
+    for i, l in enumerate(layers):
+        w = jax.random.normal(
+            jax.random.key(i),
+            (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * 0.2
+        weights.append((w, jnp.full((l.out_c,), 0.1)))
+    return layers, weights
+
+
+def _direct_net(layers, weights, x):
+    y = x
+    for l, (w, b) in zip(layers, weights):
+        y = jnp.maximum(conv2d_direct(y, w, l.stride, l.pad,
+                                      groups=l.groups) + b, 0)
+        if l.pool > 1:
+            y = maxpool_direct(y, l.pool, l.pool_stride or l.pool)
+    return y
+
+
+def test_network_megakernel_one_launch_per_layer():
+    """The ISSUE 3 dispatch gate: tracing the megakernel network forward
+    launches exactly ONE pallas_call per conv layer — pooling and ReLU
+    ride in the epilogue, not in extra dispatches."""
+    layers, weights = _small_net()
+    plans = [plan_decomposition(l, 64 * 1024) for l in layers]
+    programs = compile_network(layers, plans)
+    x = jax.random.normal(jax.random.key(5), (2, 16, 16, 3))
+    fwd = jax.jit(network_forward_fn(programs, mode="megakernel"))
+    ops = network_operands(programs, "megakernel")
+    reset_launch_count()
+    got = fwd(x, weights, ops)          # one trace
+    assert launch_count() == len(layers)
+    got2 = fwd(x, weights, ops)         # cached executable: no new trace
+    assert launch_count() == len(layers)
+    assert jnp.array_equal(got, got2)
+    assert float(jnp.max(jnp.abs(
+        got - _direct_net(layers, weights, x)))) < 1e-4
+
+
+def test_network_megakernel_replays_session_plans_when_unbudgeted():
+    """``vmem_budget=None`` must replay the session's own programs 1:1
+    (no re-planning) and still match."""
+    layers, weights = _small_net()
+    plans = [plan_decomposition(l, 64 * 1024) for l in layers]
+    programs = compile_network(layers, plans)
+    x = jax.random.normal(jax.random.key(6), (1, 16, 16, 3))
+    fwd = jax.jit(network_forward_fn(programs, mode="megakernel",
+                                     vmem_budget=None))
+    ops = network_operands(programs, "megakernel", vmem_budget=None)
+    got = fwd(x, weights, ops)
+    assert float(jnp.max(jnp.abs(
+        got - _direct_net(layers, weights, x)))) < 1e-4
+
+
+def test_session_megakernel_serves_alexnet_prefix():
+    """conv1 (pool 3/2) + conv2 (grouped, pooled) through a megakernel
+    session: one compile, micro-batch queue intact, donated inputs."""
+    stack = ALEXNET_STACK[:2]
+    weights = [(_weights(l, key=i, scale=0.05)[0],
+                jnp.zeros((l.out_c,))) for i, l in enumerate(stack)]
+    x = jax.random.normal(jax.random.key(0), (2, 227, 227, 3))
+    ref = _direct_net(stack, weights, x)
+    sess = StreamingSession.for_network(stack, weights, max_batch=2,
+                                        mode="megakernel")
+    assert sess.donate            # donation is the serving default
+    y = sess.run_batch(jnp.array(x))      # pass a copy: input is donated
+    assert float(jnp.max(jnp.abs(y - ref))) < 1e-3
+    assert sess.compile_count == 1
+    t0, t1 = sess.submit(x[0]), sess.submit(x[1])
+    out0 = sess.result(t0)
+    assert float(jnp.max(jnp.abs(out0 - ref[0]))) < 1e-3
+    sess.discard(t1)
+    assert sess.compile_count == 1        # same batch shape, no retrace
+
+
+def test_session_donate_flag_plumbed():
+    layers, weights = _small_net()
+    sess = StreamingSession.for_network(layers, weights,
+                                        sram_budget=64 * 1024,
+                                        max_batch=2, donate=False)
+    assert not sess.donate
+    x = jax.random.normal(jax.random.key(7), (2, 16, 16, 3))
+    y1 = sess.run_batch(x)
+    y2 = sess.run_batch(x)      # donate=False: reuse is always safe
+    assert jnp.array_equal(y1, y2)
+
+
+# ---------------------------------------------------------------------------
+# Lowering invariants: rectangular SMEM tables, bounds, masks, chains
+# ---------------------------------------------------------------------------
+
+def _assert_kernel_invariants(kp: KernelProgram):
+    validate_kernel_program(kp)     # the library's own checks
+    tab = kp.operand_table()
+    assert tab.shape == (kp.n_chain, kp.n_tiles, KERNEL_OP_COLS)
+    assert kp.n_chain * kp.chain_chunk >= kp.wave.n_waves
+    assert kp.c_width == kp.fan_width
+    assert kp.vmem_bytes > 0
+    # chain steps cover the padded channel range without overlap
+    if kp.wave.program.layer.groups == 1:
+        c0s = [int(tab[j][0][OP_C0]) for j in range(kp.n_chain)]
+        assert c0s == [j * kp.c_width for j in range(kp.n_chain)]
+
+
+def test_kernel_lowering_sweep_plan_grid():
+    """Deterministic sweep across tile/feat/chain shapes x pool fusion —
+    runs even without hypothesis."""
+    layers = [
+        ConvLayer("s1", 21, 17, 8, 12, 3, stride=2, pad=1),
+        ConvLayer("s2", 27, 27, 96, 64, 5, pad=2, groups=2,
+                  pool=3, pool_stride=2),
+        ConvLayer("s3", 13, 13, 16, 24, 3, pad=1, pool=2),
+    ]
+    checked = 0
+    for layer in layers:
+        for th in (1, 2, 3):
+            for tw in (1, 2):
+                for fs in (1, 2):
+                    for cs in (1, 2, 4):
+                        plan = evaluate(layer, th, tw, fs, cs)
+                        if plan is None:
+                            continue
+                        wprog = _wave(layer, plan)
+                        for fuse in ({False, layer.pool > 1}):
+                            for budget in (None, 64 * 1024, 8 * 2 ** 20):
+                                _assert_kernel_invariants(
+                                    lower_kernel_program(
+                                        wprog, relu=True, fuse_pool=fuse,
+                                        vmem_budget=budget))
+                                checked += 1
+    assert checked > 50
+
+
+@pytest.mark.parametrize("layer", ALEXNET_STACK, ids=lambda l: l.name)
+def test_kernel_lowering_alexnet_plans(layer):
+    plan = plan_decomposition(layer, 128 * 1024)
+    wprog = _wave(layer, plan)
+    kp = lower_kernel_program(wprog, vmem_budget=None)
+    _assert_kernel_invariants(kp)
+    assert kp.n_chain == wprog.n_waves          # 1:1 replay
+    kp2 = lower_kernel_program(wprog)           # default budget coarsens
+    _assert_kernel_invariants(kp2)
+    assert kp2.n_chain <= kp.n_chain
+
+
+def test_lowering_rejects_poolless_fuse():
+    layer = ConvLayer("np", 8, 8, 3, 4, 3, pad=1)
+    wprog = _wave(layer, evaluate(layer, 1, 1, 1, 1))
+    with pytest.raises(ValueError, match="without a pool"):
+        lower_kernel_program(wprog, fuse_pool=True)
+
+
+def test_validate_rejects_corrupted_table():
+    layer = ConvLayer("v", 8, 8, 4, 8, 3, pad=1)
+    kp = lower_kernel_program(_wave(layer, evaluate(layer, 2, 1, 1, 1)))
+    bad_row = (10_000,) + kp.table[0][0][1:]
+    corrupted = dataclasses.replace(
+        kp, table=((bad_row,) + kp.table[0][1:],) + kp.table[1:])
+    with pytest.raises(ValueError, match="outside the padded"):
+        validate_kernel_program(corrupted)
+
+
+def test_plan_for_vmem_prefers_fewest_steps():
+    layer = ALEXNET_STACK[2]        # conv3: 128 KB plan needs 256 waves
+    plan = plan_for_vmem(layer, 8 * 2 ** 20, False)
+    kp = lower_kernel_program(_wave(layer, plan), relu=True,
+                              vmem_budget=8 * 2 ** 20)
+    assert kp.n_tiles * kp.n_chain < 256
+    assert kp.vmem_bytes <= 8 * 2 ** 20
+    # a tiny budget forces real decomposition again
+    tight = plan_for_vmem(layer, 512 * 1024, False)
+    kp_tight = lower_kernel_program(_wave(layer, tight), relu=True,
+                                    vmem_budget=None)
+    assert kp_tight.n_tiles * kp_tight.n_chain > 1
+
+
+# ---------------------------------------------------------------------------
+# Property-based lowering checks (skipped cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+if hypothesis is not None:
+    @hypothesis.given(
+        st.integers(6, 24), st.integers(6, 24),
+        st.integers(1, 8), st.integers(1, 12),
+        st.sampled_from([1, 3, 5]), st.sampled_from([1, 2]),
+        st.integers(0, 2),
+        st.sampled_from([16, 32, 64, 128]),          # SRAM KiB
+        st.sampled_from([None, 64 * 1024, 2 ** 23]),  # kernel VMEM
+        st.booleans(),
+    )
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_kernel_lowering_property_random(h, w, cin, cout, k, stride,
+                                             pad, sram_kib, vmem, relu):
+        """Randomized geometry x randomized *planner budget* x kernel
+        budget: whatever plan_decomposition picks must lower to a valid
+        rectangular KernelProgram."""
+        layer = ConvLayer("t", h, w, cin, cout, k, stride=stride, pad=pad)
+        if layer.out_h <= 0 or layer.out_w <= 0:
+            return
+        try:
+            plan = plan_decomposition(layer, sram_kib * 1024)
+        except ValueError:
+            return                      # no feasible plan at this budget
+        wprog = _wave(layer, plan)
+        _assert_kernel_invariants(lower_kernel_program(
+            wprog, relu=relu, vmem_budget=vmem))
+
+    @hypothesis.given(
+        st.integers(8, 20), st.integers(8, 20),
+        st.integers(2, 6), st.integers(2, 8),
+        st.sampled_from([2, 3]), st.integers(1, 2), st.integers(1, 2),
+        st.integers(1, 4),
+    )
+    @hypothesis.settings(max_examples=12, deadline=None)
+    def test_megakernel_matches_reference_random(h, w, cin, cout, k,
+                                                 th, tw, cs):
+        """Randomized small geometries: megakernel output vs the XLA
+        oracle (end-to-end through padding, tables, and epilogue)."""
+        layer = ConvLayer("r", h, w, cin, cout, k, pad=1)
+        plan = evaluate(layer, th, tw, 1, cs)
+        if plan is None:
+            return
+        x = jax.random.normal(jax.random.key(0), (1, h, w, cin))
+        wts, b = _weights(layer)
+        got = wave_replay_layer(lower_kernel_program(_wave(layer, plan)),
+                                x, wts, b)
+        ref = wave_replay_ref(layer, x, wts, b)
+        assert float(jnp.max(jnp.abs(got - ref))) < 1e-4

@@ -1,0 +1,93 @@
+"""CI benchmark-regression gate: normalised executor-slowdown detection
+and the modelled-DRAM-traffic growth check (benchmarks/regression_gate)."""
+import importlib.util
+import pathlib
+
+import pytest
+
+_GATE = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" \
+    / "regression_gate.py"
+spec = importlib.util.spec_from_file_location("regression_gate", _GATE)
+gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(gate)
+
+
+def _payload(direct_us, wave_us, mega_us, traffic=1000):
+    return {"records": [
+        {"name": "streaming_alexnet_direct", "us_per_call": direct_us,
+         "meta": {}},
+        {"name": "streaming_alexnet_wave", "us_per_call": wave_us,
+         "meta": {"dram_traffic_bytes": traffic}},
+        {"name": "streaming_alexnet_megakernel", "us_per_call": mega_us,
+         "meta": {"dram_traffic_bytes": traffic}},
+        {"name": "streaming_alexnet_interpreted", "us_per_call": 1e6,
+         "meta": {}},
+    ]}
+
+
+def test_gate_passes_identical_runs():
+    base = _payload(100, 300, 200)
+    assert gate.compare(base, base) == []
+
+
+def test_gate_is_machine_portable():
+    """A uniformly 3x slower machine changes no group share."""
+    base = _payload(100, 300, 200)
+    cur = _payload(300, 900, 600)
+    assert gate.compare(base, cur) == []
+
+
+def test_gate_fails_on_executor_slowdown():
+    base = _payload(100, 300, 200)
+    cur = _payload(100, 300, 300)       # megakernel ratio 2.0 -> 3.0
+    fails = gate.compare(base, cur)
+    assert len(fails) == 1 and "megakernel" in fails[0]
+    # within threshold: 10% is fine
+    ok = gate.compare(base, _payload(100, 300, 215))
+    assert ok == []
+
+
+def test_gate_fails_on_traffic_growth():
+    base = _payload(100, 300, 200, traffic=1000)
+    cur = _payload(100, 300, 200, traffic=1200)
+    fails = gate.compare(base, cur)
+    assert len(fails) == 2              # wave + megakernel rows grew
+    assert all("DRAM traffic" in f for f in fails)
+
+
+def test_gate_absolute_mode():
+    base = _payload(100, 300, 200)
+    cur = _payload(300, 900, 600)       # slower machine
+    fails = gate.compare(base, cur, absolute=True)
+    assert len(fails) == 2              # wave + megakernel (direct skipped)
+
+
+def test_gate_skips_noisy_and_missing_records():
+    base = _payload(100, 300, 200)
+    cur = {"records": [r for r in _payload(100, 300, 9000)["records"]
+                       if r["name"] != "streaming_alexnet_megakernel"]}
+    # interpreted is always skipped; missing rows don't crash the gate
+    assert gate.compare(base, cur) == []
+
+
+def test_merge_min_takes_best_of_runs():
+    """Contention poisons whole runs; the merge takes each record's best
+    run, so one clean run per mode is enough to clear the gate."""
+    run1 = _payload(100, 900, 200)      # wave poisoned
+    run2 = _payload(100, 300, 600)      # megakernel poisoned
+    merged = gate.merge_min([run1, run2])
+    us = {r["name"]: r["us_per_call"] for r in merged["records"]}
+    assert us["streaming_alexnet_wave"] == 300
+    assert us["streaming_alexnet_megakernel"] == 200
+    assert gate.compare(_payload(100, 300, 200), merged) == []
+
+
+def test_gate_cli(tmp_path):
+    import json
+    b = tmp_path / "base.json"
+    c = tmp_path / "cur.json"
+    b.write_text(json.dumps(_payload(100, 300, 200)))
+    c.write_text(json.dumps(_payload(100, 300, 400)))
+    with pytest.raises(SystemExit):
+        gate.main(["--baseline", str(b), "--current", str(c)])
+    gate.main(["--baseline", str(b), "--current", str(b)])

@@ -336,3 +336,34 @@ if hypothesis is not None:
             return
         wprog = partition_waves(compile_layer(layer, plan))
         _assert_wave_invariants(wprog)
+
+    @hypothesis.given(
+        st.integers(8, 32), st.integers(8, 32),
+        st.integers(1, 16), st.integers(1, 24),
+        st.sampled_from([1, 3, 5]), st.sampled_from([1, 2]),
+        st.integers(0, 2),
+        st.sampled_from([8, 16, 32, 64, 128]),   # planner budget, KiB
+    )
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_wave_partition_property_planner_budgets(h, w, cin, cout, k,
+                                                     stride, pad,
+                                                     sram_kib):
+        """Whatever plan the *planner* picks under a randomized SRAM
+        budget (not just hand-chosen splits or the AlexNet 128 KB
+        plans) must wave-partition cleanly, including the
+        wave-invariant-window invariant the hoisted gather and the
+        megakernel tables rely on."""
+        layer = ConvLayer("t", h, w, cin, cout, k, stride=stride, pad=pad)
+        if layer.out_h <= 0 or layer.out_w <= 0:
+            return
+        try:
+            plan = plan_decomposition(layer, sram_kib * 1024)
+        except ValueError:
+            return              # infeasible at this budget
+        wprog = partition_waves(compile_layer(layer, plan))
+        _assert_wave_invariants(wprog)
+        validate_waves(wprog)
+        # windows are wave-invariant: the once-per-window gather holds
+        for wave in wprog.tile_waves[1:]:
+            assert [r[:4] for r in wave] == \
+                [r[:4] for r in wprog.tile_waves[0]]
