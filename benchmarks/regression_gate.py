@@ -15,6 +15,15 @@ Also checks the modelled DRAM traffic (``dram_traffic_bytes``): traffic
 is a pure function of the plans, so any *increase* is a planner/lowering
 regression, not noise, and fails at any size.
 
+The int8 speedup gate (ISSUE 4 acceptance): when the baseline carries
+both megakernel rows, the *committed* int8/fp32 throughput ratio must
+be at least ``--int8-speedup`` (default 1.2) — the quantized datapath
+has to be measurably faster than fp32 on the same schedules, or it is
+not reproducing the paper's fixed-point efficiency story. The current
+run's ratio is gated too, with the same relative ``--threshold`` slack
+the share checks get (CI machines are noisy; the committed baseline is
+the artifact of record).
+
 ``--current`` accepts several measurement files; they merge by
 per-record minimum before comparing. CI runs the smoke bench more than
 once and gates on the merge: contention tends to poison a whole run at
@@ -39,6 +48,10 @@ GROUPS = ("streaming_conv1", "streaming_alexnet")
 # single-rep by design (benchmarks/run.py --smoke omits them entirely)
 # and far too noisy to gate
 SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool")
+
+# the int8 acceptance ratio: fp32 megakernel us / int8 megakernel us
+FP32_MEGA_ROW = "streaming_alexnet_megakernel"
+INT8_MEGA_ROW = "streaming_alexnet_megakernel_int8"
 
 
 def _records(payload: dict) -> dict:
@@ -77,8 +90,16 @@ def _group_sums(recs: dict, names) -> dict:
     return sums
 
 
+def _int8_ratio(recs: dict) -> "float | None":
+    if FP32_MEGA_ROW in recs and INT8_MEGA_ROW in recs:
+        return recs[FP32_MEGA_ROW]["us_per_call"] \
+            / recs[INT8_MEGA_ROW]["us_per_call"]
+    return None
+
+
 def compare(baseline: dict, current: dict, threshold: float = 0.20,
-            absolute: bool = False) -> list[str]:
+            absolute: bool = False,
+            int8_speedup: float = 1.2) -> list[str]:
     """Return a list of failure strings (empty = gate passes)."""
     base, cur = _records(baseline), _records(current)
     shared = [n for n in _gated(base) if n in cur]
@@ -105,6 +126,31 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20,
             failures.append(
                 f"{name}: modelled DRAM traffic grew "
                 f"{b_traffic} -> {c_traffic} bytes (plan regression)")
+    # int8 acceptance ratio: the baseline ratio is gated strictly (it is
+    # the committed artifact); the current run gets the same relative
+    # slack as the share checks
+    b_ratio = _int8_ratio(base)
+    if b_ratio is not None and b_ratio < int8_speedup:
+        failures.append(
+            f"{INT8_MEGA_ROW}: committed baseline int8 speedup "
+            f"{b_ratio:.2f}x < required {int8_speedup:.2f}x over "
+            f"{FP32_MEGA_ROW}")
+    c_ratio = _int8_ratio(cur)
+    if b_ratio is not None and c_ratio is None:
+        # once the baseline carries the int8 row, a current run without
+        # it means the bench stopped measuring the quantized path — that
+        # must not silently disable the acceptance check
+        missing = [n for n in (FP32_MEGA_ROW, INT8_MEGA_ROW) if n not in cur]
+        failures.append(
+            f"{INT8_MEGA_ROW}: current run is missing {missing} — the "
+            f"int8 speedup gate cannot be evaluated")
+    if b_ratio is not None and c_ratio is not None:
+        floor = int8_speedup / (1.0 + threshold)
+        if c_ratio < floor:
+            failures.append(
+                f"{INT8_MEGA_ROW}: measured int8 speedup {c_ratio:.2f}x "
+                f"< {floor:.2f}x floor ({int8_speedup:.2f}x required "
+                f"with {threshold:.0%} noise slack)")
     return failures
 
 
@@ -119,6 +165,9 @@ def main(argv=None) -> None:
                     help="max allowed fractional slowdown (default 0.20)")
     ap.add_argument("--absolute", action="store_true",
                     help="compare raw us_per_call (same-machine runs)")
+    ap.add_argument("--int8-speedup", type=float, default=1.2,
+                    help="required int8/fp32 megakernel throughput ratio "
+                         "when both rows are present (default 1.2)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -127,7 +176,8 @@ def main(argv=None) -> None:
         with open(path) as f:
             currents.append(json.load(f))
     current = merge_min(currents)
-    failures = compare(baseline, current, args.threshold, args.absolute)
+    failures = compare(baseline, current, args.threshold, args.absolute,
+                       int8_speedup=args.int8_speedup)
     compared = [n for n in _gated(_records(baseline))
                 if n in _records(current)]
     if failures:

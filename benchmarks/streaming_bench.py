@@ -13,6 +13,10 @@
   streamed-megakernel  ONE persistent Pallas kernel per layer: VMEM
                        scratch carries partial sums across the chain,
                        bias+ReLU+pool fused in the epilogue
+  megakernel-int8      the quantized megakernel (ISSUE 4): PTQ-calibrated
+                       int8 operands, int32 VMEM accumulators, requantize
+                       fused into each epilogue, raw int8 activations
+                       between layers — same KernelPrograms as fp32
 
 The scan/wave rows replay a static schedule from one compiled
 executable — the software analogue of the paper's command decoder — so
@@ -206,6 +210,30 @@ def _stack_records(reps: int, smoke: bool) -> list[dict]:
         pallas_calls=len(programs),
         grid_steps=sum(kp.n_tiles * kp.n_chain for kp in kprogs),
         dram_traffic_bytes=mega_traffic, psum_hbm_bytes=0))
+
+    # int8 megakernel: calibrate on the bench input, then serve the
+    # quantized datapath over the SAME kernel programs / operand tables.
+    # The ISSUE 4 acceptance gate reads this row's ratio to the fp32
+    # megakernel row from the committed baseline
+    # (benchmarks/regression_gate.py --int8-speedup).
+    from repro.quant import accuracy_report, calibrate_network
+    qnet = calibrate_network(layers, weights, x)
+    fwd_q = jax.jit(network_forward_fn(programs, mode="megakernel",
+                                       precision="int8", qnet=qnet))
+    ops_q = network_operands(programs, "megakernel")
+    qweights = qnet.device_weights()
+    us_q, _ = _time(fwd_q, x, qweights, ops_q, reps=reps)
+    int8_meta = dict(
+        speedup_vs_fp32_megakernel=round(timings["megakernel"] / us_q, 2),
+        pallas_calls=len(programs),
+        # same element counts as the fp32 megakernel plans, 1-byte
+        # operands instead of the model's 2-byte fixed-point words
+        dram_traffic_bytes=mega_traffic // 2, psum_hbm_bytes=0)
+    if not smoke:        # SNR needs the int32 reference chain: one-shot
+        report = accuracy_report(qnet, weights, x, runner="ref")
+        int8_meta["min_layer_snr_db"] = min(r["snr_db"] for r in report)
+    recs.append(_record("streaming_alexnet_megakernel_int8", us_q,
+                        **int8_meta))
     return recs
 
 

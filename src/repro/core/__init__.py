@@ -4,9 +4,12 @@ from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
                                       PAPER_CONV1_PLAN, ConvLayer, Plan,
                                       evaluate, plan_decomposition,
                                       tile_grid)
-from repro.core.quantization import (QFormat, calibrate_frac_bits,
-                                     dequantize, fake_quant,
-                                     fixed_point_matmul, quantize)
+from repro.core.quantization import (EXACT_FP32_FAN, INT8_QMAX, QFormat,
+                                     calibrate_frac_bits, dequantize,
+                                     dequantize_int8, fake_quant,
+                                     fixed_point_matmul, quantize,
+                                     quantize_int8_sym, requant_params,
+                                     requantize_i32, rounding_rshift)
 from repro.core.schedule import (TileProgram, WaveProgram, compile_layer,
                                  compile_layer_waves, compile_network,
                                  compile_network_waves, partition_waves,

@@ -44,6 +44,12 @@ Four executors share the schedule (DESIGN.md §2):
     In-tile reductions run as im2col matmuls, so outputs match the
     interpreter to fp32 tolerance (not bit-exactly).
 
+``precision="int8"`` swaps the megakernel's datapath for the paper's
+fixed-point pipeline (kernels/wave_replay_q, DESIGN.md §2.3): int8
+operands, int32 VMEM accumulators, requantize+ReLU+pool fused into the
+kernel epilogue — over the SAME KernelProgram schedules and operand
+tables, bit-exact against the int32 reference model.
+
 The per-tile compute is pluggable: the XLA conv (default) or the Pallas
 streaming kernel (kernels/conv_stream) via ``conv_fn=pallas_tile_conv_fn``
 or ``conv_backend="pallas"`` — tile windows arrive halo-inclusive and
@@ -57,7 +63,7 @@ import functools
 import itertools
 import weakref
 from collections import OrderedDict
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -395,7 +401,7 @@ def run_layer_wave(wprog: WaveProgram, x: jax.Array, w: jax.Array,
     _check_input(l, x)
     conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride,
                                          conv_fn_name)
-    key = (wprog.geometry, conv_key, b is not None, x.shape[0],
+    key = (wprog.geometry, conv_key, "fp32", b is not None, x.shape[0],
            str(x.dtype))
     fn = _cached_executable(key, lambda: jax.jit(
         functools.partial(_wave_executor, wprog, conv_fn, b is not None)))
@@ -454,13 +460,71 @@ def run_layer_megakernel(wprog: WaveProgram, x: jax.Array, w: jax.Array,
 
 
 def _run_kernel_program(kprog: KernelProgram, x, w, b):
-    key = (kprog.geometry, "megakernel", b is not None, x.shape[0],
-           str(x.dtype))
+    key = (kprog.geometry, "megakernel", "fp32", b is not None,
+           x.shape[0], str(x.dtype))
     fn = _cached_executable(key, lambda: jax.jit(
         functools.partial(_megakernel_executor, kprog, b is not None)))
     table = jnp.asarray(kprog.operand_table())
     bias = b if b is not None else jnp.zeros((0,), x.dtype)
     return fn(x, w, bias, table)
+
+
+# ---------------------------------------------------------------------------
+# Quantized (int8) megakernel executor — precision="int8" (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def _megakernel_q_executor(kprog: KernelProgram, pre_shift: int,
+                           fan_chunk: int, in_scale: float,
+                           out_scale: float, dequantize: bool,
+                           x, wq, bq, m, shift, table):
+    """Replay a layer through the int8 megakernel.
+
+    fp32 inputs are quantized at entry (symmetric, the calibrated
+    ``in_scale``); int8 inputs pass straight through — that is how the
+    network path chains layers without dequant round-trips. The kernel
+    epilogue requantizes into the layer's calibrated output scale;
+    ``dequantize`` converts back to fp32 for float callers.
+    """
+    from repro.core.quantization import dequantize_int8, quantize_int8_sym
+    from repro.kernels.wave_replay_q.ops import wave_replay_q_layer
+    xq = x if x.dtype == jnp.int8 else quantize_int8_sym(x, in_scale)
+    yq = wave_replay_q_layer(kprog, xq, wq, bq, m, shift,
+                             pre_shift=pre_shift, fan_chunk=fan_chunk,
+                             table=table)
+    return dequantize_int8(yq, out_scale) if dequantize else yq
+
+
+def run_layer_megakernel_q(wprog: WaveProgram, x: jax.Array, quant,
+                           relu: bool = False, fuse_pool: bool = False,
+                           dequantize: bool = True,
+                           vmem_budget: Optional[int] = _VMEM_DEFAULT
+                           ) -> jax.Array:
+    """Execute a WaveProgram as ONE int8 Pallas megakernel launch.
+
+    ``quant`` is the layer's ``LayerQuant`` (quant/calibrate.py). The
+    KernelProgram lowering is byte-identical to the fp32 megakernel's —
+    same grid, same SMEM operand table, same ``vmem_budget`` chain
+    coarsening — only the datapath (int8 operands, int32 VMEM
+    accumulator, requantize-on-writeback epilogue) changes; quantization
+    never perturbs the planner. Output is bit-exact against
+    ``kernels/wave_replay_q/ref.py`` (integer arithmetic end to end).
+    """
+    l = wprog.program.layer
+    _check_input(l, x)
+    kprog = _lower_kernel_cached(wprog, relu=relu, fuse_pool=fuse_pool,
+                                 vmem_budget=vmem_budget)
+    # precision is an explicit key component: the int8 path accepts the
+    # SAME fp32 inputs over the SAME geometry as the fp32 megakernel,
+    # so without it the two executables would collide
+    key = (kprog.geometry, "megakernel", "int8", quant.pre_shift,
+           quant.fan_chunk, float(quant.in_scale),
+           float(quant.out_scale), dequantize, x.shape[0], str(x.dtype))
+    fn = _cached_executable(key, lambda: jax.jit(functools.partial(
+        _megakernel_q_executor, kprog, quant.pre_shift, quant.fan_chunk,
+        float(quant.in_scale), float(quant.out_scale), dequantize)))
+    table = jnp.asarray(kprog.operand_table())
+    wq, bq, m, shift = quant.device_arrays()
+    return fn(x, wq, bq, m, shift, table)
 
 
 # One jitted executable per (schedule geometry, backend, batch shape).
@@ -527,7 +591,7 @@ def run_layer_scheduled(program: TileProgram, x: jax.Array, w: jax.Array,
     _check_input(l, x)
     conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride,
                                          conv_fn_name)
-    key = (program.geometry, conv_key, b is not None, x.shape[0],
+    key = (program.geometry, conv_key, "fp32", b is not None, x.shape[0],
            str(x.dtype))
     fn = _cached_executable(key, lambda: jax.jit(
         functools.partial(_scan_executor, program, conv_fn, b is not None)))
@@ -541,7 +605,9 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
                        conv_fn: Optional[Callable] = None,
                        mode: str = "wave",
                        conv_backend: str = "xla",
-                       conv_fn_name: Optional[str] = None) -> jax.Array:
+                       conv_fn_name: Optional[str] = None,
+                       precision: str = "fp32",
+                       quant=None) -> jax.Array:
     """Execute one CONV layer via the planned tile schedule.
 
     ``mode="wave"`` (default) batches each dependency-free wave into one
@@ -549,8 +615,32 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
     ONE persistent Pallas kernel (partial sums live in VMEM scratch; the
     pluggable conv backend is ignored — the kernel is the backend);
     ``mode="jit"`` (alias ``"scan"``) compiles the serial scan replay;
-    ``mode="interpret"`` runs the original per-tile Python loop."""
+    ``mode="interpret"`` runs the original per-tile Python loop.
+
+    ``precision="int8"`` (megakernel mode only) runs the fixed-point
+    datapath: int8 operands, int32 VMEM accumulation, requantize fused
+    into the epilogue. Pass the layer's calibrated ``quant``
+    (``quant.calibrate.LayerQuant``); omitting it calibrates absmax
+    scales on the fly from this call's ``x``/``w``/``b`` (fine for
+    experiments — real serving should calibrate once over a set). The
+    fp32 input is quantized at entry and the int8 output dequantized,
+    so signatures and return types match the float executors.
+    """
     mode = _normalize_mode(mode)
+    if precision not in ("fp32", "int8"):
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(expected fp32 | int8)")
+    if precision == "int8":
+        if mode != "megakernel":
+            raise ValueError(
+                "precision='int8' runs on the quantized megakernel only "
+                "— pass mode='megakernel' (the scan/wave executors have "
+                "no integer datapath)")
+        if quant is None:
+            from repro.quant.calibrate import calibrate_layer
+            quant = calibrate_layer(layer, w, b, x)
+        wprog = _partition_waves_cached(compile_layer(layer, plan))
+        return run_layer_megakernel_q(wprog, x, quant)
     if mode == "interpret":
         return run_layer_interpreted(layer, plan, x, w, b, conv_fn)
     if mode == "megakernel":
@@ -584,8 +674,10 @@ def network_forward_fn(programs: Sequence[TileProgram],
                        conv_backend: str = "xla",
                        mode: str = "wave",
                        pool_backend: str = "xla",
-                       vmem_budget: Optional[int] = _VMEM_DEFAULT
-                       ) -> Callable:
+                       vmem_budget: Optional[int] = _VMEM_DEFAULT,
+                       precision: str = "fp32",
+                       qnet=None,
+                       dequantize: bool = True) -> Callable:
     """Whole-network forward over pre-lowered programs, built for one jit.
 
     Returns ``f(x, weights, ops_list) -> y`` where ``weights`` is a list
@@ -609,6 +701,20 @@ def network_forward_fn(programs: Sequence[TileProgram],
     re-plans each layer's schedule at the kernel's VMEM budget point
     (``plan_for_vmem``; ``None`` replays the given programs 1:1) — pass
     the SAME value to ``network_operands`` so the tables match.
+
+    ``precision="int8"`` (megakernel only) builds the fixed-point
+    forward over a calibrated ``qnet``
+    (``quant.calibrate.QuantizedNetwork``): the input batch is quantized
+    once at entry, every layer runs the int8 megakernel — int32 VMEM
+    accumulation, requantize+ReLU+pool in the epilogue — and raw int8
+    activations flow between layers with **zero** dequant round-trips
+    (the calibration chained each layer's output scale into the next
+    layer's input scale). ``weights`` must then be the per-layer
+    ``(wq, bias_q, m, shift)`` tuples from ``qnet.device_weights()``;
+    the operand tables are the SAME megakernel tables as fp32
+    (``network_operands(programs, "megakernel", vmem_budget)``) —
+    quantization reuses the KernelProgram schedules unchanged.
+    ``dequantize=False`` returns the final activation as raw int8.
     """
     mode = _normalize_mode(mode)
     if mode == "interpret":
@@ -617,6 +723,37 @@ def network_forward_fn(programs: Sequence[TileProgram],
     if pool_backend not in ("xla", "fused"):
         raise ValueError(f"unknown pool backend {pool_backend!r} "
                          f"(expected xla | fused)")
+    if precision not in ("fp32", "int8"):
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(expected fp32 | int8)")
+    if precision == "int8":
+        if mode != "megakernel":
+            raise ValueError(
+                "precision='int8' runs on the quantized megakernel only "
+                "— pass mode='megakernel'")
+        if qnet is None:
+            raise ValueError(
+                "precision='int8' needs a calibrated QuantizedNetwork — "
+                "run repro.quant.calibrate_network over a few batches "
+                "first and pass it as qnet=")
+        from repro.core.quantization import (dequantize_int8,
+                                             quantize_int8_sym)
+        from repro.kernels.wave_replay_q.ops import wave_replay_q_layer
+        kprogs = network_kernel_programs(programs, vmem_budget)
+        in_scale = float(qnet.in_scale)
+        out_scale = float(qnet.out_scale)
+        statics = [(q.pre_shift, q.fan_chunk) for q in qnet.quants]
+
+        def forward_q(x, weights, ops_list):
+            xq = quantize_int8_sym(x, in_scale)
+            for kp, (ps, fc), (wq, bq, m, s), ops in zip(
+                    kprogs, statics, weights, ops_list):
+                xq = wave_replay_q_layer(kp, xq, wq, bq, m, s,
+                                         pre_shift=ps, fan_chunk=fc,
+                                         table=ops)
+            return dequantize_int8(xq, out_scale) if dequantize else xq
+
+        return forward_q
     if mode == "megakernel":
         kprogs = [_network_kernel_program(p, vmem_budget)
                   for p in programs]
@@ -696,6 +833,16 @@ def plan_for_vmem(layer: ConvLayer,
     if best is None:
         raise ValueError(f"{layer.name}: no feasible megakernel plan")
     return best[1]
+
+
+def network_kernel_programs(
+        programs: Sequence[TileProgram],
+        vmem_budget: Optional[int] = _VMEM_DEFAULT) -> List["KernelProgram"]:
+    """The megakernel lowering of a whole network, as the network path
+    builds it (ReLU fused, pools fused, VMEM re-planning) — public so
+    the int8 weight packers and the accuracy harness lower the exact
+    same programs the forward fn replays."""
+    return [_network_kernel_program(p, vmem_budget) for p in programs]
 
 
 def _network_kernel_program(

@@ -1,2 +1,4 @@
 from repro.kernels.quant_matmul.ops import quant_matmul
-from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.quant_matmul.ref import (quant_matmul_acc_ref,
+                                            quant_matmul_ref,
+                                            quant_matmul_requant_ref)

@@ -1,7 +1,53 @@
-"""Pure-jnp oracle for the quantized matmul."""
+"""int32-accumulation oracle for the quantized matmul kernel.
+
+Three layers, mirroring the hardware datapath the kernel reproduces
+(paper Table 2: fixed-point operands, 32-bit accumulators,
+scale-on-writeback):
+
+  * ``quant_matmul_acc_ref`` — the raw int32 accumulator, every product
+    and every sum exact. This is the value the kernel's VMEM scratch
+    holds after its last K block, so kernel-vs-ref comparisons of
+    derived outputs inherit bit-level meaning from it.
+  * ``quant_matmul_ref`` — accumulator dequantized to fp32 by the
+    per-tensor activation scale and per-output-channel weight scales
+    (what ``quant_matmul`` returns).
+  * ``quant_matmul_requant_ref`` — accumulator requantized back to int8
+    through the SAME fixed-point multiply + rounding shift the
+    streaming kernels use (``core/quantization.py::requantize_i32``),
+    saturating at ±127 — the full write-back-at-operand-precision path,
+    exercised by the saturation tests in tests/test_kernels_quant.py.
+"""
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import requant_params, requantize_i32
+
+
+def quant_matmul_acc_ref(xq, wq):
+    """(M, K) int8 x (K, N) int8 -> exact (M, N) int32 accumulator."""
+    return jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
 
 
 def quant_matmul_ref(xq, wq, sx, sw):
-    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
-    return acc.astype(jnp.float32) * jnp.asarray(sx, jnp.float32) * sw[None, :]
+    """Dequantized fp32 output: acc * sx * sw[None, :]."""
+    acc = quant_matmul_acc_ref(xq, wq)
+    return acc.astype(jnp.float32) * jnp.asarray(sx, jnp.float32) \
+        * sw[None, :]
+
+
+def quant_matmul_requant_ref(xq, wq, sx, sw, out_scale: float):
+    """Requantized int8 output in ``out_scale``: the paper's
+    accumulate-wide, write-back-narrow datapath, end to end.
+
+    The fixed-point multiplier/shift pairs come from ``requant_params``
+    with the exact accumulator bound for this K, so the integer path is
+    deterministic and saturation (|acc * scale / out_scale| > 127)
+    clips exactly at ±127."""
+    K = xq.shape[-1]
+    acc_bound = int(K) * 127 * 128
+    ratio = np.asarray(sx, np.float64) * np.asarray(sw, np.float64) \
+        / float(out_scale)
+    m, shift, pre_shift = requant_params(ratio, acc_bound)
+    acc = quant_matmul_acc_ref(xq, wq)
+    return requantize_i32(acc, jnp.asarray(m), jnp.asarray(shift),
+                          pre_shift)

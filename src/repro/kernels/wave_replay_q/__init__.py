@@ -1,0 +1,10 @@
+from repro.kernels.wave_replay_q.kernel import (exact_channel_chunk,
+                                                q_weight_fan,
+                                                q_weight_full_fan,
+                                                wave_replay_q_raw)
+from repro.kernels.wave_replay_q.ops import (launch_count, pad_operands_q,
+                                             reset_launch_count,
+                                             wave_replay_q_from_quant,
+                                             wave_replay_q_layer)
+from repro.kernels.wave_replay_q.ref import (maxpool_int, quant_layer_ref,
+                                             quant_layer_ref_from_quant)

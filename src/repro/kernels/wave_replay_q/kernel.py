@@ -1,0 +1,293 @@
+"""Quantized (int8) persistent wave-replay megakernel (ISSUE 4 tentpole).
+
+The dtype-parameterised sibling of ``kernels/wave_replay``: the SAME
+``KernelProgram`` schedule (grid, SMEM operand table, halo windows,
+masked writes — quantization does not perturb the planner), with the
+datapath swapped for the paper's fixed-point CU pipeline:
+
+  * operands are int8 (activations per-tensor-scaled, weights
+    per-output-channel), one precision notch below the paper's 16-bit
+    words — the TPU MXU's native quantized format (DESIGN.md §6);
+  * the VMEM scratch accumulator is **int32** — the paper's 32-bit
+    partial-sum SRAM bank, carried across each tile's in-channel chain
+    with zero HBM round-trips;
+  * the epilogue requantizes on write-back: int32 accumulator + int32
+    bias -> fixed-point multiply + rounding shift
+    (``core/quantization.py::requantize_i32``) -> int8 in the *next
+    layer's* operand scale, with ReLU folded into the clip bounds and
+    the max-pool running on int8 in VMEM.
+
+Exactness: every int8 x int8 product and every accumulation is computed
+EXACTLY, so kernel output matches the int32 reference model bit for
+bit. The in-tile reduction runs as fp32 im2col matmuls — fast on every
+backend — split into fan chunks of at most ``EXACT_FP32_FAN`` products
+(fan * 127^2 < 2^24), which keeps every fp32 partial sum an exactly
+representable integer; chunks are cast back and summed in int32
+(``precision=HIGHEST`` pins the TPU MXU to its exact fp32 passes).
+Integer addition is associative, so chain order, chunking, and grouping
+cannot change a single bit — unlike the fp32 megakernel, which matches
+its references only to rounding tolerance.
+
+Grouped layers run true per-group gemms against the natural
+(K, K, in_c/groups, out_c) weight layout instead of the fp32 kernel's
+block-diagonal dense expansion: at fixed exact-integer cost per flop
+there is no MXU-shape argument for paying 2x the flops in zeros, and
+the halved gemm work is where most of the int8 speedup over the fp32
+megakernel comes from on non-TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import EXACT_FP32_FAN, requantize_i32
+from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_IX, OP_IY,
+                                 OP_TX, OP_TY, OP_VC, OP_VR, OP_WC0,
+                                 KernelProgram)
+from repro.kernels.common import pool_max_subsampled
+
+
+def exact_channel_chunk(kernel: int) -> int:
+    """Max input channels per fp32 sub-gemm such that the gemm fan
+    (K*K*channels) keeps every partial sum an exact fp32 integer."""
+    c = EXACT_FP32_FAN // (kernel * kernel)
+    if c < 1:
+        raise ValueError(
+            f"kernel {kernel}x{kernel}: a single channel's fan "
+            f"{kernel * kernel} already exceeds the exact-fp32 bound "
+            f"{EXACT_FP32_FAN}")
+    return c
+
+
+def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, o_ref,
+                     acc_ref, *, K: int, stride: int, acc_h: int,
+                     acc_w: int, n_waves: int, pool: int, ps: int,
+                     blk_h: int, blk_w: int, relu: bool, fuse_pool: bool,
+                     groups: int, step_in_c: int, c_sub: int,
+                     pre_shift: int, masked: bool):
+    """One grid step: tile t (program_id 0), chain position k (id 1).
+
+    ``step_in_c`` is the input channels this step reduces *per group*
+    (= the chain chunk width for ungrouped layers, in_c/groups for
+    grouped ones, whose chains are single-step by plan construction);
+    ``c_sub`` caps the channels per exact-fp32 sub-gemm — either the
+    worst-case ``exact_channel_chunk`` bound, or the calibrated
+    weight-aware bound (``LayerQuant.fan_chunk``), which usually lets
+    the whole fan run as one gemm. Single-step chains (``n_waves == 1``
+    — every AlexNet layer after VMEM re-planning) bypass the scratch
+    accumulator entirely: the gemm result flows straight into the
+    requantize epilogue, saving three full passes over int32 psums.
+    ``masked`` is statically False when the tile grid covers the valid
+    output exactly, dropping the write-mask pass too.
+    """
+    t = pl.program_id(0)
+    k = pl.program_id(1)
+    single = n_waves == 1
+
+    if not single:
+        @pl.when(k == 0)
+        def _init():              # chain start: zero the int32 psum bank
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                # int8 (B, ih, iw, c_width) halo-inclusive
+    w = w_ref[...]                # int8 (K, K, w_fan, out_c_pad)
+    B = x.shape[0]
+    out_c_pad = o_ref.shape[-1]
+    opg = out_c_pad // groups
+
+    group_cols = []
+    for g in range(groups):                       # static per-group gemms
+        acc_g = None
+        for c0 in range(0, step_in_c, c_sub):     # static exact-fan chunks
+            c1 = min(c0 + c_sub, step_in_c)
+            cw = c1 - c0
+            xs = jax.lax.slice_in_dim(x, g * step_in_c + c0,
+                                      g * step_in_c + c1, axis=3)
+            # two-stage im2col: K row slices then K column slices
+            # (2K + 2 ops instead of the K^2 + 1 per-tap slices the
+            # fp32 kernel issues — interpret-mode dispatch count is a
+            # real cost at K = 11). The fan lands in (kx, ky, c) order;
+            # the weight reshape below matches it.
+            rows = jnp.concatenate([
+                jax.lax.slice(
+                    xs, (0, ky, 0, 0),
+                    (B, ky + (acc_h - 1) * stride + 1, xs.shape[2], cw),
+                    (1, stride, 1, 1))
+                for ky in range(K)], -1)          # (B, acc_h, iw, K*cw)
+            pat = jnp.concatenate([
+                jax.lax.slice(
+                    rows, (0, 0, kx, 0),
+                    (B, acc_h, kx + (acc_w - 1) * stride + 1, K * cw),
+                    (1, 1, stride, 1))
+                for kx in range(K)], -1)          # (B, acc_h, acc_w, K*K*cw)
+            pat = pat.reshape(B * acc_h * acc_w,
+                              K * K * cw).astype(jnp.float32)
+            # weight fan rows are per-group already (natural layout): the
+            # group structure lives only in x's channel axis; transpose
+            # to the patches' (kx, ky, c) fan order
+            wf = jax.lax.slice(w, (0, 0, c0, g * opg),
+                               (K, K, c1, (g + 1) * opg))
+            wf = wf.transpose(1, 0, 2, 3).reshape(
+                K * K * cw, opg).astype(jnp.float32)
+            part = jax.lax.dot_general(
+                pat, wf, (((1,), (0,)), ((), ())),
+                precision=jax.lax.Precision.HIGHEST,
+                preferred_element_type=jnp.float32).astype(jnp.int32)
+            acc_g = part if acc_g is None else acc_g + part
+        group_cols.append(acc_g)
+    step = group_cols[0] if groups == 1 \
+        else jnp.concatenate(group_cols, -1)
+    step = step.reshape(B, acc_h, acc_w, out_c_pad)
+
+    def _finish(a):               # requantize-on-writeback, all in VMEM
+        a = a + bq_ref[0]
+        q = requantize_i32(a, m_ref[0], s_ref[0], pre_shift, relu=relu)
+        if fuse_pool:
+            q = pool_max_subsampled(q, pool=pool, stride=ps,
+                                    out_h=blk_h, out_w=blk_w)
+        if masked:
+            rows = jax.lax.broadcasted_iota(jnp.int32, (blk_h, blk_w), 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, (blk_h, blk_w), 1)
+            mask = ((rows < tbl_ref[k, t, OP_VR])
+                    & (cols < tbl_ref[k, t, OP_VC]))[None, :, :, None]
+            q = jnp.where(mask, q, jnp.zeros_like(q))
+        o_ref[...] = q
+
+    if single:
+        _finish(step)             # psums never touch the scratch bank
+    else:
+        acc_ref[...] += step
+
+        @pl.when(k == n_waves - 1)
+        def _epilogue():
+            _finish(acc_ref[...])
+
+
+def q_weight_fan(kp: KernelProgram) -> int:
+    """Weight fan-in dim of one grid step's int8 weight *block*:
+    per-group fan for grouped layers, the chain-chunk slice width
+    (= ``fan_width``) for ungrouped ones."""
+    l = kp.wave.program.layer
+    return l.in_c // l.groups if l.groups > 1 else kp.fan_width
+
+
+def q_weight_full_fan(kp: KernelProgram) -> int:
+    """Fan-in dim of the int8 kernel's *full* weight operand: grouped
+    layers keep their natural per-group fan (single-step chains read it
+    whole); ungrouped ones pad to ``w_in_kpad`` and slice per chain
+    step, exactly like the fp32 kernel."""
+    l = kp.wave.program.layer
+    return l.in_c // l.groups if l.groups > 1 else kp.w_in_kpad
+
+
+def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
+                      bq: jax.Array, m: jax.Array, shift: jax.Array,
+                      table: jax.Array, *, pre_shift: int = 0,
+                      fan_chunk: "int | None" = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Launch the int8 megakernel for one layer.
+
+    ``xq`` (B, pad_h, pad_w, in_c_kpad) int8 pre-padded to the
+    program's buffer geometry; ``wq`` (K, K, q_weight_fan, out_c_pad)
+    int8 in natural per-group layout; ``bq``/``m``/``shift``
+    (1, out_c_pad) int32; ``table`` the SAME (n_chain, n_tiles, 8)
+    operand table the fp32 kernel replays. ``fan_chunk`` caps input
+    channels per exact sub-gemm: ``None`` applies the worst-case
+    ``exact_channel_chunk`` bound; calibrated callers pass
+    ``LayerQuant.fan_chunk`` (weight-aware, usually unchunked). Returns
+    the padded int8 output (masked lanes exact 0); the caller crops.
+    """
+    if interpret is None:
+        from repro.kernels.common import pallas_interpret_default
+        interpret = pallas_interpret_default()
+    g = kp.wave.program
+    l = g.layer
+    B = xq.shape[0]
+    w_fan = q_weight_fan(kp)
+    if l.groups > 1:
+        # grouped plans have single-step chains (planner invariant) and
+        # group-aligned features, so out_c_pad == out_c and the in-body
+        # group loop can address acc columns statically
+        if kp.n_chain != 1 or g.out_c_pad != l.out_c:
+            raise ValueError(
+                f"{l.name}: grouped int8 kernel expects a single-step "
+                f"chain over the full out_c (got n_chain={kp.n_chain}, "
+                f"out_c_pad={g.out_c_pad})")
+    if xq.dtype != jnp.int8 or wq.dtype != jnp.int8:
+        raise ValueError(
+            f"{l.name}: int8 kernel operands must be int8 "
+            f"(got x {xq.dtype}, w {wq.dtype})")
+    if xq.shape != (B, kp.pad_h, kp.pad_w, kp.in_c_kpad):
+        raise ValueError(
+            f"{l.name}: int8 megakernel input {xq.shape} != padded "
+            f"({B}, {kp.pad_h}, {kp.pad_w}, {kp.in_c_kpad})")
+    if wq.shape != (l.kernel, l.kernel, q_weight_full_fan(kp),
+                    g.out_c_pad):
+        raise ValueError(
+            f"{l.name}: int8 megakernel weights {wq.shape} != "
+            f"({l.kernel}, {l.kernel}, {q_weight_full_fan(kp)}, "
+            f"{g.out_c_pad})")
+    for name, arr in (("bias_q", bq), ("m", m), ("shift", shift)):
+        if arr.shape != (1, g.out_c_pad) or arr.dtype != jnp.int32:
+            raise ValueError(
+                f"{l.name}: {name} must be int32 (1, {g.out_c_pad}), "
+                f"got {arr.dtype} {arr.shape}")
+    if table.shape != (kp.n_chain, kp.n_tiles, KERNEL_OP_COLS):
+        raise ValueError(
+            f"{l.name}: operand table {table.shape} != "
+            f"({kp.n_chain}, {kp.n_tiles}, {KERNEL_OP_COLS})")
+
+    step_in_c = l.in_c // l.groups if l.groups > 1 else kp.c_width
+    c_sub = exact_channel_chunk(l.kernel) if fan_chunk is None \
+        else max(1, min(int(fan_chunk), step_in_c))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,        # the SMEM operand table
+        grid=(kp.n_tiles, kp.n_chain),
+        in_specs=[
+            pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
+                         lambda t, k, tbl: (0, tbl[k, t, OP_IY],
+                                            tbl[k, t, OP_IX],
+                                            tbl[k, t, OP_C0]),
+                         indexing_mode=pl.unblocked),
+            # natural per-group weights: grouped layers read the whole
+            # (single-step) tensor, ungrouped ones slice the chain
+            # chunk's fan rows exactly like the fp32 kernel
+            pl.BlockSpec((l.kernel, l.kernel, w_fan, g.out_c_pad),
+                         lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+            pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+            pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (B, kp.blk_h, kp.blk_w, g.out_c_pad),
+            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)),
+        # the paper's 32-bit psum SRAM bank: one tile's chain lives
+        # here at accumulator precision, never in HBM (single-step
+        # chains bypass it, so allocate a token buffer for them)
+        scratch_shapes=[pltpu.VMEM(
+            (B, kp.acc_h, kp.acc_w, g.out_c_pad) if kp.n_chain > 1
+            else (1, 1, 1, 1), jnp.int32)],
+    )
+    # write masks are only live where the uniform tile grid overhangs
+    # the valid output; exact grids skip the mask pass statically
+    masked = kp.out_h_pad != kp.out_h or kp.out_w_pad != kp.out_w
+    kern = functools.partial(
+        _replay_q_kernel, K=l.kernel, stride=l.stride,
+        acc_h=kp.acc_h, acc_w=kp.acc_w,
+        n_waves=kp.n_chain, pool=kp.pool, ps=kp.pool_stride,
+        blk_h=kp.blk_h, blk_w=kp.blk_w, relu=kp.relu,
+        fuse_pool=kp.fuse_pool, groups=l.groups,
+        step_in_c=step_in_c, c_sub=c_sub, pre_shift=pre_shift,
+        masked=masked)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(
+            (B, kp.out_h_pad, kp.out_w_pad, g.out_c_pad), jnp.int8),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(table, xq, wq, bq, m, shift)

@@ -1,0 +1,99 @@
+"""Public wrappers for the int8 wave-replay megakernel.
+
+``wave_replay_q_layer`` mirrors ``wave_replay.wave_replay_layer``: take
+a layer's *natural* quantized tensors (unpadded int8 input, per-group
+int8 weights, int32 bias/requant vectors), pad them to the
+KernelProgram's buffer geometry (integer zeros — exact in every
+accumulation), launch the ONE ``pallas_call``, crop the valid int8
+output. ``launch_count()`` is the trace-time dispatch counter, same
+contract as the fp32 kernel's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import KernelProgram
+from repro.kernels.wave_replay_q.kernel import (q_weight_full_fan,
+                                                wave_replay_q_raw)
+
+_LAUNCHES = 0
+
+
+def launch_count() -> int:
+    """int8 megakernel launches since ``reset_launch_count`` (trace-time)."""
+    return _LAUNCHES
+
+
+def reset_launch_count() -> None:
+    global _LAUNCHES
+    _LAUNCHES = 0
+
+
+def pad_operands_q(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
+                   bq: jax.Array, m: jax.Array, shift: jax.Array):
+    """Pad int8/int32 operands to the megakernel's static geometry.
+
+    Input padding is identical to the fp32 path (conv pad top/left, tile
+    grid trailing, channel rounding) but with int8 zeros — the symmetric
+    zero-point makes padding exact in the integer domain. Weights stay
+    in their natural per-group layout (no block-diagonal expansion);
+    padded output channels get m=0 / shift=pre_shift-compatible values
+    so their requantized lanes are exact zeros.
+    """
+    g = kp.wave.program
+    l = g.layer
+    w_fan = q_weight_full_fan(kp)
+    xp = jnp.pad(xq, ((0, 0),
+                      (l.pad, max(0, kp.pad_h - l.in_h - l.pad)),
+                      (l.pad, max(0, kp.pad_w - l.in_w - l.pad)),
+                      (0, kp.in_c_kpad - l.in_c)))[:, :kp.pad_h, :kp.pad_w]
+    wp = jnp.pad(wq, ((0, 0), (0, 0),
+                      (0, w_fan - wq.shape[2]),
+                      (0, g.out_c_pad - l.out_c)))
+    pad_c = g.out_c_pad - l.out_c
+    bqp = jnp.pad(bq.astype(jnp.int32), (0, pad_c)).reshape(1, -1)
+    mp = jnp.pad(m.astype(jnp.int32), (0, pad_c)).reshape(1, -1)
+    # padded channels: m=0 makes the product 0; any shift >= pre_shift
+    # is a valid no-op, and 31 rounds 0 to 0
+    sp = jnp.pad(shift.astype(jnp.int32), (0, pad_c),
+                 constant_values=31).reshape(1, -1)
+    return xp, wp, bqp, mp, sp
+
+
+def wave_replay_q_layer(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
+                        bq: jax.Array, m: jax.Array, shift: jax.Array,
+                        *, pre_shift: int = 0,
+                        fan_chunk: "int | None" = None,
+                        table: jax.Array | None = None,
+                        interpret: bool | None = None) -> jax.Array:
+    """Execute one streamed CONV layer as ONE int8 pallas_call.
+
+    ``xq`` (B, in_h, in_w, in_c) int8; ``wq`` (K, K, in_c/groups, out_c)
+    int8; ``bq``/``m``/``shift`` (out_c,) int32 from ``LayerQuant``
+    (whose ``fan_chunk`` carries the weight-aware exact-gemm bound).
+    Returns the valid (B, out_h, out_w, out_c) int8 output — pooled
+    dims when the program fuses its pool — in the layer's calibrated
+    output scale (= the next layer's input scale).
+    """
+    global _LAUNCHES
+    _LAUNCHES += 1
+    l = kp.wave.program.layer
+    if table is None:
+        table = jnp.asarray(kp.operand_table())
+    xp, wp, bqp, mp, sp = pad_operands_q(kp, xq, wq, bq, m, shift)
+    y = wave_replay_q_raw(kp, xp, wp, bqp, mp, sp, table,
+                          pre_shift=pre_shift, fan_chunk=fan_chunk,
+                          interpret=interpret)
+    return y[:, :kp.out_h, :kp.out_w, :l.out_c]
+
+
+def wave_replay_q_from_quant(kp: KernelProgram, xq: jax.Array, quant,
+                             table: jax.Array | None = None,
+                             interpret: bool | None = None) -> jax.Array:
+    """Convenience entry: unpack a ``LayerQuant`` (quant/calibrate.py)."""
+    wq, bq, m, shift = quant.device_arrays()
+    return wave_replay_q_layer(kp, xq, wq, bq, m, shift,
+                               pre_shift=quant.pre_shift,
+                               fan_chunk=quant.fan_chunk, table=table,
+                               interpret=interpret)

@@ -5,6 +5,9 @@
 
   PYTHONPATH=src python -m repro.launch.serve --cnn \
       --batch 8 --requests 32
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn \
+      --precision int8 --batch 8 --requests 32   # quantized megakernel
 """
 import argparse
 import dataclasses
@@ -22,7 +25,10 @@ from repro.train.steps import make_decode_step, make_prefill_step
 def cnn_main(args):
     """Serve single-image requests through a compiled StreamingSession:
     the whole AlexNet conv stack is lowered to tile schedules once, then
-    every ``--batch`` submits share one cached executable (paper §7)."""
+    every ``--batch`` submits share one cached executable (paper §7).
+    ``--precision int8`` calibrates the stack on a few random batches
+    and serves the quantized megakernel path (fixed-point datapath,
+    paper Table 2)."""
     from repro.core.decomposition import ALEXNET_STACK
     from repro.launch.session import StreamingSession
 
@@ -34,11 +40,24 @@ def cnn_main(args):
             k1, (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * 0.05
         b = jax.random.normal(k2, (l.out_c,)) * 0.1
         weights.append((w, b))
+    qnet = None
+    mode = args.mode
+    if args.precision == "int8":
+        from repro.quant import calibrate_network
+        if mode != "megakernel":
+            print("--precision int8 runs the quantized megakernel; "
+                  f"overriding --mode {mode}")
+            mode = "megakernel"
+        calib = jax.random.normal(jax.random.key(7),
+                                  (2, 227, 227, 3))
+        qnet = calibrate_network(layers, weights, calib)
     sess = StreamingSession.for_network(layers, weights,
                                         sram_budget=args.sram_kb * 1024,
                                         max_batch=args.batch,
-                                        mode=args.mode,
-                                        pool_backend=args.pool_backend)
+                                        mode=mode,
+                                        pool_backend=args.pool_backend,
+                                        precision=args.precision,
+                                        qnet=qnet)
     imgs = jax.random.normal(jax.random.key(99),
                              (args.requests, 227, 227, 3))
     # warm-up: one padded flush compiles the (only) executable
@@ -83,6 +102,13 @@ def main():
                          "executor, or the fused Pallas conv+pool kernel "
                          "(ignored by --mode megakernel, which fuses "
                          "pooling itself)")
+    ap.add_argument("--precision", choices=("fp32", "int8"),
+                    default="fp32",
+                    help="int8 calibrates the stack (PTQ, a few random "
+                         "batches) and serves the quantized megakernel: "
+                         "int8 operands, int32 VMEM accumulators, "
+                         "requantize fused into each kernel epilogue "
+                         "(implies --mode megakernel)")
     args = ap.parse_args()
     if args.cnn:
         return cnn_main(args)

@@ -53,26 +53,56 @@ class StreamingSession:
     treat the array passed to ``run_batch`` as consumed (the
     micro-batch queue always builds a fresh batch, so ``submit`` /
     ``flush`` are unaffected).
+
+    ``precision="int8"`` (megakernel mode only) serves the fixed-point
+    datapath: pass a calibrated ``qnet``
+    (``repro.quant.calibrate_network``); the session packs its int8
+    weights / int32 requant vectors as the traced weight tuples, fp32
+    requests are quantized at entry and dequantized at exit, and raw
+    int8 activations flow between layers. The tile schedules and
+    operand tables are byte-identical to the fp32 megakernel session's.
     """
 
     def __init__(self, layers: Sequence[ConvLayer], plans: Sequence[Plan],
-                 weights: Sequence[Tuple[jax.Array, Optional[jax.Array]]],
+                 weights: Optional[Sequence[Tuple[jax.Array,
+                                                  Optional[jax.Array]]]],
                  conv_fn: Optional[Callable] = None,
                  conv_backend: str = "xla", max_batch: int = 8,
                  mode: str = "wave", pool_backend: str = "xla",
-                 donate: bool = True):
+                 donate: bool = True, precision: str = "fp32",
+                 qnet=None):
         self.layers = tuple(layers)
         self.plans = tuple(plans)
-        self.weights = list(weights)
         self.max_batch = int(max_batch)
         self.mode = mode
         self.pool_backend = pool_backend
         self.donate = bool(donate)
+        self.precision = precision
+        self.qnet = qnet
         self.programs: List[TileProgram] = compile_network(layers, plans)
+        if precision == "int8":
+            if qnet is None:
+                raise ValueError(
+                    "precision='int8' needs a calibrated qnet — run "
+                    "repro.quant.calibrate_network first")
+            if tuple(qnet.layers) != self.layers:
+                raise ValueError(
+                    "qnet was calibrated for a different layer stack")
+            # the traced per-layer weight tuples (wq, bias_q, m, shift);
+            # float weights are not needed at serving time
+            self.weights = qnet.device_weights()
+        else:
+            if weights is None:
+                raise ValueError(
+                    "weights=None is only valid with precision='int8' "
+                    "(where the calibrated qnet supplies them) — pass "
+                    "the float (w, b) pairs")
+            self.weights = list(weights)
         self._ops = network_operands(self.programs, mode)
         self._forward = network_forward_fn(self.programs, conv_fn,
                                            conv_backend, mode=mode,
-                                           pool_backend=pool_backend)
+                                           pool_backend=pool_backend,
+                                           precision=precision, qnet=qnet)
         self._executables: Dict[tuple, Callable] = {}
         self.compile_count = 0          # traces performed (the spy)
         self.calls = 0                  # compiled-executable invocations
@@ -188,7 +218,8 @@ class StreamingSession:
 
     def describe(self) -> str:
         lines = [f"StreamingSession: {len(self.programs)} layers, "
-                 f"mode={self.mode}, pool_backend={self.pool_backend}, "
+                 f"mode={self.mode}, precision={self.precision}, "
+                 f"pool_backend={self.pool_backend}, "
                  f"max_batch={self.max_batch}, "
                  f"executables={len(self._executables)}, "
                  f"compiles={self.compile_count}, calls={self.calls}"]

@@ -1,0 +1,127 @@
+"""Accuracy harness: per-layer SNR / max-abs-error of int8 vs fp32.
+
+Quantization error is the one thing the bit-exactness gate cannot see —
+the kernel can match the int32 reference perfectly while both drift
+from the float network. This module measures that drift where it
+matters: at every layer boundary of the *running* int8 pipeline (each
+layer consumes the previous layer's quantized output, so errors
+accumulate exactly as they would in deployment), against the float
+executors' activations.
+
+``accuracy_report`` walks both pipelines and emits one record per
+layer: signal-to-noise ratio in dB (10·log10(Σref² / Σerr²)) and the
+max absolute error of the dequantized int8 activation. The ISSUE 4
+acceptance gate pins SNR ≥ 20 dB per layer on the AlexNet stack
+(tests/test_quant_megakernel.py); the int8 rows in
+``BENCH_streaming.json`` carry the end-to-end SNR alongside throughput.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import dequantize_int8, quantize_int8_sym
+from repro.quant.calibrate import QuantizedNetwork, float_network_acts
+
+
+def snr_db(ref, got) -> float:
+    """Signal-to-noise of ``got`` against ``ref`` in dB (inf if equal)."""
+    ref = np.asarray(ref, np.float64)
+    err = np.asarray(got, np.float64) - ref
+    noise = float((err ** 2).sum())
+    if noise == 0.0:
+        return math.inf
+    power = float((ref ** 2).sum())
+    if power == 0.0:
+        return -math.inf
+    return 10.0 * math.log10(power / noise)
+
+
+def quant_reference_acts(qnet: QuantizedNetwork,
+                         x: jax.Array) -> List[jax.Array]:
+    """The int32-reference quantized model, layer by layer: per-layer
+    int8 activations (post-ReLU, post-pool) — the oracle the megakernel
+    must match bit for bit."""
+    from repro.kernels.wave_replay_q.ref import quant_layer_ref_from_quant
+    xq = quantize_int8_sym(x, qnet.in_scale)
+    acts = []
+    for l, lq in zip(qnet.layers, qnet.quants):
+        xq = quant_layer_ref_from_quant(l, xq, lq, relu=True,
+                                        fuse_pool=l.pool > 1)
+        acts.append(xq)
+    return acts
+
+
+def megakernel_acts(qnet: QuantizedNetwork, x: jax.Array,
+                    vmem_budget: Optional[int] = None,
+                    programs=None,
+                    sram_budget: int = 128 * 1024) -> List[jax.Array]:
+    """The real int8 megakernel pipeline, layer by layer.
+
+    Lowers each layer exactly like the int8 network path
+    (``core/streaming.py::network_kernel_programs``: ReLU fused, pool
+    fused when present, schedules re-planned at the kernel VMEM budget)
+    and feeds each layer's int8 output to the next. Pass the serving
+    session's own ``programs`` (``StreamingSession.programs``) to
+    exercise its exact schedules; otherwise layers are planned fresh at
+    ``sram_budget``. ``vmem_budget=None`` uses the executor default."""
+    from repro.core.decomposition import plan_decomposition
+    from repro.core.schedule import DEFAULT_VMEM_BUDGET, compile_network
+    from repro.core.streaming import network_kernel_programs
+    from repro.kernels.wave_replay_q.ops import wave_replay_q_from_quant
+
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    if programs is None:
+        programs = compile_network(
+            qnet.layers, [plan_decomposition(l, sram_budget)
+                          for l in qnet.layers])
+    kprogs = network_kernel_programs(programs, budget)
+    xq = quantize_int8_sym(x, qnet.in_scale)
+    acts = []
+    for kp, lq in zip(kprogs, qnet.quants):
+        xq = wave_replay_q_from_quant(kp, xq, lq)
+        acts.append(xq)
+    return acts
+
+
+def accuracy_report(qnet: QuantizedNetwork, weights, x: jax.Array,
+                    runner: str = "ref", programs=None) -> List[dict]:
+    """Per-layer int8-vs-fp32 records for one input batch.
+
+    ``weights`` are the ORIGINAL float (w, b) pairs (the float reference
+    runs from them); ``runner`` picks the int8 pipeline: ``"ref"`` (the
+    int32 reference model) or ``"megakernel"`` (the Pallas kernel path —
+    bit-identical to ref by the exactness gate, so the SNR numbers
+    match; pass the serving session's ``programs`` to exercise its
+    exact schedules, else fresh 128 KiB plans).
+    """
+    if runner == "ref":
+        qacts = quant_reference_acts(qnet, x)
+    elif runner == "megakernel":
+        qacts = megakernel_acts(qnet, x, programs=programs)
+    else:
+        raise ValueError(f"unknown runner {runner!r} "
+                         f"(expected ref | megakernel)")
+    facts = float_network_acts(qnet.layers, weights, x)[1:]
+    records = []
+    for l, lq, fa, qa in zip(qnet.layers, qnet.quants, facts, qacts):
+        deq = dequantize_int8(qa, lq.out_scale)
+        records.append({
+            "layer": l.name,
+            "snr_db": round(snr_db(fa, deq), 2),
+            "max_abs_err": float(jnp.max(jnp.abs(deq - fa))),
+            "out_scale": lq.out_scale,
+        })
+    return records
+
+
+def format_report(records: Sequence[dict]) -> str:
+    lines = [f"{'layer':<8} {'SNR(dB)':>8} {'max|err|':>10} {'LSB':>10}"]
+    for r in records:
+        lines.append(f"{r['layer']:<8} {r['snr_db']:>8.2f} "
+                     f"{r['max_abs_err']:>10.4f} {r['out_scale']:>10.5f}")
+    return "\n".join(lines)

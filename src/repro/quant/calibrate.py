@@ -1,0 +1,270 @@
+"""Post-training calibration: a float CNN -> a ``QuantizedNetwork``.
+
+The paper's accelerator is a fixed-point machine (Table 2: 16-bit
+operands, 32-bit accumulators); its quoted throughput/efficiency live in
+that datapath, not in fp32. This module is the *offline* half of the
+repo's int8 streaming path (DESIGN.md §7): run a handful of batches
+through the existing float executors, observe per-tensor activation
+ranges and per-output-channel weight ranges, and freeze everything the
+integer datapath needs — int8 weights, int32 biases, and the
+fixed-point requantize multipliers — into host-side numpy arrays.
+
+Scale scheme (all symmetric, zero-point 0, so padding zeros stay exact
+integer zeros through every schedule):
+
+  * weights: per-output-channel absmax over (K, K, fan) — the classic
+    PTQ choice; channel dynamic ranges differ by orders of magnitude
+    and the requantize multiplier absorbs the per-channel scale for
+    free (``core/quantization.py::requant_params``).
+  * activations: per-tensor, absmax or percentile of |x| over the
+    calibration set. Percentile (default 99.9) clips rare outliers —
+    values beyond the clip saturate at ±127 at runtime, trading a few
+    clipped pixels for a finer LSB everywhere else.
+
+The layer boundaries chain: layer i's output scale IS layer i+1's input
+scale, so between layers activations flow as raw int8 with no
+dequant/requant round-trip — the requantize folded into each kernel
+epilogue lands directly in the next layer's operand format, exactly the
+paper's write-back-at-operand-precision datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decomposition import ConvLayer
+from repro.core.quantization import INT8_QMAX, requant_params
+
+# bias magnitudes are clipped here when a pathological scale pair would
+# blow them up; the requantized output saturates at ±127 anyway long
+# before a bias of 2^30 acc-LSBs matters
+_BIAS_CLIP = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuant:
+    """Everything the int8 datapath needs for ONE conv layer (host numpy).
+
+    ``wq`` keeps the layer's natural per-group weight layout
+    (K, K, in_c/groups, out_c) — the quantized megakernel runs true
+    per-group gemms instead of the fp32 path's block-diagonal dense
+    expansion. ``m``/``shift``/``pre_shift`` encode the requantize
+    multiplier ``in_scale * w_scale[c] / out_scale ~= m * 2^-shift``
+    (see ``requant_params``); ``acc_bound`` is the |accumulator + bias|
+    bound the ``pre_shift`` headroom was derived from.
+    """
+    wq: np.ndarray            # (K, K, in_c/groups, out_c) int8
+    w_scale: np.ndarray       # (out_c,) float32
+    in_scale: float
+    out_scale: float
+    bias_q: np.ndarray        # (out_c,) int32
+    m: np.ndarray             # (out_c,) int32 — 7-bit requant mantissa
+    shift: np.ndarray         # (out_c,) int32
+    pre_shift: int
+    acc_bound: int
+    # max input channels per exact-fp32 sub-gemm, derived from the
+    # ACTUAL quantized weights: any partial sum of an int8 x wq gemm is
+    # bounded by 127 * max-column sum(|wq|), so when that bound clears
+    # 2^24 the whole (per-group) fan runs as ONE gemm (fan_chunk =
+    # in_c/groups, the common case) — the worst-case
+    # EXACT_FP32_FAN chunking only kicks in for pathological weights.
+    fan_chunk: int
+
+    def device_arrays(self) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+        """(wq, bias_q, m, shift) as jnp arrays — the traced per-layer
+        weight tuple of the int8 network forward."""
+        return (jnp.asarray(self.wq), jnp.asarray(self.bias_q),
+                jnp.asarray(self.m), jnp.asarray(self.shift))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedNetwork:
+    """A calibrated conv stack: layers + per-layer ``LayerQuant``.
+
+    Scales chain by construction (``quants[i].out_scale ==
+    quants[i+1].in_scale``, validated) so the int8 executors pass raw
+    int8 activations between layers.
+    """
+    layers: Tuple[ConvLayer, ...]
+    quants: Tuple[LayerQuant, ...]
+    method: str = "percentile"
+
+    def __post_init__(self):
+        if len(self.layers) != len(self.quants):
+            raise ValueError("layers and quants must pair up")
+        for i, (a, b) in enumerate(zip(self.quants[:-1], self.quants[1:])):
+            if a.out_scale != b.in_scale:
+                raise ValueError(
+                    f"layer {i}->{i + 1}: out_scale {a.out_scale} != next "
+                    f"in_scale {b.in_scale} — int8 activations could not "
+                    f"flow between layers unconverted")
+
+    @property
+    def in_scale(self) -> float:
+        return self.quants[0].in_scale
+
+    @property
+    def out_scale(self) -> float:
+        return self.quants[-1].out_scale
+
+    def device_weights(self) -> List[Tuple[jax.Array, ...]]:
+        """Per-layer traced weight tuples for the int8 network forward."""
+        return [q.device_arrays() for q in self.quants]
+
+    def describe(self) -> str:
+        lines = [f"QuantizedNetwork: {len(self.layers)} layers, "
+                 f"method={self.method}, in_scale={self.in_scale:.3g}"]
+        for l, q in zip(self.layers, self.quants):
+            lines.append(
+                f"  {l.name}: w_scale [{q.w_scale.min():.3g}, "
+                f"{q.w_scale.max():.3g}], out_scale {q.out_scale:.3g}, "
+                f"pre_shift {q.pre_shift}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Observers
+# ---------------------------------------------------------------------------
+
+def activation_scale(values, method: str = "percentile",
+                     percentile: float = 99.9) -> float:
+    """Per-tensor symmetric scale from observed activation values.
+
+    ``absmax`` uses the largest |x| seen (no saturation on the
+    calibration set); ``percentile`` clips to the given percentile of
+    |x| (outliers beyond it saturate at runtime). All-zero observations
+    (dead layers, zero calibration images) fall back to scale 1.0 so
+    downstream integer math stays finite.
+    """
+    a = np.abs(np.asarray(values, np.float32).ravel())
+    if method == "absmax":
+        amax = float(a.max()) if a.size else 0.0
+    elif method == "percentile":
+        amax = float(np.percentile(a, percentile)) if a.size else 0.0
+    else:
+        raise ValueError(f"unknown calibration method {method!r} "
+                         f"(expected absmax | percentile)")
+    if amax <= 0.0:
+        return 1.0
+    return amax / INT8_QMAX
+
+
+def quantize_weights_per_channel(w) -> Tuple[np.ndarray, np.ndarray]:
+    """(K, K, fan, out_c) float -> per-output-channel symmetric int8.
+
+    All-zero channels get scale 1.0 (their int weights are zeros, so any
+    positive scale reproduces them exactly)."""
+    w = np.asarray(w, np.float32)
+    amax = np.max(np.abs(w), axis=(0, 1, 2))
+    w_scale = np.where(amax > 0.0, amax / INT8_QMAX, 1.0).astype(np.float32)
+    wq = np.clip(np.rint(w / w_scale), -INT8_QMAX, INT8_QMAX)
+    return wq.astype(np.int8), w_scale
+
+
+def quantize_layer(layer: ConvLayer, w, b,
+                   in_scale: float, out_scale: float) -> LayerQuant:
+    """Freeze one layer's integer datapath from float weights + scales."""
+    wq, w_scale = quantize_weights_per_channel(w)
+    if wq.shape != (layer.kernel, layer.kernel,
+                    layer.in_c // layer.groups, layer.out_c):
+        raise ValueError(
+            f"{layer.name}: weights {wq.shape} != declared "
+            f"({layer.kernel}, {layer.kernel}, "
+            f"{layer.in_c // layer.groups}, {layer.out_c})")
+    acc_scale = in_scale * w_scale.astype(np.float64)
+    bias = np.zeros((layer.out_c,), np.float64) if b is None \
+        else np.asarray(b, np.float64)
+    bias_q = np.clip(np.rint(bias / acc_scale),
+                     -_BIAS_CLIP, _BIAS_CLIP).astype(np.int32)
+    fan = layer.kernel * layer.kernel * (layer.in_c // layer.groups)
+    acc_bound = fan * INT8_QMAX * INT8_QMAX + int(np.abs(bias_q).max())
+    m, shift, pre_shift = requant_params(acc_scale / out_scale, acc_bound)
+    # weight-aware exact-fp32 gemm bound: every partial sum of an
+    # int8 activation x wq gemm is <= 127 * (worst column's sum |wq|);
+    # under 2^24 the kernel can run each (per-group) fan as one gemm
+    col_sums = np.abs(wq.astype(np.int64)).sum(axis=(0, 1, 2))
+    if int(col_sums.max()) * INT8_QMAX < 1 << 24:
+        fan_chunk = layer.in_c // layer.groups      # unchunked
+    else:
+        from repro.kernels.wave_replay_q.kernel import exact_channel_chunk
+        fan_chunk = exact_channel_chunk(layer.kernel)
+    return LayerQuant(wq=wq, w_scale=w_scale, in_scale=float(in_scale),
+                      out_scale=float(out_scale), bias_q=bias_q, m=m,
+                      shift=shift, pre_shift=pre_shift,
+                      acc_bound=acc_bound, fan_chunk=fan_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: observe the float network, freeze the integer one
+# ---------------------------------------------------------------------------
+
+def float_network_acts(layers: Sequence[ConvLayer], weights,
+                       x: jax.Array) -> List[jax.Array]:
+    """Reference float forward returning every layer boundary:
+    ``[x, act_1, ..., act_N]`` where ``act_i`` is layer i's post-ReLU,
+    post-pool output — exactly the tensors the int8 path carries as
+    int8, which makes these both the calibration observations and the
+    accuracy-harness reference points."""
+    from repro.core.streaming import conv2d_direct, maxpool_direct
+    acts = [x]
+    y = x
+    for l, (w, b) in zip(layers, weights):
+        y = conv2d_direct(y, w, l.stride, l.pad, groups=l.groups)
+        if b is not None:
+            y = y + b
+        y = jnp.maximum(y, 0.0)
+        if l.pool > 1:
+            y = maxpool_direct(y, l.pool, l.pool_stride or l.pool)
+        acts.append(y)
+    return acts
+
+
+def calibrate_network(layers: Sequence[ConvLayer], weights, calib,
+                      method: str = "percentile",
+                      percentile: float = 99.9) -> QuantizedNetwork:
+    """PTQ calibration: run ``calib`` through the float path, freeze int8.
+
+    ``calib`` is one (N, H, W, C) array or an iterable of such batches
+    (a single image works — (1, H, W, C)). Activation observations from
+    every batch pool into one per-boundary scale; weights quantize
+    per-output-channel independent of the data.
+    """
+    layers = tuple(layers)
+    if hasattr(calib, "ndim"):
+        calib = [calib]
+    fwd = jax.jit(lambda xb: float_network_acts(layers, weights, xb))
+    samples: List[List[np.ndarray]] = [[] for _ in range(len(layers) + 1)]
+    n_batches = 0
+    for batch in calib:
+        n_batches += 1
+        for i, act in enumerate(fwd(batch)):
+            samples[i].append(np.asarray(act, np.float32).ravel())
+    if n_batches == 0:
+        raise ValueError("calibration needs at least one batch")
+    scales = [activation_scale(np.concatenate(s), method, percentile)
+              for s in samples]
+    quants = tuple(
+        quantize_layer(l, w, b, scales[i], scales[i + 1])
+        for i, (l, (w, b)) in enumerate(zip(layers, weights)))
+    return QuantizedNetwork(layers=layers, quants=quants, method=method)
+
+
+def calibrate_layer(layer: ConvLayer, w, b, x: jax.Array,
+                    method: str = "absmax",
+                    percentile: float = 99.9) -> LayerQuant:
+    """Single-layer on-the-fly calibration (no ReLU/pool — parity with
+    the layer-level ``run_layer_*`` entry points, whose reference is the
+    raw conv + bias output)."""
+    from repro.core.streaming import conv2d_direct
+    y = conv2d_direct(x, jnp.asarray(w, jnp.float32), layer.stride,
+                      layer.pad, groups=layer.groups)
+    if b is not None:
+        y = y + b
+    return quantize_layer(layer, w, b,
+                          activation_scale(x, method, percentile),
+                          activation_scale(y, method, percentile))

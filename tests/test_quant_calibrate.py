@@ -1,0 +1,251 @@
+"""PTQ calibration edge cases (ISSUE 4 satellite): all-zero channels,
+single-image calibration sets, percentile-clip saturation, and the
+fixed-point requantize parameter derivation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decomposition import ConvLayer
+from repro.core.quantization import (INT8_QMAX, quantize_int8_sym,
+                                     requant_params, requantize_i32,
+                                     rounding_rshift)
+from repro.quant.calibrate import (QuantizedNetwork, activation_scale,
+                                   calibrate_layer, calibrate_network,
+                                   quantize_layer,
+                                   quantize_weights_per_channel)
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # dev-only dependency (requirements.txt)
+    hypothesis = None
+
+
+def _small_stack():
+    layers = (ConvLayer("a", 16, 16, 3, 8, 3, pad=1, pool=2),
+              ConvLayer("b", 8, 8, 8, 16, 3, pad=1, groups=2))
+    weights = []
+    for i, l in enumerate(layers):
+        w = jax.random.normal(
+            jax.random.key(i),
+            (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * 0.2
+        weights.append((w, jnp.full((l.out_c,), 0.1)))
+    return layers, weights
+
+
+# ---------------------------------------------------------------------------
+# all-zero channels
+# ---------------------------------------------------------------------------
+
+def test_all_zero_weight_channel_gets_safe_scale():
+    w = np.random.default_rng(0).normal(size=(3, 3, 4, 8)).astype(np.float32)
+    w[..., 3] = 0.0                       # dead output channel
+    wq, scale = quantize_weights_per_channel(w)
+    assert scale[3] == 1.0                # guard, not 0 or inf
+    assert np.all(wq[..., 3] == 0)
+    # the dead channel round-trips exactly; live channels stay accurate
+    deq = wq.astype(np.float32) * scale
+    assert np.array_equal(deq[..., 3], w[..., 3])
+    assert np.max(np.abs(deq - w)) <= 0.5 * scale.max() + 1e-6
+
+
+def test_all_zero_weights_layer_quantizes_and_runs():
+    """A fully dead layer must still produce finite requant params and a
+    constant (bias-only) integer output."""
+    layer = ConvLayer("z", 8, 8, 4, 6, 3, pad=1)
+    w = jnp.zeros((3, 3, 4, 6))
+    b = jnp.full((6,), 0.25)
+    lq = quantize_layer(layer, w, b, in_scale=0.05, out_scale=0.01)
+    assert np.all(np.isfinite(lq.m)) and np.all(lq.m >= 1)
+    assert np.all(lq.shift >= lq.pre_shift)
+    from repro.kernels.wave_replay_q.ref import quant_layer_ref_from_quant
+    xq = jnp.zeros((1, 8, 8, 4), jnp.int8)
+    y = quant_layer_ref_from_quant(layer, xq, lq)
+    # bias 0.25 at out_scale 0.01 -> q = 25 everywhere
+    assert jnp.array_equal(y, jnp.full_like(y, 25))
+
+
+def test_all_zero_activations_fall_back_to_unit_scale():
+    assert activation_scale(np.zeros(100), "absmax") == 1.0
+    assert activation_scale(np.zeros(100), "percentile") == 1.0
+    assert activation_scale(np.zeros(0), "percentile") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# single-image calibration sets
+# ---------------------------------------------------------------------------
+
+def test_single_image_calibration_set():
+    layers, weights = _small_stack()
+    x1 = jax.random.normal(jax.random.key(5), (1, 16, 16, 3))
+    qnet = calibrate_network(layers, weights, x1)    # one (1,H,W,C) batch
+    assert isinstance(qnet, QuantizedNetwork)
+    assert qnet.quants[0].out_scale == qnet.quants[1].in_scale
+    # scales are usable: quantizing the calibration image saturates at
+    # most the percentile tail
+    xq = quantize_int8_sym(x1, qnet.in_scale)
+    assert int(jnp.max(jnp.abs(xq))) == INT8_QMAX
+
+
+def test_calibration_requires_at_least_one_batch():
+    layers, weights = _small_stack()
+    with pytest.raises(ValueError, match="at least one batch"):
+        calibrate_network(layers, weights, iter([]))
+
+
+def test_multi_batch_observations_pool():
+    """absmax over several batches = absmax of their union: a later
+    batch with a bigger outlier must widen the scale."""
+    layers, weights = _small_stack()
+    small = jax.random.normal(jax.random.key(1), (1, 16, 16, 3)) * 0.1
+    big = jax.random.normal(jax.random.key(2), (1, 16, 16, 3)) * 5.0
+    q_small = calibrate_network(layers, weights, small, method="absmax")
+    q_both = calibrate_network(layers, weights, [small, big],
+                               method="absmax")
+    assert q_both.in_scale > q_small.in_scale
+
+
+# ---------------------------------------------------------------------------
+# percentile-clip saturation
+# ---------------------------------------------------------------------------
+
+def test_percentile_clip_saturates_outliers():
+    """Activations beyond the percentile clip at exactly ±127 — the
+    planned trade: a few saturated pixels for a finer LSB."""
+    rng = np.random.default_rng(7)
+    acts = rng.normal(size=20_000).astype(np.float32)
+    acts[:20] = 1000.0                    # 0.1% outliers
+    s_pct = activation_scale(acts, "percentile", 99.0)
+    s_max = activation_scale(acts, "absmax")
+    assert s_pct < s_max / 50             # clip ignored the outliers
+    q = quantize_int8_sym(jnp.asarray(acts), s_pct)
+    assert int(q.max()) == INT8_QMAX      # outliers saturated, not wrapped
+    assert int(q.min()) == -INT8_QMAX
+    # in-range values keep sub-LSB error
+    inlier = np.abs(acts) < 100 * s_pct
+    deq = np.asarray(q, np.float32) * s_pct
+    assert np.max(np.abs(deq[inlier] - acts[inlier])) <= 0.5 * s_pct + 1e-7
+
+
+def test_layer_calibration_absmax_never_saturates_calib_input():
+    layer = ConvLayer("c", 10, 10, 3, 4, 3, pad=1)
+    w = jax.random.normal(jax.random.key(0), (3, 3, 3, 4)) * 0.1
+    x = jax.random.normal(jax.random.key(1), (2, 10, 10, 3)) * 3.0
+    lq = calibrate_layer(layer, w, None, x, method="absmax")
+    q = quantize_int8_sym(x, lq.in_scale)
+    # absmax: the extreme sample maps to ±127 exactly, nothing clips
+    assert int(jnp.max(jnp.abs(q))) == INT8_QMAX
+    deq_err = jnp.max(jnp.abs(q.astype(jnp.float32) * lq.in_scale - x))
+    assert float(deq_err) <= 0.5 * lq.in_scale + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# weight-aware exact-gemm fan bound
+# ---------------------------------------------------------------------------
+
+def test_fan_chunk_unchunked_for_ordinary_weights():
+    """Bell-shaped weights clear the 127 * max-col-sum(|wq|) < 2^24
+    bound even at conv3-sized fans -> whole fan in one gemm."""
+    layer = ConvLayer("c3", 13, 13, 256, 32, 3, pad=1)
+    w = jax.random.normal(jax.random.key(0), (3, 3, 256, 32)) * 0.05
+    lq = quantize_layer(layer, w, None, 0.05, 0.1)
+    assert lq.fan_chunk == 256
+
+
+def test_fan_chunk_conservative_for_saturated_weights():
+    """All-qmax weights (the adversarial case the worst-case bound
+    guards) trigger EXACT_FP32_FAN chunking — and the kernel stays
+    bit-exact against the int32 reference in that regime."""
+    from repro.core.quantization import EXACT_FP32_FAN
+    from repro.core.schedule import compile_layer, lower_kernel_program, \
+        partition_waves
+    from repro.kernels.wave_replay_q.ops import wave_replay_q_from_quant
+    from repro.kernels.wave_replay_q.ref import quant_layer_ref_from_quant
+    layer = ConvLayer("sat", 9, 9, 256, 8, 3, pad=1)
+    w = jnp.ones((3, 3, 256, 8))          # quantizes to all-127
+    lq = quantize_layer(layer, w, None, 0.05, 4000.0)
+    assert lq.fan_chunk == EXACT_FP32_FAN // 9
+    from repro.core.decomposition import evaluate
+    plan = evaluate(layer, 1, 1, 1, 1)
+    kp = lower_kernel_program(partition_waves(compile_layer(layer, plan)))
+    xq = jnp.full((1, 9, 9, 256), 127, jnp.int8)   # worst-case acc
+    got = wave_replay_q_from_quant(kp, xq, lq)
+    ref = quant_layer_ref_from_quant(layer, xq, lq)
+    assert jnp.array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# requantize parameter derivation
+# ---------------------------------------------------------------------------
+
+def test_requant_params_reconstruct_scale():
+    rng = np.random.default_rng(0)
+    ratio = np.exp(rng.uniform(np.log(1e-6), np.log(0.9), 256))
+    m, shift, pre = requant_params(ratio, acc_bound=3456 * 127 * 127)
+    assert np.all((m >= 64) & (m <= 127))          # normalised mantissa
+    assert np.all(shift >= pre)
+    approx = m.astype(np.float64) * np.exp2(-shift.astype(np.float64))
+    assert np.max(np.abs(approx / ratio - 1)) < 0.008     # 7-bit mantissa
+
+
+def test_requant_params_rederives_m_at_clipped_shift():
+    """Ratios below ~2^-31 cannot carry a normalised mantissa at the
+    max shift: m must be re-derived at the clipped shift (denormal)
+    instead of keeping the unclipped-mantissa value, which would
+    misscale by several x."""
+    ratio = np.asarray([7.9e-9, 1e-12, 0.3])
+    m, shift, pre = requant_params(ratio, acc_bound=10 ** 6)
+    approx = m.astype(np.float64) * np.exp2(-shift.astype(np.float64))
+    # denormal regime: graceful degradation, not 4x misscale
+    assert abs(approx[0] / ratio[0] - 1) < 0.03
+    # unrepresentably tiny: clamps to the smallest positive multiplier
+    assert m[1] == 1 and shift[1] == 31
+    # ordinary ratios keep the tight 7-bit contract
+    assert abs(approx[2] / ratio[2] - 1) < 0.008
+
+
+def test_requantize_headroom_at_acc_bound():
+    """At the exact accumulator bound the int32 requantize neither wraps
+    nor deviates from the float computation by more than 1 LSB."""
+    acc_bound = 3456 * 127 * 127
+    ratio = np.full(4, 127.0 / acc_bound)   # bound maps near qmax
+    m, shift, pre = requant_params(ratio, acc_bound)
+    acc = jnp.asarray([[acc_bound, -acc_bound, acc_bound - 1, 12345]],
+                      jnp.int32)
+    got = np.asarray(requantize_i32(acc, jnp.asarray(m), jnp.asarray(shift),
+                                    pre), np.int64)[0]
+    approx = m[0] * 2.0 ** -float(shift[0])
+    want = np.clip(np.round(np.asarray(
+        [acc_bound, -acc_bound, acc_bound - 1, 12345], np.float64)
+        * approx), -127, 127)
+    assert np.max(np.abs(got - want)) <= 1
+
+
+if hypothesis is not None:
+    @hypothesis.given(
+        st.integers(-(2 ** 26), 2 ** 26),
+        st.floats(1e-6, 0.5),
+        st.booleans(),
+    )
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_requantize_matches_float_model(acc, ratio, relu):
+        """Property: the int32 fixed-point requantize stays within 1 LSB
+        of round(acc * (m * 2^-shift)) for any accumulator under the
+        bound, with the ReLU clamp honoured."""
+        m, shift, pre = requant_params(np.asarray([ratio]), 2 ** 26)
+        got = int(requantize_i32(jnp.asarray([acc], jnp.int32),
+                                 jnp.asarray(m), jnp.asarray(shift),
+                                 pre, relu=relu)[0])
+        approx = float(m[0]) * 2.0 ** -float(shift[0])
+        lo = 0 if relu else -127
+        want = float(np.clip(np.round(acc * approx), lo, 127))
+        assert abs(got - want) <= 1
+        assert lo <= got <= 127
+
+    @hypothesis.given(st.integers(-(2 ** 30), 2 ** 30), st.integers(0, 12))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_rounding_rshift_rounds_half_up(v, s):
+        got = int(rounding_rshift(jnp.asarray(v, jnp.int32), s))
+        want = (v + (1 << (s - 1) if s else 0)) >> s
+        assert got == want

@@ -82,6 +82,67 @@ def test_merge_min_takes_best_of_runs():
     assert gate.compare(_payload(100, 300, 200), merged) == []
 
 
+def _payload_int8(mega_us, int8_us):
+    p = _payload(100, 300, mega_us)
+    p["records"].append(
+        {"name": "streaming_alexnet_megakernel_int8",
+         "us_per_call": int8_us, "meta": {"dram_traffic_bytes": 500}})
+    return p
+
+
+def test_gate_int8_speedup_on_baseline():
+    """The committed int8/fp32 ratio is the acceptance artifact: a
+    baseline below the required speedup fails regardless of the
+    current run."""
+    good = _payload_int8(240, 200)          # 1.2x exactly
+    assert gate.compare(good, good) == []
+    bad = _payload_int8(210, 200)           # 1.05x
+    fails = gate.compare(bad, bad)
+    assert any("committed baseline int8 speedup" in f for f in fails)
+
+
+def test_gate_int8_speedup_on_current_run_with_slack():
+    base = _payload_int8(300, 200)          # 1.5x committed
+    # current at 1.08x: above the 1.2/(1+0.2) = 1.0 floor -> noise, pass
+    ok = gate.compare(base, _payload_int8(216, 200))
+    assert ok == []
+    # current below the floor -> real regression
+    fails = gate.compare(base, _payload_int8(190, 200))
+    assert any("measured int8 speedup" in f for f in fails)
+    # a stricter requirement tightens both checks
+    fails = gate.compare(base, _payload_int8(216, 200), int8_speedup=2.0)
+    assert any("measured int8 speedup" in f for f in fails)
+
+
+def test_gate_int8_rows_participate_in_share_check():
+    """The int8 row is a gated multi-rep executor row like any other:
+    its own share regression fails the gate."""
+    base = _payload_int8(300, 200)
+    cur = _payload_int8(300, 290)           # int8 row alone got slower
+    fails = gate.compare(base, cur)
+    assert any("megakernel_int8" in f and "share of group" in f
+               for f in fails)
+
+
+def test_gate_fails_when_current_run_drops_int8_row():
+    """A baseline with the int8 row pins the measurement: a current run
+    that stopped emitting it fails instead of silently skipping the
+    speedup check."""
+    base = _payload_int8(300, 200)
+    cur = {"records": [r for r in _payload_int8(300, 200)["records"]
+                       if not r["name"].endswith("_int8")]}
+    fails = gate.compare(base, cur)
+    assert any("missing" in f for f in fails)
+
+
+def test_gate_without_int8_rows_is_unchanged():
+    """Baselines predating the int8 path never trip the ratio gate,
+    and the new row is simply ignored by the share checks (it is not in
+    the baseline's shared set)."""
+    base = _payload(100, 300, 200)
+    assert gate.compare(base, _payload_int8(200, 999)) == []
+
+
 def test_gate_cli(tmp_path):
     import json
     b = tmp_path / "base.json"
