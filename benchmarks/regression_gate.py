@@ -15,6 +15,12 @@ Also checks the modelled DRAM traffic (``dram_traffic_bytes``): traffic
 is a pure function of the plans, so any *increase* is a planner/lowering
 regression, not noise, and fails at any size.
 
+Per-network rows (``streaming_vgg16_*`` / ``streaming_resnet18_*``,
+ISSUE 5): these reduced-scale few-rep rows are not time-gated; instead
+each network gets a baseline-present rule (rows in the committed
+baseline must appear in the current run — the bench must not silently
+stop measuring a network) and the DRAM-traffic no-growth rule per row.
+
 The int8 speedup gate (ISSUE 4 acceptance): when the baseline carries
 both megakernel rows, the *committed* int8/fp32 throughput ratio must
 be at least ``--int8-speedup`` (default 1.2) — the quantized datapath
@@ -49,6 +55,16 @@ GROUPS = ("streaming_conv1", "streaming_alexnet")
 # and far too noisy to gate
 SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool")
 
+# per-network graph rows (ISSUE 5): VGG-16 / ResNet-18 stacks. These
+# run few-rep at reduced scale, so their times are NOT share-gated;
+# instead each network gets (a) a baseline-present rule — once the
+# committed baseline carries a network's rows, a current run missing
+# them means the bench silently stopped measuring that network — and
+# (b) the no-DRAM-traffic-growth rule per row (traffic is a pure
+# function of the plans at the bench's fixed scale, so any increase is
+# a planner/lowering regression, not noise)
+NETWORK_PREFIXES = ("streaming_vgg16", "streaming_resnet18")
+
 # the int8 acceptance ratio: fp32 megakernel us / int8 megakernel us
 FP32_MEGA_ROW = "streaming_alexnet_megakernel"
 INT8_MEGA_ROW = "streaming_alexnet_megakernel_int8"
@@ -80,6 +96,10 @@ def _group(name: str) -> str | None:
 def _gated(names) -> list[str]:
     return [n for n in names
             if not n.endswith(SKIP_SUFFIXES) and _group(n)]
+
+
+def _network_rows(names) -> list[str]:
+    return [n for n in names if n.startswith(NETWORK_PREFIXES)]
 
 
 def _group_sums(recs: dict, names) -> dict:
@@ -120,8 +140,21 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20,
             failures.append(
                 f"{name}: {b_cost:.3g} -> {c_cost:.3g} {unit} "
                 f"(+{slowdown * 100:.0f}% > {threshold * 100:.0f}%)")
-        b_traffic = brec.get("meta", {}).get("dram_traffic_bytes")
-        c_traffic = crec.get("meta", {}).get("dram_traffic_bytes")
+    # per-network rows are not time-gated, but once committed they must
+    # keep appearing — a missing row means the bench silently stopped
+    # measuring that network
+    for name in _network_rows(base):
+        if name not in cur:
+            failures.append(
+                f"{name}: per-network row present in baseline but "
+                f"missing from the current run — the bench stopped "
+                f"measuring this network")
+    # ONE traffic rule for every gated + per-network row: traffic is a
+    # pure function of the plans, so any increase is a planner/lowering
+    # regression, not noise
+    for name in shared + [n for n in _network_rows(base) if n in cur]:
+        b_traffic = base[name].get("meta", {}).get("dram_traffic_bytes")
+        c_traffic = cur[name].get("meta", {}).get("dram_traffic_bytes")
         if b_traffic and c_traffic and c_traffic > b_traffic:
             failures.append(
                 f"{name}: modelled DRAM traffic grew "

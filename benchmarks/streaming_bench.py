@@ -237,15 +237,84 @@ def _stack_records(reps: int, smoke: bool) -> list[dict]:
     return recs
 
 
+def _network_records(reps: int) -> list[dict]:
+    """VGG-16 + ResNet-18 graph stacks (ISSUE 5): the full topologies
+    at reduced, CPU-friendly scale (64 px, width 16 — same layer kinds,
+    residual adds, projection shortcuts as nameplate), wave + megakernel
+    modes. The per-network ``dram_traffic_bytes`` is a pure function of
+    the plans at this fixed scale, so the regression gate's no-growth
+    rule sees planner/lowering regressions; the ResNet-18 wave row also
+    records the buffer-liveness pass's peak-activation savings — both
+    the liveness model and the bytes MEASURED live on the eager walk.
+    """
+    from repro.core.graph import (peak_activation_bytes, residual_fusion)
+    from repro.core.model_zoo import resnet18_graph, vgg16_graph
+    from repro.core.streaming import (compile_graph, graph_forward_fn,
+                                      graph_kernel_programs,
+                                      graph_operands, plan_graph,
+                                      run_graph_streamed)
+    from repro.models.cnn import init_graph_weights
+
+    recs = []
+    nets = [("vgg16", vgg16_graph(in_hw=64, width=16,
+                                  name="vgg16_bench")),
+            ("resnet18", resnet18_graph(in_hw=64, width=16,
+                                        name="resnet18_bench"))]
+    for name, g in nets:
+        plans = plan_graph(g, 128 * 1024)
+        programs = compile_graph(g, plans)
+        ws = init_graph_weights(g, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(9), (1,) + g.in_shape)
+        traffic = sum(p.dram_traffic for p in plans.values())
+        mega_traffic = sum(
+            kp.wave.program.plan.dram_traffic
+            for kp in graph_kernel_programs(g, programs).values())
+        for mode in ("wave", "megakernel"):
+            fwd = jax.jit(graph_forward_fn(g, programs, mode=mode))
+            ops = graph_operands(g, programs, mode)
+            us, _ = _time(fwd, x, ws, ops, reps=reps)
+            meta = dict(mode=mode, conv_nodes=len(g.conv_nodes()),
+                        scale="64px/w16",
+                        dram_traffic_bytes=(mega_traffic
+                                            if mode == "megakernel"
+                                            else traffic))
+            if name == "resnet18":
+                meta["residual_adds_fused"] = \
+                    len(residual_fusion(g).fused)
+            if name == "resnet18" and mode == "wave":
+                # the liveness pass's headline number: modelled AND
+                # measured (eager walk, live-env bytes) peaks, with
+                # the pass on vs off
+                measured_live, measured_naive = [], []
+                run_graph_streamed(g, plans, x, ws, mode="interpret",
+                                   liveness=True,
+                                   track_peak=measured_live)
+                run_graph_streamed(g, plans, x, ws, mode="interpret",
+                                   liveness=False,
+                                   track_peak=measured_naive)
+                meta.update(
+                    peak_act_bytes_liveness=peak_activation_bytes(
+                        g, liveness=True),
+                    peak_act_bytes_naive=peak_activation_bytes(
+                        g, liveness=False),
+                    measured_peak_bytes_liveness=measured_live[0],
+                    measured_peak_bytes_naive=measured_naive[0])
+            recs.append(_record(f"streaming_{name}_{mode}", us, **meta))
+    return recs
+
+
 def run_structured(smoke: bool = False) -> list[dict]:
     """All records. ``smoke=True`` is the CI configuration: the gated
     executor rows keep the full 5 reps (min-of-reps feeds the
     regression gate, so the estimator must stay comparable to the
     committed baseline) while the expensive one-shot rows — interpreted
     walk, Pallas tile backend, fused-pool backend — are skipped
-    entirely (the gate ignores them anyway)."""
+    entirely (the gate ignores them anyway). The per-network VGG-16 /
+    ResNet-18 rows run in both configurations (their gate rules —
+    baseline-present, traffic no-growth — need them in CI)."""
     reps = 5
-    return _conv1_records(reps, smoke) + _stack_records(reps, smoke)
+    return (_conv1_records(reps, smoke) + _stack_records(reps, smoke)
+            + _network_records(2 if smoke else 3))
 
 
 def format_rows(records: list[dict]) -> list[str]:

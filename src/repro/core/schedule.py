@@ -401,6 +401,12 @@ class KernelProgram:
     wave: WaveProgram
     relu: bool
     fuse_pool: bool
+    # residual epilogue (ISSUE 5): the kernel takes one extra operand —
+    # a pre-computed activation of the layer's OWN output geometry —
+    # and adds it to the accumulator right after bias, before ReLU: the
+    # paper's accumulation-SRAM add. Mutually exclusive with fuse_pool
+    # (pooling a pre-add activation would change shapes under the add).
+    residual: bool
     # padded input-buffer geometry (static under jit)
     pad_h: int
     pad_w: int
@@ -450,18 +456,22 @@ class KernelProgram:
     @property
     def vmem_bytes(self) -> int:
         """Per-grid-step fp32 working set (batch 1): accumulator +
-        input-window chunk + weight chunk — what ``vmem_budget`` bounds."""
+        input-window chunk + weight chunk (+ the residual block when the
+        epilogue adds one) — what ``vmem_budget`` bounds."""
         l = self.wave.program.layer
         return 4 * (self.acc_h * self.acc_w * self.out_c_pad
                     + self.ih * self.iw * self.c_width
                     + l.kernel * l.kernel * self.fan_width
-                    * self.out_c_pad)
+                    * self.out_c_pad
+                    + (self.blk_h * self.blk_w * self.out_c_pad
+                       if self.residual else 0))
 
     @property
     def geometry(self):
         """The table is a pure function of these, so they key the cache."""
         return self.wave.geometry + (
-            "megakernel", self.relu, self.fuse_pool, self.pad_h, self.pad_w,
+            "megakernel", self.relu, self.fuse_pool, self.residual,
+            self.pad_h, self.pad_w,
             self.in_c_kpad, self.w_in_kpad,
             self.ih, self.iw, self.acc_h, self.acc_w, self.blk_h, self.blk_w,
             self.c_width, self.fan_width, self.out_c_pad, self.groups,
@@ -472,6 +482,7 @@ class KernelProgram:
         l = self.wave.program.layer
         fused = f"+pool{self.pool}/{self.pool_stride}" if self.fuse_pool \
             else ""
+        fused += "+residual" if self.residual else ""
         chunk = f" (x{self.chain_chunk} waves/step)" \
             if self.chain_chunk > 1 else ""
         return (f"{l.name}: 1 pallas_call, grid {self.n_tiles}x"
@@ -483,20 +494,28 @@ class KernelProgram:
 
 def lower_kernel_program(
         wprog: WaveProgram, *, relu: bool = False, fuse_pool: bool = False,
+        residual: bool = False,
         vmem_budget: "int | None" = DEFAULT_VMEM_BUDGET) -> KernelProgram:
     """Lower a WaveProgram to the megakernel's static operand tables.
 
     ``relu`` bakes max(x, 0) into the epilogue; ``fuse_pool`` additionally
     max-pools the accumulator in VMEM (requires ``layer.pool > 1``) and
-    re-derives the tile grid over the pooled output. ``vmem_budget``
-    bounds the per-step VMEM working set (accumulator + input-window
-    chunk + weight chunk, fp32) used to coarsen long partial-sum chains;
-    ``None`` keeps the schedule's 1:1 wave chain (bit-faithful replay).
+    re-derives the tile grid over the pooled output. ``residual`` adds
+    an extra same-geometry operand to the accumulator after bias and
+    before ReLU (the residual accumulation-buffer add; incompatible
+    with ``fuse_pool``). ``vmem_budget`` bounds the per-step VMEM
+    working set (accumulator + input-window chunk + weight chunk, fp32)
+    used to coarsen long partial-sum chains; ``None`` keeps the
+    schedule's 1:1 wave chain (bit-faithful replay).
     """
     g = wprog.program
     l, plan = g.layer, g.plan
     if fuse_pool and l.pool <= 1:
         raise ValueError(f"{l.name}: fuse_pool on a layer without a pool")
+    if residual and fuse_pool:
+        raise ValueError(
+            f"{l.name}: residual add cannot fuse with the pool epilogue "
+            f"— the add runs on the conv-geometry accumulator")
 
     if fuse_pool:
         ps = l.pool_stride or l.pool
@@ -573,7 +592,7 @@ def lower_kernel_program(
         table.append(tuple(step_rows))
 
     kp = KernelProgram(
-        wave=wprog, relu=relu, fuse_pool=fuse_pool,
+        wave=wprog, relu=relu, fuse_pool=fuse_pool, residual=residual,
         pad_h=pad_h, pad_w=pad_w,
         in_c_kpad=in_c_kpad, w_in_kpad=w_in_kpad,
         ih=ih, iw=iw,

@@ -69,7 +69,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.decomposition import ConvLayer, Plan, evaluate, tile_grid
+from repro.core.decomposition import (ConvLayer, Plan, evaluate,
+                                      plan_decomposition, tile_grid)
+from repro.core.graph import (INPUT, NetworkGraph, chain_graph,
+                              check_graph_input, conv_keyed,
+                              plan_buffers, residual_fusion,
+                              topological_schedule)
 from repro.core.schedule import (DEFAULT_VMEM_BUDGET as _VMEM_DEFAULT,
                                  KernelProgram, TileProgram, WaveProgram,
                                  compile_layer, lower_kernel_program,
@@ -657,16 +662,415 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
                                conv_fn_name=conv_fn_name)
 
 
+# ---------------------------------------------------------------------------
+# NetworkGraph executors (ISSUE 5 tentpole): the topology-aware program
+# IR (core/graph.py) replaces the positional layer lists — every
+# network-level entry point walks a validated topological schedule,
+# keys weights/plans/operand tables by *node name*, and frees
+# inter-layer activation buffers per the graph's liveness plan.
+# ---------------------------------------------------------------------------
+
+def plan_graph(graph: NetworkGraph,
+               sram_budget: int = 128 * 1024) -> "OrderedDict[str, Plan]":
+    """Plan every conv node's decomposition under one buffer budget."""
+    return OrderedDict((n.name, plan_decomposition(n.layer, sram_budget))
+                       for n in graph.conv_nodes())
+
+
+# the shared per-conv-node calling convention lives in core/graph.py
+_conv_keyed = conv_keyed
+
+
+def compile_graph(graph: NetworkGraph,
+                  plans) -> "OrderedDict[str, TileProgram]":
+    """Lower every conv node's Plan to its TileProgram, keyed by node."""
+    plans = _conv_keyed(graph, plans, "plans")
+    return OrderedDict((name, compile_layer(graph.node(name).layer, p))
+                       for name, p in plans.items())
+
+
+def _graph_epilogues(graph: NetworkGraph):
+    """Per conv node: (epilogue_relu, residual_value | None, out_value).
+
+    Residual-fused convs take the add's ReLU as their epilogue ReLU and
+    produce the ADD's value (the add node itself is skipped); all other
+    convs keep their own flags. Used by the megakernel paths — the
+    paper's accumulation-SRAM add lives in the kernel epilogue.
+    """
+    rf = residual_fusion(graph)
+    conv_res = rf.conv_residual()
+    add_of = rf.add_of_conv()
+    by_name = {n.name: n for n in graph.nodes}
+    out = {}
+    for n in graph.conv_nodes():
+        if n.name in conv_res:
+            add = by_name[add_of[n.name]]
+            out[n.name] = (add.relu, conv_res[n.name], add.name)
+        else:
+            out[n.name] = (n.relu, None, n.name)
+    return out
+
+
+def _graph_kernel_program(program: TileProgram, relu: bool,
+                          residual: bool,
+                          vmem_budget: Optional[int]) -> KernelProgram:
+    """Megakernel lowering for one graph conv node: the node's ReLU (or
+    its fused add's) in the epilogue, the layer's pool fused when it has
+    one, the residual operand when an add folds in, and the schedule
+    re-planned at the kernel's VMEM budget point (``plan_for_vmem``;
+    ``None`` replays the given program 1:1)."""
+    l = program.layer
+    fuse = l.pool > 1
+    if vmem_budget is None:
+        return _lower_kernel_cached(_partition_waves_cached(program),
+                                    relu=relu, fuse_pool=fuse,
+                                    residual=residual, vmem_budget=None)
+    plan = plan_for_vmem(l, vmem_budget, fuse, residual=residual)
+    return _lower_kernel_cached(
+        _partition_waves_cached(compile_layer(l, plan)),
+        relu=relu, fuse_pool=fuse, residual=residual,
+        vmem_budget=vmem_budget)
+
+
+def graph_kernel_programs(
+        graph: NetworkGraph, programs,
+        vmem_budget: Optional[int] = _VMEM_DEFAULT
+        ) -> "OrderedDict[str, KernelProgram]":
+    """The megakernel lowering of a whole graph, exactly as the graph
+    forward replays it (per-node epilogue ReLU, fused pools, residual
+    operands, VMEM re-planning) — public so weight packers and accuracy
+    harnesses lower the same programs the forward replays."""
+    programs = _conv_keyed(graph, programs, "programs")
+    epi = _graph_epilogues(graph)
+    return OrderedDict(
+        (name, _graph_kernel_program(p, epi[name][0],
+                                     epi[name][1] is not None,
+                                     vmem_budget))
+        for name, p in programs.items())
+
+
+def graph_operands(graph: NetworkGraph, programs, mode: str = "wave",
+                   vmem_budget: Optional[int] = _VMEM_DEFAULT
+                   ) -> "OrderedDict[str, jax.Array]":
+    """Per-conv-node operand tables matching ``graph_forward_fn``,
+    keyed by node name (wave dispatch tables, megakernel SMEM tables,
+    or flat scan step tables)."""
+    mode = _normalize_mode(mode)
+    if mode == "interpret":
+        raise ValueError("interpret mode has no operand tables")
+    programs = _conv_keyed(graph, programs, "programs")
+    if mode == "megakernel":
+        return OrderedDict(
+            (name, jnp.asarray(kp.operand_table()))
+            for name, kp in graph_kernel_programs(
+                graph, programs, vmem_budget).items())
+    if mode == "wave":
+        return OrderedDict(
+            (name, jnp.asarray(
+                _partition_waves_cached(p).tile_operands()))
+            for name, p in programs.items())
+    return OrderedDict((name, jnp.asarray(p.operands()))
+                       for name, p in programs.items())
+
+
+def graph_forward_fn(graph: NetworkGraph, programs,
+                     conv_fn: Optional[Callable] = None,
+                     conv_backend: str = "xla",
+                     mode: str = "wave",
+                     pool_backend: str = "xla",
+                     vmem_budget: Optional[int] = _VMEM_DEFAULT,
+                     precision: str = "fp32",
+                     qgraph=None,
+                     dequantize: bool = True) -> Callable:
+    """Whole-graph forward over pre-lowered programs, built for one jit.
+
+    Returns ``f(x, weights, ops) -> y`` where ``weights`` maps conv
+    node name -> (w, b) (or the int8 weight tuples) and ``ops`` maps
+    node name -> operand table (``graph_operands(graph, programs,
+    mode)``). The walk follows the graph's validated topological
+    schedule; residual ``add`` nodes execute as explicit elementwise
+    ops in wave/scan modes and fold into the producing conv's kernel
+    epilogue in the megakernel modes (``residual_fusion``, the paper's
+    accumulation-SRAM add); activation references are dropped per the
+    graph's buffer-liveness plan the moment their last consumer fired,
+    so XLA reuses the HBM buffers instead of holding every edge alive
+    to the end of the pass.
+
+    ``precision="int8"`` (megakernel only) walks the same schedule on
+    the fixed-point datapath over a calibrated ``qgraph``
+    (``quant.calibrate.QuantizedGraph``): raw int8 activations flow
+    along every edge (calibration unified the scales at add nodes, so
+    shortcut adds are plain integer adds + clip), residual adds run in
+    the int8 kernel epilogue, and ``weights`` are
+    ``qgraph.device_weights()``. ``dequantize=False`` returns raw int8.
+    """
+    mode = _normalize_mode(mode)
+    if mode == "interpret":
+        raise ValueError("the compiled network path has no interpret "
+                         "mode — use run_network_streamed for that")
+    if pool_backend not in ("xla", "fused"):
+        raise ValueError(f"unknown pool backend {pool_backend!r} "
+                         f"(expected xla | fused)")
+    if precision not in ("fp32", "int8"):
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(expected fp32 | int8)")
+    programs = _conv_keyed(graph, programs, "programs")
+    sched = topological_schedule(graph)
+    bplan = plan_buffers(graph)
+
+    if precision == "int8":
+        if mode != "megakernel":
+            raise ValueError(
+                "precision='int8' runs on the quantized megakernel only "
+                "— pass mode='megakernel'")
+        if qgraph is None:
+            raise ValueError(
+                "precision='int8' needs a calibrated QuantizedGraph — "
+                "run repro.quant.calibrate_graph (or calibrate_network "
+                "for a linear stack) over a few batches first")
+        from repro.core.quantization import (dequantize_int8,
+                                             quantize_int8_sym)
+        from repro.kernels.wave_replay_q.kernel import residual_add_i8
+        from repro.kernels.wave_replay_q.ops import wave_replay_q_layer
+        epi = _graph_epilogues(graph)
+        kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+        statics = {name: (qgraph.quants[name].pre_shift,
+                          qgraph.quants[name].fan_chunk)
+                   for name in kprogs}
+        in_scale = float(qgraph.scales[INPUT])
+        out_scale = float(qgraph.scales[graph.output])
+        fused_adds = {outv for _, resv, outv in epi.values()
+                      if resv is not None}
+
+        def forward_q(x, weights, ops):
+            check_graph_input(graph, x)       # trace-time, per shape
+            env = {INPUT: x if x.dtype == jnp.int8
+                   else quantize_int8_sym(x, in_scale)}
+            for i, n in enumerate(sched):
+                if n.op == "conv":
+                    relu_e, resv, outv = epi[n.name]
+                    wq, bq, m, s = weights[n.name]
+                    ps, fc = statics[n.name]
+                    env[outv] = wave_replay_q_layer(
+                        kprogs[n.name], env[n.inputs[0]], wq, bq, m, s,
+                        pre_shift=ps, fan_chunk=fc, table=ops[n.name],
+                        residual=env[resv] if resv is not None else None)
+                elif n.name not in fused_adds:
+                    env[n.name] = residual_add_i8(
+                        env[n.inputs[0]], env[n.inputs[1]], n.relu)
+                for v in bplan.frees[i]:        # liveness: drop dead refs
+                    env.pop(v, None)
+            y = env[graph.output]
+            return dequantize_int8(y, out_scale) if dequantize else y
+
+        return forward_q
+
+    if mode == "megakernel":
+        from repro.kernels.wave_replay.ops import wave_replay_layer
+        epi = _graph_epilogues(graph)
+        kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+        fused_adds = {outv for _, resv, outv in epi.values()
+                      if resv is not None}
+
+        def forward_mega(x, weights, ops):
+            check_graph_input(graph, x)       # trace-time, per shape
+            env = {INPUT: x}
+            for i, n in enumerate(sched):
+                if n.op == "conv":
+                    relu_e, resv, outv = epi[n.name]
+                    w, b = weights[n.name]
+                    env[outv] = wave_replay_layer(
+                        kprogs[n.name], env[n.inputs[0]], w, b,
+                        table=ops[n.name],
+                        residual=env[resv] if resv is not None else None
+                        ).astype(x.dtype)
+                elif n.name not in fused_adds:
+                    y = env[n.inputs[0]] + env[n.inputs[1]]
+                    env[n.name] = jnp.maximum(y, 0) if n.relu else y
+                for v in bplan.frees[i]:        # liveness: drop dead refs
+                    env.pop(v, None)
+            return env[graph.output]
+
+        return forward_mega
+
+    conv_fns = {name: _resolve_conv_fn(conv_fn, conv_backend,
+                                       p.layer.stride)[0]
+                for name, p in programs.items()}
+    wprogs = {name: _partition_waves_cached(p) if mode == "wave" else None
+              for name, p in programs.items()}
+    if pool_backend == "fused":
+        from repro.kernels.fused_conv_pool.ops import fused_conv_pool
+
+    def forward(x, weights, ops):
+        check_graph_input(graph, x)           # trace-time, per shape
+        env = {INPUT: x}
+        for i, n in enumerate(sched):
+            if n.op == "conv":
+                l = n.layer
+                xin = env[n.inputs[0]]
+                w, b = weights[n.name]
+                if pool_backend == "fused" and l.pool > 1 and n.relu:
+                    env[n.name] = fused_conv_pool(
+                        xin, w, b, stride=l.stride, pad=l.pad,
+                        pool=l.pool, pool_stride=l.pool_stride or l.pool,
+                        relu=True, groups=l.groups).astype(x.dtype)
+                else:
+                    wprog = wprogs[n.name]
+                    if wprog is not None:
+                        y = _wave_executor(wprog, conv_fns[n.name],
+                                           b is not None, xin, w, b,
+                                           ops[n.name])
+                    else:
+                        y = _scan_executor(programs[n.name],
+                                           conv_fns[n.name],
+                                           b is not None, xin, w, b,
+                                           ops[n.name])
+                    if n.relu:
+                        y = jnp.maximum(y, 0)
+                    if l.pool > 1:
+                        y = maxpool_direct(y, l.pool,
+                                           l.pool_stride or l.pool)
+                    env[n.name] = y
+            else:
+                y = env[n.inputs[0]] + env[n.inputs[1]]
+                env[n.name] = jnp.maximum(y, 0) if n.relu else y
+            for v in bplan.frees[i]:            # liveness: drop dead refs
+                env.pop(v, None)
+        return env[graph.output]
+
+    return forward
+
+
+def run_graph_reference(graph: NetworkGraph, weights,
+                        x: jax.Array) -> "OrderedDict[str, jax.Array]":
+    """Direct (undecomposed) reference forward over the graph schedule,
+    returning EVERY value (``"input"`` included): each conv value is
+    post-bias/ReLU/pool, each add value post-ReLU. The single oracle
+    the streamed executors are tested against AND the tensor set PTQ
+    calibration observes (quant/calibrate.py) — one walk, so the two
+    can never drift apart."""
+    check_graph_input(graph, x)
+    weights = _conv_keyed(graph, weights, "weights")
+    env = OrderedDict({INPUT: x})
+    for n in topological_schedule(graph):
+        if n.op == "conv":
+            l = n.layer
+            w, b = weights[n.name]
+            y = conv2d_direct(env[n.inputs[0]], w.astype(x.dtype),
+                              l.stride, l.pad, groups=l.groups)
+            if b is not None:
+                y = y + b.astype(x.dtype)
+            if n.relu:
+                y = jnp.maximum(y, 0)
+            if l.pool > 1:
+                y = maxpool_direct(y, l.pool, l.pool_stride or l.pool)
+        else:
+            y = env[n.inputs[0]] + env[n.inputs[1]]
+            if n.relu:
+                y = jnp.maximum(y, 0)
+        env[n.name] = y
+    return env
+
+
+def run_graph_streamed(graph: NetworkGraph, plans, x: jax.Array, weights,
+                       conv_fn: Optional[Callable] = None,
+                       mode: str = "wave", conv_backend: str = "xla",
+                       precision: str = "fp32", qgraph=None,
+                       liveness: bool = True,
+                       track_peak: Optional[list] = None) -> jax.Array:
+    """Run a NetworkGraph end to end through the streaming executors.
+
+    ``plans``/``weights`` map conv node name -> Plan / (w, b), or are
+    sequences in schedule order. ``mode="interpret"`` walks the graph
+    eagerly with the per-tile Python executor (adds as explicit
+    elementwise ops); the compiled modes build one whole-graph
+    executable, cached by the graph's **topology key** plus per-node
+    schedule geometry — two graphs sharing a layer geometry but wired
+    differently can never collide. ``precision="int8"`` (megakernel
+    only) needs a calibrated ``qgraph`` and ignores ``weights``.
+
+    ``liveness=False`` disables the buffer-liveness pass on the eager
+    walk (every activation held to the end — the naive per-edge
+    allocation, kept for A/B measurement). ``track_peak``, a list,
+    receives the measured peak of summed live activation bytes across
+    the eager walk (interpret mode only — the compiled modes manage
+    buffers inside XLA).
+    """
+    mode = _normalize_mode(mode)
+    check_graph_input(graph, x)
+    plans = _conv_keyed(graph, plans, "plans")
+    if precision != "int8":
+        weights = _conv_keyed(graph, weights, "weights")
+    if mode == "interpret":
+        if precision != "fp32":
+            raise ValueError("interpret mode is fp32-only — the int8 "
+                             "datapath runs on the megakernel")
+        sched = topological_schedule(graph)
+        bplan = plan_buffers(graph) if liveness else None
+        env = {INPUT: x}
+        peak = x.nbytes
+        for i, n in enumerate(sched):
+            if n.op == "conv":
+                l = n.layer
+                w, b = weights[n.name]
+                y = run_layer_interpreted(l, plans[n.name],
+                                          env[n.inputs[0]], w, b, conv_fn)
+                if n.relu:
+                    y = jnp.maximum(y, 0)
+                if l.pool > 1:
+                    y = maxpool_direct(y, l.pool, l.pool_stride or l.pool)
+                env[n.name] = y
+            else:
+                y = env[n.inputs[0]] + env[n.inputs[1]]
+                env[n.name] = jnp.maximum(y, 0) if n.relu else y
+            peak = max(peak, sum(int(v.nbytes) for v in env.values()))
+            if bplan is not None:
+                for v in bplan.frees[i]:
+                    env.pop(v, None)
+        if track_peak is not None:
+            track_peak.append(peak)
+        return env[graph.output]
+
+    programs = compile_graph(graph, plans)
+    conv_key = _resolve_conv_fn(
+        conv_fn, conv_backend,
+        next(iter(programs.values())).layer.stride)[1]
+    # the int8 forward bakes the calibration statics in as Python
+    # constants (entry/exit scales, per-node pre_shift/fan_chunk), so
+    # they must key the executable — a recalibrated graph over the same
+    # geometry must never reuse a stale executable (the per-layer int8
+    # path keys the same values)
+    qsig = ()
+    if precision == "int8":
+        qsig = (float(qgraph.scales[INPUT]),
+                float(qgraph.scales[graph.output]),
+                tuple((name, q.pre_shift, q.fan_chunk)
+                      for name, q in sorted(qgraph.quants.items())))
+    key = (graph.topology_key,
+           tuple(p.geometry for p in programs.values()),
+           mode, precision, conv_key, qsig, x.shape[0], str(x.dtype))
+    fn = _cached_executable(key, lambda: jax.jit(graph_forward_fn(
+        graph, programs, conv_fn=conv_fn, conv_backend=conv_backend,
+        mode=mode, precision=precision, qgraph=qgraph)))
+    ops = graph_operands(graph, programs, mode)
+    if precision == "int8":
+        return fn(x, qgraph.device_weights(), ops)
+    return fn(x, weights, ops)
+
+
+# ---------------------------------------------------------------------------
+# Linear-stack wrappers: the old positional-list entry points, now thin
+# shims over the graph IR (a chain graph IS the old implicit contract)
+# ---------------------------------------------------------------------------
+
 def run_network_streamed(layers, plans, x, weights, conv_fn=None,
                          mode: str = "wave", conv_backend: str = "xla"):
-    """Run a stack of CONV(+POOL) layers through the streaming executor."""
-    for l, p, (w, b) in zip(layers, plans, weights):
-        x = run_layer_streamed(l, p, x, w, b, conv_fn, mode=mode,
-                               conv_backend=conv_backend)
-        x = jnp.maximum(x, 0)  # ReLU
-        if l.pool > 1:
-            x = maxpool_direct(x, l.pool, l.pool_stride or l.pool)
-    return x
+    """Run a linear CONV(+POOL) stack through the streaming executor —
+    ``run_graph_streamed`` over the stack's chain graph."""
+    g = chain_graph(tuple(layers))
+    return run_graph_streamed(g, list(plans), x, list(weights),
+                              conv_fn=conv_fn, mode=mode,
+                              conv_backend=conv_backend)
 
 
 def network_forward_fn(programs: Sequence[TileProgram],
@@ -680,54 +1084,30 @@ def network_forward_fn(programs: Sequence[TileProgram],
                        dequantize: bool = True) -> Callable:
     """Whole-network forward over pre-lowered programs, built for one jit.
 
-    Returns ``f(x, weights, ops_list) -> y`` where ``weights`` is a list
-    of (w, b) pairs and ``ops_list`` the per-layer operand tables (build
-    them with ``network_operands(programs, mode)`` — wave mode expects
-    wave-encoded tables); the caller jits it once per batch shape (see
-    launch/session.py).
-
-    ``mode`` picks the executor per conv layer: ``"wave"`` (default, one
-    fused dispatch per dependency-free wave), ``"megakernel"`` (ONE
-    persistent Pallas kernel per layer — partial sums in VMEM scratch,
-    bias+ReLU+max-pool fused into the kernel epilogue, so streamed pool
-    layers never touch ``fused_conv_pool`` or ``maxpool_direct``), or
-    ``"scan"`` (alias ``"jit"``, serial replay). ``pool_backend="fused"``
-    routes CONV+POOL layers through the Pallas fused conv+ReLU+pool
-    kernel instead — the pre-pool activation then never round-trips
-    through a standalone ``maxpool_direct`` (paper §4.3); grouped pool
-    layers run one fused call per conv group. The megakernel subsumes
-    that fusion, so ``pool_backend`` (like ``conv_fn``/``conv_backend``)
-    is ignored in megakernel mode. ``vmem_budget`` (megakernel only)
-    re-plans each layer's schedule at the kernel's VMEM budget point
-    (``plan_for_vmem``; ``None`` replays the given programs 1:1) — pass
-    the SAME value to ``network_operands`` so the tables match.
+    The linear-stack shim over ``graph_forward_fn``: the positional
+    ``programs`` list becomes a chain graph, and the returned
+    ``f(x, weights, ops_list)`` keeps the historical list-based calling
+    convention — one (w, b) pair and one operand table per layer, in
+    stack order (build the tables with ``network_operands``; pass the
+    SAME ``vmem_budget`` to both). All executor semantics — wave/scan/
+    megakernel modes, fused pools, VMEM re-planning, buffer liveness —
+    live in ``graph_forward_fn``.
 
     ``precision="int8"`` (megakernel only) builds the fixed-point
     forward over a calibrated ``qnet``
-    (``quant.calibrate.QuantizedNetwork``): the input batch is quantized
-    once at entry, every layer runs the int8 megakernel — int32 VMEM
-    accumulation, requantize+ReLU+pool in the epilogue — and raw int8
-    activations flow between layers with **zero** dequant round-trips
-    (the calibration chained each layer's output scale into the next
-    layer's input scale). ``weights`` must then be the per-layer
-    ``(wq, bias_q, m, shift)`` tuples from ``qnet.device_weights()``;
-    the operand tables are the SAME megakernel tables as fp32
-    (``network_operands(programs, "megakernel", vmem_budget)``) —
-    quantization reuses the KernelProgram schedules unchanged.
-    ``dequantize=False`` returns the final activation as raw int8.
+    (``quant.calibrate.QuantizedNetwork``, adapted to the chain graph's
+    ``QuantizedGraph``): the input batch is quantized once at entry,
+    every layer runs the int8 megakernel, and raw int8 activations flow
+    between layers with **zero** dequant round-trips. ``weights`` must
+    then be the per-layer ``(wq, bias_q, m, shift)`` tuples from
+    ``qnet.device_weights()``. ``dequantize=False`` returns raw int8.
     """
-    mode = _normalize_mode(mode)
-    if mode == "interpret":
-        raise ValueError("the compiled network path has no interpret "
-                         "mode — use run_network_streamed for that")
-    if pool_backend not in ("xla", "fused"):
-        raise ValueError(f"unknown pool backend {pool_backend!r} "
-                         f"(expected xla | fused)")
-    if precision not in ("fp32", "int8"):
-        raise ValueError(f"unknown precision {precision!r} "
-                         f"(expected fp32 | int8)")
+    programs = list(programs)
+    g = chain_graph(tuple(p.layer for p in programs))
+    progs = {p.layer.name: p for p in programs}
+    qgraph = qnet
     if precision == "int8":
-        if mode != "megakernel":
+        if _normalize_mode(mode) != "megakernel":
             raise ValueError(
                 "precision='int8' runs on the quantized megakernel only "
                 "— pass mode='megakernel'")
@@ -736,60 +1116,20 @@ def network_forward_fn(programs: Sequence[TileProgram],
                 "precision='int8' needs a calibrated QuantizedNetwork — "
                 "run repro.quant.calibrate_network over a few batches "
                 "first and pass it as qnet=")
-        from repro.core.quantization import (dequantize_int8,
-                                             quantize_int8_sym)
-        from repro.kernels.wave_replay_q.ops import wave_replay_q_layer
-        kprogs = network_kernel_programs(programs, vmem_budget)
-        in_scale = float(qnet.in_scale)
-        out_scale = float(qnet.out_scale)
-        statics = [(q.pre_shift, q.fan_chunk) for q in qnet.quants]
-
-        def forward_q(x, weights, ops_list):
-            xq = quantize_int8_sym(x, in_scale)
-            for kp, (ps, fc), (wq, bq, m, s), ops in zip(
-                    kprogs, statics, weights, ops_list):
-                xq = wave_replay_q_layer(kp, xq, wq, bq, m, s,
-                                         pre_shift=ps, fan_chunk=fc,
-                                         table=ops)
-            return dequantize_int8(xq, out_scale) if dequantize else xq
-
-        return forward_q
-    if mode == "megakernel":
-        kprogs = [_network_kernel_program(p, vmem_budget)
-                  for p in programs]
-
-        def forward_mega(x, weights, ops_list):
-            for kp, (w, b), ops in zip(kprogs, weights, ops_list):
-                x = _megakernel_executor(kp, b is not None, x, w, b, ops)
-            return x
-
-        return forward_mega
-
-    conv_fns = [_resolve_conv_fn(conv_fn, conv_backend, p.layer.stride)[0]
-                for p in programs]
-    wprogs = [_partition_waves_cached(p) if mode == "wave" else None
-              for p in programs]
-    if pool_backend == "fused":
-        from repro.kernels.fused_conv_pool.ops import fused_conv_pool
+        if not hasattr(qnet, "scales"):
+            from repro.quant.calibrate import quantized_graph_from_network
+            qgraph = quantized_graph_from_network(qnet, g)
+    f_graph = graph_forward_fn(g, progs, conv_fn=conv_fn,
+                               conv_backend=conv_backend, mode=mode,
+                               pool_backend=pool_backend,
+                               vmem_budget=vmem_budget,
+                               precision=precision, qgraph=qgraph,
+                               dequantize=dequantize)
+    names = [n.name for n in g.conv_nodes()]
 
     def forward(x, weights, ops_list):
-        for prog, wprog, cf, (w, b), ops in zip(programs, wprogs, conv_fns,
-                                                weights, ops_list):
-            l = prog.layer
-            if pool_backend == "fused" and l.pool > 1:
-                x = fused_conv_pool(
-                    x, w, b, stride=l.stride, pad=l.pad, pool=l.pool,
-                    pool_stride=l.pool_stride or l.pool, relu=True,
-                    groups=l.groups).astype(x.dtype)
-                continue
-            if wprog is not None:
-                x = _wave_executor(wprog, cf, b is not None, x, w, b, ops)
-            else:
-                x = _scan_executor(prog, cf, b is not None, x, w, b, ops)
-            x = jnp.maximum(x, 0)
-            if l.pool > 1:
-                x = maxpool_direct(x, l.pool, l.pool_stride or l.pool)
-        return x
+        return f_graph(x, dict(zip(names, weights)),
+                       dict(zip(names, ops_list)))
 
     return forward
 
@@ -798,7 +1138,8 @@ def network_forward_fn(programs: Sequence[TileProgram],
 def plan_for_vmem(layer: ConvLayer,
                   vmem_budget: int = _VMEM_DEFAULT,
                   fuse_pool: bool = False,
-                  max_tiles: int = 8) -> Plan:
+                  max_tiles: int = 8,
+                  residual: bool = False) -> Plan:
     """Re-plan a layer's decomposition at the megakernel's VMEM budget.
 
     DESIGN.md §6's point made literal: the decomposition planner serves
@@ -811,7 +1152,9 @@ def plan_for_vmem(layer: ConvLayer,
     its matmul width. When nothing fits the budget (working sets shrink
     with more tiles/splits only down to the halo/weight floor), the
     over-budget candidate with the fewest steps wins — an oversubscribed
-    scratch beats a grid that explodes the step count.
+    scratch beats a grid that explodes the step count. ``residual``
+    (graph convs with a fused add) counts the residual block in each
+    candidate's working set.
     """
     best = None          # ((over_budget, grid_steps, ws), plan)
     in_choices = sorted({1, 2, 4, 8, 16, 32, 64, 128, layer.in_c})
@@ -825,7 +1168,8 @@ def plan_for_vmem(layer: ConvLayer,
                     continue
                 kp = _lower_kernel_cached(
                     _partition_waves_cached(compile_layer(layer, p)),
-                    relu=True, fuse_pool=fuse_pool, vmem_budget=None)
+                    relu=True, fuse_pool=fuse_pool, residual=residual,
+                    vmem_budget=None)
                 ws = kp.vmem_bytes
                 key = (ws > vmem_budget, kp.n_tiles * kp.n_chain, ws)
                 if best is None or key < best[0]:
@@ -838,48 +1182,34 @@ def plan_for_vmem(layer: ConvLayer,
 def network_kernel_programs(
         programs: Sequence[TileProgram],
         vmem_budget: Optional[int] = _VMEM_DEFAULT) -> List["KernelProgram"]:
-    """The megakernel lowering of a whole network, as the network path
-    builds it (ReLU fused, pools fused, VMEM re-planning) — public so
-    the int8 weight packers and the accuracy harness lower the exact
-    same programs the forward fn replays."""
+    """The megakernel lowering of a whole linear stack, as the network
+    path builds it (ReLU fused, pools fused, VMEM re-planning) — public
+    so the int8 weight packers and the accuracy harness lower the exact
+    same programs the forward fn replays. Graph callers use
+    ``graph_kernel_programs`` (which also wires residual epilogues)."""
     return [_network_kernel_program(p, vmem_budget) for p in programs]
 
 
 def _network_kernel_program(
         program: TileProgram,
         vmem_budget: Optional[int] = _VMEM_DEFAULT) -> KernelProgram:
-    """The network path's megakernel lowering: ReLU always fused, the
-    layer's max-pool fused whenever it has one, and the schedule
-    re-planned at the kernel's VMEM budget point (``plan_for_vmem``).
-    ``vmem_budget=None`` replays the session's own plan 1:1 instead.
-    """
-    l = program.layer
-    fuse = l.pool > 1
-    if vmem_budget is None:
-        return _lower_kernel_cached(_partition_waves_cached(program),
-                                    relu=True, fuse_pool=fuse,
-                                    vmem_budget=None)
-    plan = plan_for_vmem(l, vmem_budget, fuse)
-    return _lower_kernel_cached(
-        _partition_waves_cached(compile_layer(l, plan)),
-        relu=True, fuse_pool=fuse, vmem_budget=vmem_budget)
+    """The linear-stack megakernel lowering: ReLU always fused, the
+    layer's max-pool fused whenever it has one, no residual operand —
+    ``_graph_kernel_program`` with a chain node's flags."""
+    return _graph_kernel_program(program, relu=True, residual=False,
+                                 vmem_budget=vmem_budget)
 
 
 def network_operands(programs: Sequence[TileProgram], mode: str = "wave",
                      vmem_budget: Optional[int] = _VMEM_DEFAULT):
-    """Per-layer operand tables matching ``network_forward_fn(mode=...)``:
-    wave-encoded ``(n_waves, n_tiles, 6)`` dispatch tables for wave
-    mode, SMEM ``(n_chain, n_tiles, 8)`` megakernel tables for
-    megakernel (pass the same ``vmem_budget`` as the forward builder),
-    flat ``(n_steps, 7)`` step tables for scan."""
-    mode = _normalize_mode(mode)
-    if mode == "interpret":
-        raise ValueError("interpret mode has no operand tables")
-    if mode == "megakernel":
-        return [jnp.asarray(
-            _network_kernel_program(p, vmem_budget).operand_table())
-            for p in programs]
-    if mode == "wave":
-        return [jnp.asarray(_partition_waves_cached(p).tile_operands())
-                for p in programs]
-    return [jnp.asarray(p.operands()) for p in programs]
+    """Per-layer operand tables matching ``network_forward_fn(mode=...)``
+    in stack order: wave-encoded ``(n_waves, n_tiles, 6)`` dispatch
+    tables for wave mode, SMEM ``(n_chain, n_tiles, 8)`` megakernel
+    tables for megakernel (pass the same ``vmem_budget`` as the forward
+    builder), flat ``(n_steps, 7)`` step tables for scan. The list
+    shim over ``graph_operands``."""
+    programs = list(programs)
+    g = chain_graph(tuple(p.layer for p in programs))
+    ops = graph_operands(g, {p.layer.name: p for p in programs}, mode,
+                         vmem_budget)
+    return [ops[n.name] for n in g.conv_nodes()]

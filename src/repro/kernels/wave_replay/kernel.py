@@ -37,11 +37,23 @@ from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_IX, OP_IY,
 from repro.kernels.common import pool_max_subsampled
 
 
-def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, *refs,
                    K: int, stride: int, acc_h: int, acc_w: int,
                    n_waves: int, pool: int, ps: int,
-                   blk_h: int, blk_w: int, relu: bool, fuse_pool: bool):
-    """One grid step: tile t (program_id 0), chain position k (id 1)."""
+                   blk_h: int, blk_w: int, relu: bool, fuse_pool: bool,
+                   residual: bool):
+    """One grid step: tile t (program_id 0), chain position k (id 1).
+
+    With ``residual`` the positional refs gain one operand —
+    ``(r_ref, o_ref, acc_ref)`` instead of ``(o_ref, acc_ref)`` — the
+    residual activation block of this tile (same geometry as the output
+    block), added to the accumulator after bias, before ReLU: the
+    paper's accumulation-SRAM add (ISSUE 5).
+    """
+    if residual:
+        r_ref, o_ref, acc_ref = refs
+    else:
+        (o_ref, acc_ref), r_ref = refs, None
     t = pl.program_id(0)
     k = pl.program_id(1)
 
@@ -73,6 +85,8 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *,
     @pl.when(k == n_waves - 1)
     def _epilogue():                  # chain end: finish in VMEM, write once
         a = acc_ref[...] + b_ref[0]
+        if residual:                  # accumulation-buffer add, pre-ReLU
+            a = a + r_ref[...]
         if relu:
             a = jnp.maximum(a, 0.0)
         if fuse_pool:
@@ -91,15 +105,20 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, o_ref, acc_ref, *,
 
 def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
                     b: jax.Array, table: jax.Array,
+                    residual: jax.Array | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Launch the persistent megakernel for one layer.
 
     ``x`` (B, pad_h, pad_w, in_c_pad) pre-padded to the program's buffer
     geometry; ``w`` (K, K, w_in_pad, out_c_pad); ``b`` (1, out_c_pad)
     fp32 (zeros when the layer has no bias); ``table`` the program's
-    (n_waves, n_tiles, 8) int32 operand table. Returns the padded
-    (B, out_h_pad, out_w_pad, out_c_pad) fp32 output (masked lanes are
-    exact zeros); the caller crops to the valid dims.
+    (n_waves, n_tiles, 8) int32 operand table. Programs lowered with
+    ``residual=True`` additionally take the residual activation at the
+    padded output geometry (B, out_h_pad, out_w_pad, out_c_pad) fp32 —
+    each tile's block is DMA'd alongside the output block and added in
+    the epilogue. Returns the padded (B, out_h_pad, out_w_pad,
+    out_c_pad) fp32 output (masked lanes are exact zeros); the caller
+    crops to the valid dims.
     """
     if interpret is None:
         from repro.kernels.common import pallas_interpret_default
@@ -119,23 +138,42 @@ def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
         raise ValueError(
             f"{l.name}: operand table {table.shape} != "
             f"({kp.n_chain}, {kp.n_tiles}, {KERNEL_OP_COLS})")
+    if kp.residual:
+        want = (B, kp.out_h_pad, kp.out_w_pad, kp.out_c_pad)
+        if residual is None or residual.shape != want:
+            raise ValueError(
+                f"{l.name}: residual program wants a residual operand "
+                f"of shape {want}, got "
+                f"{None if residual is None else residual.shape}")
+    elif residual is not None:
+        raise ValueError(
+            f"{l.name}: program lowered without residual=True cannot "
+            f"take a residual operand")
 
+    in_specs = [
+        # halo windows via table-driven unblocked element offsets:
+        # overlap is indexed in place, never copied out
+        pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
+                     lambda t, k, tbl: (0, tbl[k, t, OP_IY],
+                                        tbl[k, t, OP_IX],
+                                        tbl[k, t, OP_C0]),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((l.kernel, l.kernel, kp.fan_width, kp.out_c_pad),
+                     lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((1, kp.out_c_pad), lambda t, k, tbl: (0, 0)),
+    ]
+    operands = [table, x, w, b]
+    if kp.residual:
+        # the residual reads the same blocked tiling the output writes
+        in_specs.append(pl.BlockSpec(
+            (B, kp.blk_h, kp.blk_w, kp.out_c_pad),
+            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)))
+        operands.append(residual)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,        # the SMEM operand table
         grid=(kp.n_tiles, kp.n_chain),
-        in_specs=[
-            # halo windows via table-driven unblocked element offsets:
-            # overlap is indexed in place, never copied out
-            pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
-                         lambda t, k, tbl: (0, tbl[k, t, OP_IY],
-                                            tbl[k, t, OP_IX],
-                                            tbl[k, t, OP_C0]),
-                         indexing_mode=pl.unblocked),
-            pl.BlockSpec((l.kernel, l.kernel, kp.fan_width, kp.out_c_pad),
-                         lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
-                         indexing_mode=pl.unblocked),
-            pl.BlockSpec((1, kp.out_c_pad), lambda t, k, tbl: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (B, kp.blk_h, kp.blk_w, kp.out_c_pad),
             lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)),
@@ -148,11 +186,11 @@ def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
         acc_h=kp.acc_h, acc_w=kp.acc_w,
         n_waves=kp.n_chain, pool=kp.pool, ps=kp.pool_stride,
         blk_h=kp.blk_h, blk_w=kp.blk_w, relu=kp.relu,
-        fuse_pool=kp.fuse_pool)
+        fuse_pool=kp.fuse_pool, residual=kp.residual)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct(
             (B, kp.out_h_pad, kp.out_w_pad, kp.out_c_pad), jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(table, x, w, b)
+    )(*operands)

@@ -74,15 +74,29 @@ def pad_operands(kp: KernelProgram, x: jax.Array, w: jax.Array,
     return xp, wp, bias
 
 
+def pad_residual(kp: KernelProgram, r: jax.Array) -> jax.Array:
+    """Pad a residual activation (B, out_h, out_w, out_c) to the
+    kernel's padded output geometry (zeros land in the masked lanes)."""
+    g = kp.wave.program
+    return jnp.pad(r.astype(jnp.float32),
+                   ((0, 0), (0, kp.out_h_pad - kp.out_h),
+                    (0, kp.out_w_pad - kp.out_w),
+                    (0, g.out_c_pad - g.layer.out_c)))
+
+
 def wave_replay_layer(kp: KernelProgram, x: jax.Array, w: jax.Array,
                       b: jax.Array | None = None,
                       table: jax.Array | None = None,
+                      residual: jax.Array | None = None,
                       interpret: bool | None = None) -> jax.Array:
     """Execute one streamed CONV layer as ONE persistent pallas_call.
 
     ``x`` (B, in_h, in_w, in_c); ``w`` (K, K, in_c/groups, out_c);
     ``table`` defaults to the program's own operand table (pass it
     pre-uploaded to keep it a traced argument under an outer jit).
+    Programs lowered with ``residual=True`` take the residual
+    activation (B, out_h, out_w, out_c) — added to the accumulator
+    after bias, before ReLU (the paper's accumulation-SRAM add).
     Returns the valid (B, out_h, out_w, out_c) output — pooled dims when
     the program fuses its pool — as fp32.
     """
@@ -91,6 +105,11 @@ def wave_replay_layer(kp: KernelProgram, x: jax.Array, w: jax.Array,
     l = kp.wave.program.layer
     if table is None:
         table = jnp.asarray(kp.operand_table())
+    if kp.residual and residual is None:
+        raise ValueError(f"{l.name}: program lowered with residual=True "
+                         f"needs the residual operand")
     xp, wp, bias = pad_operands(kp, x, w, b)
-    y = wave_replay_raw(kp, xp, wp, bias, table, interpret=interpret)
+    rp = pad_residual(kp, residual) if kp.residual else None
+    y = wave_replay_raw(kp, xp, wp, bias, table, residual=rp,
+                        interpret=interpret)
     return y[:, :kp.out_h, :kp.out_w, :l.out_c]

@@ -44,7 +44,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantization import EXACT_FP32_FAN, requantize_i32
+from repro.core.quantization import (EXACT_FP32_FAN, INT8_QMAX,
+                                     requantize_i32)
 from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_IX, OP_IY,
                                  OP_TX, OP_TY, OP_VC, OP_VR, OP_WC0,
                                  KernelProgram)
@@ -63,12 +64,24 @@ def exact_channel_chunk(kernel: int) -> int:
     return c
 
 
-def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, o_ref,
-                     acc_ref, *, K: int, stride: int, acc_h: int,
+def residual_add_i8(q: jax.Array, r: jax.Array,
+                    relu: bool) -> jax.Array:
+    """The int8 accumulation-buffer add: both operands live in the SAME
+    calibrated scale (calibration unifies add-operand scales), so the
+    sum is plain int32 addition followed by the ReLU-folded int8 clip —
+    deterministic integer ops shared verbatim by the kernel epilogue
+    and the int32 reference model (bit-exact by construction)."""
+    s = q.astype(jnp.int32) + r.astype(jnp.int32)
+    lo = 0 if relu else -INT8_QMAX
+    return jnp.clip(s, lo, INT8_QMAX).astype(jnp.int8)
+
+
+def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, *refs,
+                     K: int, stride: int, acc_h: int,
                      acc_w: int, n_waves: int, pool: int, ps: int,
                      blk_h: int, blk_w: int, relu: bool, fuse_pool: bool,
                      groups: int, step_in_c: int, c_sub: int,
-                     pre_shift: int, masked: bool):
+                     pre_shift: int, masked: bool, residual: bool):
     """One grid step: tile t (program_id 0), chain position k (id 1).
 
     ``step_in_c`` is the input channels this step reduces *per group*
@@ -82,8 +95,16 @@ def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, o_ref,
     accumulator entirely: the gemm result flows straight into the
     requantize epilogue, saving three full passes over int32 psums.
     ``masked`` is statically False when the tile grid covers the valid
-    output exactly, dropping the write-mask pass too.
+    output exactly, dropping the write-mask pass too. With ``residual``
+    the positional refs gain one operand — ``(r_ref, o_ref, acc_ref)``
+    instead of ``(o_ref, acc_ref)``: the int8 residual block at the
+    layer's calibrated OUTPUT scale, added after requantization
+    (``residual_add_i8``) with the ReLU folded into the final clip.
     """
+    if residual:
+        r_ref, o_ref, acc_ref = refs
+    else:
+        (o_ref, acc_ref), r_ref = refs, None
     t = pl.program_id(0)
     k = pl.program_id(1)
     single = n_waves == 1
@@ -145,7 +166,12 @@ def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, o_ref,
 
     def _finish(a):               # requantize-on-writeback, all in VMEM
         a = a + bq_ref[0]
-        q = requantize_i32(a, m_ref[0], s_ref[0], pre_shift, relu=relu)
+        # the residual add runs pre-ReLU: requantize without the ReLU
+        # clip, add the int8 shortcut (same scale), then ReLU-clip
+        q = requantize_i32(a, m_ref[0], s_ref[0], pre_shift,
+                           relu=relu and not residual)
+        if residual:
+            q = residual_add_i8(q, r_ref[...], relu)
         if fuse_pool:
             q = pool_max_subsampled(q, pool=pool, stride=ps,
                                     out_h=blk_h, out_w=blk_w)
@@ -188,6 +214,7 @@ def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
                       bq: jax.Array, m: jax.Array, shift: jax.Array,
                       table: jax.Array, *, pre_shift: int = 0,
                       fan_chunk: "int | None" = None,
+                      residual: "jax.Array | None" = None,
                       interpret: bool | None = None) -> jax.Array:
     """Launch the int8 megakernel for one layer.
 
@@ -240,29 +267,49 @@ def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
         raise ValueError(
             f"{l.name}: operand table {table.shape} != "
             f"({kp.n_chain}, {kp.n_tiles}, {KERNEL_OP_COLS})")
+    if kp.residual:
+        want = (B, kp.out_h_pad, kp.out_w_pad, g.out_c_pad)
+        if residual is None or residual.shape != want \
+                or residual.dtype != jnp.int8:
+            raise ValueError(
+                f"{l.name}: residual program wants an int8 residual of "
+                f"shape {want}, got "
+                f"{None if residual is None else residual.shape}")
+    elif residual is not None:
+        raise ValueError(
+            f"{l.name}: program lowered without residual=True cannot "
+            f"take a residual operand")
 
     step_in_c = l.in_c // l.groups if l.groups > 1 else kp.c_width
     c_sub = exact_channel_chunk(l.kernel) if fan_chunk is None \
         else max(1, min(int(fan_chunk), step_in_c))
+    in_specs = [
+        pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
+                     lambda t, k, tbl: (0, tbl[k, t, OP_IY],
+                                        tbl[k, t, OP_IX],
+                                        tbl[k, t, OP_C0]),
+                     indexing_mode=pl.unblocked),
+        # natural per-group weights: grouped layers read the whole
+        # (single-step) tensor, ungrouped ones slice the chain
+        # chunk's fan rows exactly like the fp32 kernel
+        pl.BlockSpec((l.kernel, l.kernel, w_fan, g.out_c_pad),
+                     lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+        pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+        pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+    ]
+    operands = [table, xq, wq, bq, m, shift]
+    if kp.residual:
+        # the int8 shortcut reads the blocked tiling the output writes
+        in_specs.append(pl.BlockSpec(
+            (B, kp.blk_h, kp.blk_w, g.out_c_pad),
+            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)))
+        operands.append(residual)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,        # the SMEM operand table
         grid=(kp.n_tiles, kp.n_chain),
-        in_specs=[
-            pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
-                         lambda t, k, tbl: (0, tbl[k, t, OP_IY],
-                                            tbl[k, t, OP_IX],
-                                            tbl[k, t, OP_C0]),
-                         indexing_mode=pl.unblocked),
-            # natural per-group weights: grouped layers read the whole
-            # (single-step) tensor, ungrouped ones slice the chain
-            # chunk's fan rows exactly like the fp32 kernel
-            pl.BlockSpec((l.kernel, l.kernel, w_fan, g.out_c_pad),
-                         lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
-                         indexing_mode=pl.unblocked),
-            pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
-            pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
-            pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (B, kp.blk_h, kp.blk_w, g.out_c_pad),
             lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)),
@@ -283,11 +330,11 @@ def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
         blk_h=kp.blk_h, blk_w=kp.blk_w, relu=kp.relu,
         fuse_pool=kp.fuse_pool, groups=l.groups,
         step_in_c=step_in_c, c_sub=c_sub, pre_shift=pre_shift,
-        masked=masked)
+        masked=masked, residual=kp.residual)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct(
             (B, kp.out_h_pad, kp.out_w_pad, g.out_c_pad), jnp.int8),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(table, xq, wq, bq, m, shift)
+    )(*operands)

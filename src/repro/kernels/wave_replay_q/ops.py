@@ -61,39 +61,57 @@ def pad_operands_q(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
     return xp, wp, bqp, mp, sp
 
 
+def pad_residual_q(kp: KernelProgram, r: jax.Array) -> jax.Array:
+    """Pad an int8 residual (B, out_h, out_w, out_c) to the kernel's
+    padded output geometry (integer zeros — exact in the add)."""
+    g = kp.wave.program
+    return jnp.pad(r, ((0, 0), (0, kp.out_h_pad - kp.out_h),
+                       (0, kp.out_w_pad - kp.out_w),
+                       (0, g.out_c_pad - g.layer.out_c)))
+
+
 def wave_replay_q_layer(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
                         bq: jax.Array, m: jax.Array, shift: jax.Array,
                         *, pre_shift: int = 0,
                         fan_chunk: "int | None" = None,
                         table: jax.Array | None = None,
+                        residual: "jax.Array | None" = None,
                         interpret: bool | None = None) -> jax.Array:
     """Execute one streamed CONV layer as ONE int8 pallas_call.
 
     ``xq`` (B, in_h, in_w, in_c) int8; ``wq`` (K, K, in_c/groups, out_c)
     int8; ``bq``/``m``/``shift`` (out_c,) int32 from ``LayerQuant``
     (whose ``fan_chunk`` carries the weight-aware exact-gemm bound).
-    Returns the valid (B, out_h, out_w, out_c) int8 output — pooled
-    dims when the program fuses its pool — in the layer's calibrated
-    output scale (= the next layer's input scale).
+    Programs lowered with ``residual=True`` take the int8 shortcut
+    activation (B, out_h, out_w, out_c) at the layer's calibrated
+    OUTPUT scale — added post-requantize with the ReLU folded into the
+    final clip. Returns the valid (B, out_h, out_w, out_c) int8 output
+    — pooled dims when the program fuses its pool — in the layer's
+    calibrated output scale (= the next layer's input scale).
     """
     global _LAUNCHES
     _LAUNCHES += 1
     l = kp.wave.program.layer
     if table is None:
         table = jnp.asarray(kp.operand_table())
+    if kp.residual and residual is None:
+        raise ValueError(f"{l.name}: program lowered with residual=True "
+                         f"needs the residual operand")
     xp, wp, bqp, mp, sp = pad_operands_q(kp, xq, wq, bq, m, shift)
+    rp = pad_residual_q(kp, residual) if kp.residual else None
     y = wave_replay_q_raw(kp, xp, wp, bqp, mp, sp, table,
                           pre_shift=pre_shift, fan_chunk=fan_chunk,
-                          interpret=interpret)
+                          residual=rp, interpret=interpret)
     return y[:, :kp.out_h, :kp.out_w, :l.out_c]
 
 
 def wave_replay_q_from_quant(kp: KernelProgram, xq: jax.Array, quant,
                              table: jax.Array | None = None,
+                             residual: "jax.Array | None" = None,
                              interpret: bool | None = None) -> jax.Array:
     """Convenience entry: unpack a ``LayerQuant`` (quant/calibrate.py)."""
     wq, bq, m, shift = quant.device_arrays()
     return wave_replay_q_layer(kp, xq, wq, bq, m, shift,
                                pre_shift=quant.pre_shift,
                                fan_chunk=quant.fan_chunk, table=table,
-                               interpret=interpret)
+                               residual=residual, interpret=interpret)

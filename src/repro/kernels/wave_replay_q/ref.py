@@ -29,12 +29,16 @@ def maxpool_int(x: jax.Array, window: int, stride: int = 0) -> jax.Array:
 def quant_layer_ref(layer: ConvLayer, xq: jax.Array, wq: jax.Array,
                     bq: jax.Array, m: jax.Array, shift: jax.Array,
                     *, pre_shift: int = 0, relu: bool = False,
-                    fuse_pool: bool = False) -> jax.Array:
+                    fuse_pool: bool = False,
+                    residual: "jax.Array | None" = None) -> jax.Array:
     """One quantized CONV(+POOL) layer, int32 end to end.
 
     ``xq`` (B, H, W, Cin) int8; ``wq`` (K, K, Cin/groups, Cout) int8;
-    ``bq``/``m``/``shift`` (Cout,) int32. Returns int8 — post-pool dims
-    when ``fuse_pool``."""
+    ``bq``/``m``/``shift`` (Cout,) int32. ``residual`` (int8, the
+    layer's output geometry and calibrated output scale) reproduces the
+    kernel's accumulation-buffer add: requantize WITHOUT the ReLU clip,
+    int32-add the shortcut, then ReLU-clip (``residual_add_i8``).
+    Returns int8 — post-pool dims when ``fuse_pool``."""
     l = layer
     acc = lax.conv_general_dilated(
         xq.astype(jnp.int32), wq.astype(jnp.int32),
@@ -44,7 +48,14 @@ def quant_layer_ref(layer: ConvLayer, xq: jax.Array, wq: jax.Array,
         feature_group_count=l.groups,
         preferred_element_type=jnp.int32)
     acc = acc + bq.astype(jnp.int32)
-    q = requantize_i32(acc, m, shift, pre_shift, relu=relu)
+    q = requantize_i32(acc, m, shift, pre_shift,
+                       relu=relu and residual is None)
+    if residual is not None:
+        if fuse_pool:
+            raise ValueError(f"{l.name}: residual add cannot fuse with "
+                             f"the pool epilogue")
+        from repro.kernels.wave_replay_q.kernel import residual_add_i8
+        q = residual_add_i8(q, residual, relu)
     if fuse_pool:
         if l.pool <= 1:
             raise ValueError(f"{l.name}: fuse_pool without a pool")
@@ -54,9 +65,11 @@ def quant_layer_ref(layer: ConvLayer, xq: jax.Array, wq: jax.Array,
 
 def quant_layer_ref_from_quant(layer: ConvLayer, xq: jax.Array, quant,
                                relu: bool = False,
-                               fuse_pool: bool = False) -> jax.Array:
+                               fuse_pool: bool = False,
+                               residual: "jax.Array | None" = None
+                               ) -> jax.Array:
     """Unpack a ``LayerQuant`` (quant/calibrate.py) into the oracle."""
     wq, bq, m, shift = quant.device_arrays()
     return quant_layer_ref(layer, xq, wq, bq, m, shift,
                            pre_shift=quant.pre_shift, relu=relu,
-                           fuse_pool=fuse_pool)
+                           fuse_pool=fuse_pool, residual=residual)

@@ -8,6 +8,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --cnn \
       --precision int8 --batch 8 --requests 32   # quantized megakernel
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn --network resnet18 \
+      --mode megakernel --batch 4 --requests 8   # residual graph serving
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn --network vgg16 \
+      --batch 4 --requests 8
 """
 import argparse
 import dataclasses
@@ -24,42 +30,40 @@ from repro.train.steps import make_decode_step, make_prefill_step
 
 def cnn_main(args):
     """Serve single-image requests through a compiled StreamingSession:
-    the whole AlexNet conv stack is lowered to tile schedules once, then
-    every ``--batch`` submits share one cached executable (paper §7).
-    ``--precision int8`` calibrates the stack on a few random batches
-    and serves the quantized megakernel path (fixed-point datapath,
-    paper Table 2)."""
-    from repro.core.decomposition import ALEXNET_STACK
+    the chosen network's graph (``--network alexnet | vgg16 |
+    resnet18``, core/model_zoo.py) is lowered to tile schedules once,
+    then every ``--batch`` submits share one cached executable (paper
+    §7). ResNet-18 serves with its residual adds fused into the
+    megakernel epilogues and its projection shortcuts streamed as 1x1
+    convs. ``--precision int8`` calibrates the graph on a few random
+    batches and serves the quantized megakernel path (fixed-point
+    datapath, paper Table 2)."""
+    from repro.core.model_zoo import network_graph
     from repro.launch.session import StreamingSession
+    from repro.models.cnn import init_graph_weights
 
-    layers = ALEXNET_STACK
-    weights = []
-    for i, l in enumerate(layers):
-        k1, k2 = jax.random.split(jax.random.key(i))
-        w = jax.random.normal(
-            k1, (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * 0.05
-        b = jax.random.normal(k2, (l.out_c,)) * 0.1
-        weights.append((w, b))
+    graph = network_graph(args.network)
+    weights = init_graph_weights(graph, jax.random.key(0))
     qnet = None
     mode = args.mode
+    H, W, C = graph.in_shape
     if args.precision == "int8":
-        from repro.quant import calibrate_network
+        from repro.quant import calibrate_graph
         if mode != "megakernel":
             print("--precision int8 runs the quantized megakernel; "
                   f"overriding --mode {mode}")
             mode = "megakernel"
-        calib = jax.random.normal(jax.random.key(7),
-                                  (2, 227, 227, 3))
-        qnet = calibrate_network(layers, weights, calib)
-    sess = StreamingSession.for_network(layers, weights,
-                                        sram_budget=args.sram_kb * 1024,
-                                        max_batch=args.batch,
-                                        mode=mode,
-                                        pool_backend=args.pool_backend,
-                                        precision=args.precision,
-                                        qnet=qnet)
+        calib = jax.random.normal(jax.random.key(7), (2, H, W, C))
+        qnet = calibrate_graph(graph, weights, calib)
+    sess = StreamingSession.for_graph(graph, weights,
+                                      sram_budget=args.sram_kb * 1024,
+                                      max_batch=args.batch,
+                                      mode=mode,
+                                      pool_backend=args.pool_backend,
+                                      precision=args.precision,
+                                      qnet=qnet)
     imgs = jax.random.normal(jax.random.key(99),
-                             (args.requests, 227, 227, 3))
+                             (args.requests, H, W, C))
     # warm-up: one padded flush compiles the (only) executable
     t0 = time.perf_counter()
     jax.block_until_ready(sess.result(sess.submit(imgs[0])))
@@ -85,6 +89,11 @@ def main():
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--cnn", action="store_true",
                     help="serve CNN image requests via StreamingSession")
+    ap.add_argument("--network", default="alexnet",
+                    choices=("alexnet", "vgg16", "resnet18"),
+                    help="which NetworkGraph to serve (--cnn): the "
+                         "AlexNet chain, the VGG-16 stack, or ResNet-18 "
+                         "with residual adds + projection shortcuts")
     ap.add_argument("--requests", type=int, default=32,
                     help="number of single-image requests (--cnn)")
     ap.add_argument("--sram-kb", type=int, default=128,

@@ -3,13 +3,16 @@
 The paper's deployment story (§7, the FPGA face-detection demo) is a
 fixed network whose tile schedule is burned into the command decoder
 once, then replayed per frame. ``StreamingSession`` is that story for
-the JAX executor: it lowers every layer of a conv stack to a static
-``TileProgram`` (core/schedule.py) at construction — wave-partitioned
-by default, so every dependency-free wave of a layer's schedule is one
-fused dispatch — then compiles ONE whole-network executable per batch
-shape and replays it for every request — weights and operand tables are
-traced arguments, so weight updates and schedule replays never
-retrigger compilation.
+the JAX executor, now over the **NetworkGraph IR** (core/graph.py): the
+session takes a graph — a linear conv stack is just a chain graph —
+lowers every conv node to a static ``TileProgram`` at construction,
+compiles ONE whole-graph executable per batch shape (walking the
+graph's validated topological schedule: residual adds fold into
+megakernel epilogues, shortcut projections stream like any 1x1 conv,
+and activation buffers free per the graph's liveness plan), and
+replays it for every request — weights and operand tables are traced
+arguments, so weight updates and schedule replays never retrigger
+compilation.
 
 Serving modes:
 
@@ -31,21 +34,24 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.decomposition import ConvLayer, Plan, plan_decomposition
-from repro.core.schedule import TileProgram, compile_network
-from repro.core.streaming import network_forward_fn, network_operands
+from repro.core.decomposition import ConvLayer, plan_decomposition
+from repro.core.graph import NetworkGraph, chain_graph, conv_keyed
+from repro.core.schedule import TileProgram
+from repro.core.streaming import (compile_graph, graph_forward_fn,
+                                  graph_operands, plan_graph)
 
 
 class StreamingSession:
-    """One compiled (network, plan-set, batch-shape) serving session.
+    """One compiled (graph, plan-set, batch-shape) serving session.
 
-    ``mode`` picks the per-layer executor the session compiles:
-    ``"wave"`` (default — each dependency-free wave of the schedule is
-    one fused dispatch), ``"megakernel"`` (one persistent Pallas kernel
-    per layer; bias+ReLU+pool fused in the kernel epilogue, so
-    ``pool_backend`` is ignored), or ``"scan"`` (serial step replay).
-    ``pool_backend="fused"`` serves CONV+POOL layers through the Pallas
-    fused conv+ReLU+pool kernel.
+    ``graph`` is a ``NetworkGraph`` (or a plain layer sequence, wrapped
+    into its chain graph). ``mode`` picks the per-conv-node executor
+    the session compiles: ``"wave"`` (default — each dependency-free
+    wave of the schedule is one fused dispatch), ``"megakernel"`` (one
+    persistent Pallas kernel per conv node; bias+ReLU+pool AND residual
+    adds fused in the kernel epilogue, so ``pool_backend`` is ignored),
+    or ``"scan"`` (serial step replay). ``pool_backend="fused"`` serves
+    CONV+POOL nodes through the Pallas fused conv+ReLU+pool kernel.
 
     ``donate`` (default True) donates the input batch buffer to the
     compiled executable, so XLA reuses it for the inter-layer
@@ -55,54 +61,71 @@ class StreamingSession:
     ``flush`` are unaffected).
 
     ``precision="int8"`` (megakernel mode only) serves the fixed-point
-    datapath: pass a calibrated ``qnet``
-    (``repro.quant.calibrate_network``); the session packs its int8
-    weights / int32 requant vectors as the traced weight tuples, fp32
-    requests are quantized at entry and dequantized at exit, and raw
-    int8 activations flow between layers. The tile schedules and
-    operand tables are byte-identical to the fp32 megakernel session's.
+    datapath: pass a calibrated ``qnet`` — a ``QuantizedGraph``
+    (``repro.quant.calibrate_graph``) or, for chain graphs, a
+    ``QuantizedNetwork``; the session packs its int8 weights / int32
+    requant vectors as the traced weight tuples, fp32 requests are
+    quantized at entry and dequantized at exit, and raw int8
+    activations flow along every edge. The tile schedules and operand
+    tables are byte-identical to the fp32 megakernel session's.
     """
 
-    def __init__(self, layers: Sequence[ConvLayer], plans: Sequence[Plan],
-                 weights: Optional[Sequence[Tuple[jax.Array,
-                                                  Optional[jax.Array]]]],
+    def __init__(self, graph, plans,
+                 weights,
                  conv_fn: Optional[Callable] = None,
                  conv_backend: str = "xla", max_batch: int = 8,
                  mode: str = "wave", pool_backend: str = "xla",
                  donate: bool = True, precision: str = "fp32",
                  qnet=None):
-        self.layers = tuple(layers)
-        self.plans = tuple(plans)
+        if not isinstance(graph, NetworkGraph):
+            graph = chain_graph(tuple(graph))
+        self.graph = graph
+        self.layers = tuple(n.layer for n in graph.conv_nodes())
+        self._plans = self._conv_dict(plans, "plans")
+        self.plans = tuple(self._plans.values())
         self.max_batch = int(max_batch)
         self.mode = mode
         self.pool_backend = pool_backend
         self.donate = bool(donate)
         self.precision = precision
-        self.qnet = qnet
-        self.programs: List[TileProgram] = compile_network(layers, plans)
+        self._progs = compile_graph(graph, self._plans)
+        # schedule-ordered program list (chain sessions: stack order)
+        self.programs: List[TileProgram] = list(self._progs.values())
+        qgraph = None
         if precision == "int8":
             if qnet is None:
                 raise ValueError(
                     "precision='int8' needs a calibrated qnet — run "
-                    "repro.quant.calibrate_network first")
-            if tuple(qnet.layers) != self.layers:
+                    "repro.quant.calibrate_graph (or calibrate_network "
+                    "for a linear stack) first")
+            if not hasattr(qnet, "scales"):      # QuantizedNetwork
+                from repro.quant.calibrate import \
+                    quantized_graph_from_network
+                if tuple(qnet.layers) != self.layers:
+                    raise ValueError(
+                        "qnet was calibrated for a different layer stack")
+                qnet = quantized_graph_from_network(qnet, graph)
+            if qnet.graph != graph:
                 raise ValueError(
-                    "qnet was calibrated for a different layer stack")
-            # the traced per-layer weight tuples (wq, bias_q, m, shift);
+                    "qnet was calibrated for a different graph")
+            # the traced per-node weight tuples (wq, bias_q, m, shift);
             # float weights are not needed at serving time
             self.weights = qnet.device_weights()
+            qgraph = qnet
         else:
             if weights is None:
                 raise ValueError(
                     "weights=None is only valid with precision='int8' "
                     "(where the calibrated qnet supplies them) — pass "
                     "the float (w, b) pairs")
-            self.weights = list(weights)
-        self._ops = network_operands(self.programs, mode)
-        self._forward = network_forward_fn(self.programs, conv_fn,
-                                           conv_backend, mode=mode,
-                                           pool_backend=pool_backend,
-                                           precision=precision, qnet=qnet)
+            self.weights = self._conv_dict(weights, "weights")
+        self.qnet = qnet
+        self._ops = graph_operands(graph, self._progs, mode)
+        self._forward = graph_forward_fn(graph, self._progs, conv_fn,
+                                         conv_backend, mode=mode,
+                                         pool_backend=pool_backend,
+                                         precision=precision,
+                                         qgraph=qgraph)
         self._executables: Dict[tuple, Callable] = {}
         self.compile_count = 0          # traces performed (the spy)
         self.calls = 0                  # compiled-executable invocations
@@ -111,15 +134,26 @@ class StreamingSession:
         self._results: Dict[int, jax.Array] = {}
         self._next_ticket = 0
 
+    def _conv_dict(self, items, what: str):
+        return conv_keyed(self.graph, items, what)
+
     @classmethod
     def for_network(cls, layers: Sequence[ConvLayer],
-                    weights: Sequence[Tuple[jax.Array,
-                                            Optional[jax.Array]]],
+                    weights,
                     sram_budget: int = 128 * 1024,
                     **kw) -> "StreamingSession":
-        """Plan every layer under one buffer budget, then build a session."""
+        """Plan every layer under one buffer budget, then build a
+        session over the stack's chain graph."""
         plans = [plan_decomposition(l, sram_budget) for l in layers]
-        return cls(layers, plans, weights, **kw)
+        return cls(tuple(layers), plans, weights, **kw)
+
+    @classmethod
+    def for_graph(cls, graph: NetworkGraph, weights,
+                  sram_budget: int = 128 * 1024,
+                  **kw) -> "StreamingSession":
+        """Plan every conv node under one buffer budget, then build the
+        session (VGG-16 / ResNet-18 graphs from ``core.model_zoo``)."""
+        return cls(graph, plan_graph(graph, sram_budget), weights, **kw)
 
     # ------------------------------------------------------------------
     # compiled batched path
@@ -127,10 +161,10 @@ class StreamingSession:
     def _executable(self, shape, dtype) -> Callable:
         key = (tuple(shape), str(dtype))
         if key not in self._executables:
-            def traced(x, weights, ops_list):
+            def traced(x, weights, ops):
                 # runs only while jax traces: counts (re)compilations
                 self.compile_count += 1
-                return self._forward(x, weights, ops_list)
+                return self._forward(x, weights, ops)
             # donate the input batch: XLA reuses its buffer for the
             # inter-layer activations instead of doubling peak HBM.
             # Weights and operand tables are NOT donated — they serve
@@ -217,7 +251,9 @@ class StreamingSession:
         return len(self._pending)
 
     def describe(self) -> str:
-        lines = [f"StreamingSession: {len(self.programs)} layers, "
+        lines = [f"StreamingSession[{self.graph.name}]: "
+                 f"{len(self.graph.nodes)} nodes "
+                 f"({len(self.programs)} conv), "
                  f"mode={self.mode}, precision={self.precision}, "
                  f"pool_backend={self.pool_backend}, "
                  f"max_batch={self.max_batch}, "

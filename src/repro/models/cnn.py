@@ -1,8 +1,11 @@
 """Conv nets on the streaming substrate — the paper's own domain.
 
-AlexNet CONV stack (paper Table 1) + a small trainable classifier used by
-the end-to-end CNN training example and the FPGA-demo-analogue (tiled
-streaming inference over large images).
+AlexNet CONV stack (paper Table 1) + a small trainable classifier used
+by the end-to-end CNN training example and the FPGA-demo-analogue
+(tiled streaming inference over large images), plus full weighted
+**NetworkGraph** models (VGG-16, ResNet-18 — ``graph_defs`` /
+``init_graph_weights`` / ``apply_graph``) that run end to end through
+every streaming executor (core/streaming.py::run_graph_streamed).
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decomposition import ALEXNET_LAYERS, ConvLayer
+from repro.core.graph import NetworkGraph
 from repro.core.streaming import conv2d_direct, maxpool_direct
 from repro.models.module import ParamDef
 
@@ -66,6 +70,51 @@ def cnn_defs(cfg: CNNConfig):
         "b2": ParamDef((cfg.num_classes,), jnp.float32, (None,), init="zeros"),
     }
     return defs
+
+
+# ---------------------------------------------------------------------------
+# NetworkGraph-backed models (VGG-16 / ResNet-18, core/model_zoo.py)
+# ---------------------------------------------------------------------------
+
+def graph_defs(graph: NetworkGraph):
+    """ParamDefs for every conv node of a NetworkGraph (He-style fan-in
+    scaling happens at init; adds/projections carry no extra params)."""
+    defs = {}
+    for n in graph.conv_nodes():
+        l = n.layer
+        defs[n.name] = {
+            "w": ParamDef((l.kernel, l.kernel, l.in_c // l.groups,
+                           l.out_c), jnp.float32, (None, None, None, "mlp")),
+            "b": ParamDef((l.out_c,), jnp.float32, ("mlp",), init="zeros"),
+        }
+    return defs
+
+
+def init_graph_weights(graph: NetworkGraph, key: jax.Array,
+                       scale: Optional[float] = None
+                       ) -> "dict[str, tuple[jax.Array, jax.Array]]":
+    """He-normal conv weights + zero biases for every conv node, keyed
+    by node name — the weight dict every graph executor and session
+    takes. ``scale`` overrides the per-layer He factor (fixed-scale
+    inits blow activations up through deep residual stacks)."""
+    weights = {}
+    for i, n in enumerate(graph.conv_nodes()):
+        l = n.layer
+        fan_in = l.kernel * l.kernel * (l.in_c // l.groups)
+        s = scale if scale is not None else (2.0 / fan_in) ** 0.5
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(
+            k, (l.kernel, l.kernel, l.in_c // l.groups, l.out_c)) * s
+        weights[n.name] = (w, jnp.zeros((l.out_c,)))
+    return weights
+
+
+def apply_graph(graph: NetworkGraph, weights, x: jax.Array) -> jax.Array:
+    """Direct (undecomposed) reference forward over the graph schedule —
+    the oracle the streamed executors are tested against (the shared
+    walk in ``core/streaming.py::run_graph_reference``)."""
+    from repro.core.streaming import run_graph_reference
+    return run_graph_reference(graph, weights, x)[graph.output]
 
 
 def apply_cnn(cfg: CNNConfig, params, x: jax.Array,

@@ -1,10 +1,13 @@
 """Quantized streaming inference (ISSUE 4): PTQ calibration to int8
 megakernel execution, end to end. See DESIGN.md §7."""
 from repro.quant.accuracy import (accuracy_report, format_report,
-                                  megakernel_acts, quant_reference_acts,
-                                  snr_db)
-from repro.quant.calibrate import (LayerQuant, QuantizedNetwork,
-                                   activation_scale, calibrate_layer,
-                                   calibrate_network, float_network_acts,
-                                   quantize_layer,
-                                   quantize_weights_per_channel)
+                                  megakernel_acts,
+                                  quant_graph_reference_acts,
+                                  quant_reference_acts, snr_db)
+from repro.quant.calibrate import (LayerQuant, QuantizedGraph,
+                                   QuantizedNetwork, activation_scale,
+                                   calibrate_graph, calibrate_layer,
+                                   calibrate_network, float_graph_acts,
+                                   float_network_acts, quantize_layer,
+                                   quantize_weights_per_channel,
+                                   quantized_graph_from_network)

@@ -56,6 +56,30 @@ def quant_reference_acts(qnet: QuantizedNetwork,
     return acts
 
 
+def quant_graph_reference_acts(qgraph, x: jax.Array) -> dict:
+    """The int32-reference quantized model over a NetworkGraph schedule:
+    every VALUE's int8 activation, keyed by value name. Conv nodes run
+    ``quant_layer_ref`` with the NODE's ReLU; add nodes run the same
+    ``residual_add_i8`` the kernel epilogue calls — so this walk is
+    bit-identical to the int8 graph forward whether or not an add was
+    fused into a conv's epilogue (requantize-without-ReLU then add then
+    ReLU-clip is exactly the unfused op sequence)."""
+    from repro.core.graph import INPUT, topological_schedule
+    from repro.kernels.wave_replay_q.kernel import residual_add_i8
+    from repro.kernels.wave_replay_q.ref import quant_layer_ref_from_quant
+    env = {INPUT: x if x.dtype == jnp.int8
+           else quantize_int8_sym(x, qgraph.scales[INPUT])}
+    for n in topological_schedule(qgraph.graph):
+        if n.op == "conv":
+            env[n.name] = quant_layer_ref_from_quant(
+                n.layer, env[n.inputs[0]], qgraph.quants[n.name],
+                relu=n.relu, fuse_pool=n.layer.pool > 1)
+        else:
+            env[n.name] = residual_add_i8(env[n.inputs[0]],
+                                          env[n.inputs[1]], n.relu)
+    return env
+
+
 def megakernel_acts(qnet: QuantizedNetwork, x: jax.Array,
                     vmem_budget: Optional[int] = None,
                     programs=None,

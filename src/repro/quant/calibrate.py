@@ -37,6 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.decomposition import ConvLayer
+from repro.core.graph import (INPUT, NetworkGraph, chain_graph,
+                              conv_keyed, topological_schedule)
 from repro.core.quantization import INT8_QMAX, requant_params
 
 # bias magnitudes are clipped here when a pathological scale pair would
@@ -224,33 +226,184 @@ def float_network_acts(layers: Sequence[ConvLayer], weights,
     return acts
 
 
-def calibrate_network(layers: Sequence[ConvLayer], weights, calib,
-                      method: str = "percentile",
-                      percentile: float = 99.9) -> QuantizedNetwork:
-    """PTQ calibration: run ``calib`` through the float path, freeze int8.
+# ---------------------------------------------------------------------------
+# Graph-aware calibration (ISSUE 5): observe graph VALUES, not list
+# indices — residual add operands are forced onto one shared scale so
+# the int8 accumulation-buffer add is a plain integer add.
+# ---------------------------------------------------------------------------
 
-    ``calib`` is one (N, H, W, C) array or an iterable of such batches
-    (a single image works — (1, H, W, C)). Activation observations from
-    every batch pool into one per-boundary scale; weights quantize
-    per-output-channel independent of the data.
+@dataclasses.dataclass(frozen=True)
+class QuantizedGraph:
+    """A calibrated NetworkGraph: per-conv-node ``LayerQuant`` (keyed by
+    node name) + per-VALUE activation scales (keyed by value name,
+    ``"input"`` included).
+
+    Scale invariants (validated): every conv's in/out scale equals its
+    input/output value's scale, and both operands of every ``add`` node
+    share the add output's scale — which is what lets raw int8
+    activations flow along every edge and shortcut adds run as plain
+    integer adds (kernel epilogue or explicit, bit-identically).
     """
-    layers = tuple(layers)
+    graph: NetworkGraph
+    quants: "dict[str, LayerQuant]"
+    scales: "dict[str, float]"
+    method: str = "percentile"
+
+    def __post_init__(self):
+        conv_names = {n.name for n in self.graph.conv_nodes()}
+        if set(self.quants) != conv_names:
+            raise ValueError(
+                f"{self.graph.name}: quants keyed {sorted(self.quants)} "
+                f"!= conv nodes {sorted(conv_names)}")
+        for n in topological_schedule(self.graph):
+            if n.op == "conv":
+                q = self.quants[n.name]
+                if q.in_scale != self.scales[n.inputs[0]] \
+                        or q.out_scale != self.scales[n.name]:
+                    raise ValueError(
+                        f"{self.graph.name}: {n.name} scales "
+                        f"({q.in_scale}, {q.out_scale}) disagree with "
+                        f"edge scales — int8 activations could not flow "
+                        f"unconverted")
+            else:
+                a, b = n.inputs
+                if not (self.scales[a] == self.scales[b]
+                        == self.scales[n.name]):
+                    raise ValueError(
+                        f"{self.graph.name}: add {n.name} operands/"
+                        f"output must share one scale "
+                        f"({self.scales[a]}, {self.scales[b]}, "
+                        f"{self.scales[n.name]})")
+
+    def device_weights(self) -> "dict[str, Tuple[jax.Array, ...]]":
+        """Per-conv-node traced weight tuples for the int8 graph
+        forward (``core/streaming.py::graph_forward_fn``)."""
+        return {name: q.device_arrays() for name, q in self.quants.items()}
+
+    def describe(self) -> str:
+        lines = [f"QuantizedGraph {self.graph.name}: "
+                 f"{len(self.quants)} conv nodes, method={self.method}, "
+                 f"in_scale={self.scales[INPUT]:.3g}"]
+        for n in self.graph.conv_nodes():
+            q = self.quants[n.name]
+            lines.append(f"  {n.name}: out_scale {q.out_scale:.3g}, "
+                         f"pre_shift {q.pre_shift}")
+        return "\n".join(lines)
+
+
+def float_graph_acts(graph: NetworkGraph, weights,
+                     x: jax.Array) -> "dict[str, jax.Array]":
+    """Reference float forward over the graph schedule returning every
+    VALUE (``"input"`` included): each conv value is post-ReLU/post-pool,
+    each add value post-ReLU — exactly the tensors the int8 path carries
+    as int8, making these both the calibration observations and the
+    accuracy-harness reference points. Delegates to the one shared walk
+    (``core/streaming.py::run_graph_reference``), so calibration can
+    never observe different tensors than the executors produce."""
+    from repro.core.streaming import run_graph_reference
+    return run_graph_reference(graph, weights, x)
+
+
+def _unify_add_scales(graph: NetworkGraph,
+                      base: "dict[str, float]") -> "dict[str, float]":
+    """Union-find over values: each add node's operands and output land
+    in one scale group (identity shortcuts chain groups transitively);
+    a group's scale is the max of its members' base scales, so no
+    member saturates harder than its own calibration said it would."""
+    parent = {v: v for v in base}
+
+    def find(v):
+        while parent[v] != v:
+            parent[v] = parent[parent[v]]
+            v = parent[v]
+        return v
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+
+    for n in graph.nodes:
+        if n.op == "add":
+            union(n.inputs[0], n.name)
+            union(n.inputs[1], n.name)
+    groups: "dict[str, float]" = {}
+    for v in base:
+        r = find(v)
+        groups[r] = max(groups.get(r, 0.0), base[v])
+    return {v: groups[find(v)] for v in base}
+
+
+def calibrate_graph(graph: NetworkGraph, weights, calib,
+                    method: str = "percentile",
+                    percentile: float = 99.9) -> QuantizedGraph:
+    """PTQ calibration over a NetworkGraph: run ``calib`` through the
+    float graph walk, observe every VALUE, freeze the integer datapath.
+
+    ``calib`` is one (N, H, W, C) array or an iterable of such batches.
+    Observations pool per value; add-operand scales are unified
+    (``_unify_add_scales``) so the residual add needs no requantize;
+    each conv node freezes with its input value's scale in and its own
+    value's scale out.
+    """
+    weights = conv_keyed(graph, weights, "weights")
     if hasattr(calib, "ndim"):
         calib = [calib]
-    fwd = jax.jit(lambda xb: float_network_acts(layers, weights, xb))
-    samples: List[List[np.ndarray]] = [[] for _ in range(len(layers) + 1)]
+    fwd = jax.jit(lambda xb: float_graph_acts(graph, weights, xb))
+    samples: "dict[str, List[np.ndarray]]" = {}
     n_batches = 0
     for batch in calib:
         n_batches += 1
-        for i, act in enumerate(fwd(batch)):
-            samples[i].append(np.asarray(act, np.float32).ravel())
+        for v, act in fwd(batch).items():
+            samples.setdefault(v, []).append(
+                np.asarray(act, np.float32).ravel())
     if n_batches == 0:
         raise ValueError("calibration needs at least one batch")
-    scales = [activation_scale(np.concatenate(s), method, percentile)
-              for s in samples]
-    quants = tuple(
-        quantize_layer(l, w, b, scales[i], scales[i + 1])
-        for i, (l, (w, b)) in enumerate(zip(layers, weights)))
+    base = {v: activation_scale(np.concatenate(s), method, percentile)
+            for v, s in samples.items()}
+    scales = _unify_add_scales(graph, base)
+    quants = {
+        n.name: quantize_layer(n.layer, *weights[n.name],
+                               scales[n.inputs[0]], scales[n.name])
+        for n in graph.conv_nodes()}
+    return QuantizedGraph(graph=graph, quants=quants, scales=scales,
+                          method=method)
+
+
+def quantized_graph_from_network(qnet: QuantizedNetwork,
+                                 graph: NetworkGraph) -> QuantizedGraph:
+    """Adapt a linear-stack ``QuantizedNetwork`` to its chain graph's
+    ``QuantizedGraph`` (same quants, scales keyed by value name)."""
+    convs = graph.conv_nodes()
+    if tuple(n.layer for n in convs) != tuple(qnet.layers) \
+            or any(n.op != "conv" for n in graph.nodes):
+        raise ValueError(
+            f"{graph.name}: not the chain graph of this "
+            f"QuantizedNetwork")
+    quants = {n.name: q for n, q in zip(convs, qnet.quants)}
+    scales = {INPUT: qnet.in_scale}
+    for n, q in zip(convs, qnet.quants):
+        scales[n.name] = q.out_scale
+    return QuantizedGraph(graph=graph, quants=quants, scales=scales,
+                          method=qnet.method)
+
+
+def calibrate_network(layers: Sequence[ConvLayer], weights, calib,
+                      method: str = "percentile",
+                      percentile: float = 99.9) -> QuantizedNetwork:
+    """PTQ calibration of a linear stack: ``calibrate_graph`` over the
+    stack's chain graph, repackaged as a ``QuantizedNetwork``.
+
+    ``calib`` is one (N, H, W, C) array or an iterable of such batches
+    (a single image works — (1, H, W, C)). Activation observations from
+    every batch pool into one per-boundary (= per graph value) scale;
+    weights quantize per-output-channel independent of the data.
+    """
+    layers = tuple(layers)
+    g = chain_graph(layers)
+    weights = list(weights)
+    qg = calibrate_graph(g, weights, calib, method, percentile)
+    quants = tuple(qg.quants[l.name] for l in layers)
     return QuantizedNetwork(layers=layers, quants=quants, method=method)
 
 

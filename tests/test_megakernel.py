@@ -374,3 +374,50 @@ if hypothesis is not None:
                                 x, wts, b)
         ref = wave_replay_ref(layer, x, wts, b)
         assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Residual epilogue (ISSUE 5): the accumulation-SRAM add in the kernel
+# ---------------------------------------------------------------------------
+
+def test_megakernel_residual_epilogue_matches_ref():
+    """residual=True lowers one extra operand, added after bias and
+    before ReLU — compared against the XLA oracle with the same order."""
+    layer = ConvLayer("res", 12, 12, 8, 8, 3, pad=1)
+    plan = evaluate(layer, 2, 2, 1, 2)
+    kp = lower_kernel_program(partition_waves(compile_layer(layer, plan)),
+                              relu=True, residual=True, vmem_budget=None)
+    x = jax.random.normal(jax.random.key(0), (2, 12, 12, 8))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 8, 8)) * 0.2
+    b = jax.random.normal(jax.random.key(2), (8,)) * 0.1
+    r = jax.random.normal(jax.random.key(3), (2, 12, 12, 8))
+    got = wave_replay_layer(kp, x, w, b, residual=r)
+    ref = wave_replay_ref(layer, x, w, b, relu=True, residual=r)
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_megakernel_residual_validation():
+    layer = ConvLayer("resv", 8, 8, 4, 4, 3, pad=1, pool=2)
+    plan = evaluate(layer, 1, 1, 1, 1)
+    wprog = partition_waves(compile_layer(layer, plan))
+    with pytest.raises(ValueError, match="residual add cannot fuse"):
+        lower_kernel_program(wprog, relu=True, fuse_pool=True,
+                             residual=True)
+    nopool = ConvLayer("resv2", 8, 8, 4, 4, 3, pad=1)
+    kp = lower_kernel_program(
+        partition_waves(compile_layer(nopool, evaluate(nopool, 1, 1, 1, 1))),
+        residual=True, vmem_budget=None)
+    x = jnp.zeros((1, 8, 8, 4))
+    w = jnp.zeros((3, 3, 4, 4))
+    with pytest.raises(ValueError, match="needs the residual"):
+        wave_replay_layer(kp, x, w)
+    kp_plain = lower_kernel_program(
+        partition_waves(compile_layer(nopool, evaluate(nopool, 1, 1, 1, 1))),
+        residual=False, vmem_budget=None)
+    with pytest.raises(ValueError, match="without residual"):
+        from repro.kernels.wave_replay.kernel import wave_replay_raw
+        from repro.kernels.wave_replay.ops import pad_operands
+        xp, wp, bias = pad_operands(kp_plain, x, w, None)
+        wave_replay_raw(kp_plain, xp, wp, bias,
+                        jnp.asarray(kp_plain.operand_table()),
+                        residual=jnp.zeros((1, 8, 8, 4)))

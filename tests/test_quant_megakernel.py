@@ -330,3 +330,36 @@ def test_int8_reuses_fp32_kernel_programs_and_tables():
     for kp, ops in zip(kprogs, ops_f):
         assert ops.shape == (kp.n_chain, kp.n_tiles, 8)
         assert np.array_equal(np.asarray(ops), kp.operand_table())
+
+
+# ---------------------------------------------------------------------------
+# int8 residual epilogue (ISSUE 5): requantize -> add -> ReLU-clip,
+# bit-exact against the int32 reference with the same op order
+# ---------------------------------------------------------------------------
+
+def test_q_megakernel_residual_bit_exact():
+    from repro.core.quantization import quantize_int8_sym
+    layer = ConvLayer("qres", 12, 12, 8, 8, 3, pad=1)
+    plan = evaluate(layer, 2, 2, 1, 2)
+    kp = lower_kernel_program(partition_waves(compile_layer(layer, plan)),
+                              relu=True, residual=True, vmem_budget=None)
+    x = jax.random.normal(jax.random.key(0), (2, 12, 12, 8))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 8, 8)) * 0.2
+    b = jax.random.normal(jax.random.key(2), (8,)) * 0.1
+    q = calibrate_layer(layer, w, b, x)
+    xq = quantize_int8_sym(x, q.in_scale)
+    rq = quantize_int8_sym(
+        jax.random.normal(jax.random.key(3), (2, 12, 12, 8)), q.out_scale)
+    got = wave_replay_q_from_quant(kp, xq, q, residual=rq)
+    ref = quant_layer_ref_from_quant(layer, xq, q, relu=True, residual=rq)
+    assert jnp.array_equal(got, ref), "int8 residual epilogue != reference"
+
+
+def test_residual_add_i8_clips_and_folds_relu():
+    from repro.kernels.wave_replay_q.kernel import residual_add_i8
+    a = jnp.array([[100, -100, 127, -127]], jnp.int8)
+    r = jnp.array([[100, -100, 127, 127]], jnp.int8)
+    s = residual_add_i8(a, r, relu=False)
+    assert s.tolist() == [[127, -127, 127, 0]]       # saturating int8
+    s_relu = residual_add_i8(a, r, relu=True)
+    assert s_relu.tolist() == [[127, 0, 127, 0]]     # ReLU folds the clip

@@ -152,3 +152,56 @@ def test_gate_cli(tmp_path):
     with pytest.raises(SystemExit):
         gate.main(["--baseline", str(b), "--current", str(c)])
     gate.main(["--baseline", str(b), "--current", str(b)])
+
+
+# ---------------------------------------------------------------------------
+# Per-network rows (ISSUE 5): baseline-present + traffic no-growth
+# ---------------------------------------------------------------------------
+
+def _payload_networks(vgg_traffic=500, res_traffic=400, include=True):
+    p = _payload(100, 300, 200)
+    if include:
+        p["records"] += [
+            {"name": "streaming_vgg16_wave", "us_per_call": 50,
+             "meta": {"dram_traffic_bytes": vgg_traffic}},
+            {"name": "streaming_resnet18_wave", "us_per_call": 40,
+             "meta": {"dram_traffic_bytes": res_traffic}},
+        ]
+    return p
+
+
+def test_gate_network_rows_pass_identical():
+    base = _payload_networks()
+    assert gate.compare(base, base) == []
+
+
+def test_gate_fails_when_network_row_goes_missing():
+    base = _payload_networks()
+    cur = _payload_networks(include=False)
+    fails = gate.compare(base, cur)
+    assert len(fails) == 2
+    assert all("per-network row" in f for f in fails)
+
+
+def test_gate_fails_on_network_traffic_growth():
+    base = _payload_networks(res_traffic=400)
+    cur = _payload_networks(res_traffic=450)
+    fails = gate.compare(base, cur)
+    assert len(fails) == 1 and "resnet18" in fails[0] \
+        and "DRAM traffic" in fails[0]
+
+
+def test_gate_network_rows_are_not_time_gated():
+    """Reduced-scale few-rep network rows: a 10x slower time alone must
+    not fail the gate (presence + traffic are the per-network rules)."""
+    base = _payload_networks()
+    cur = _payload_networks()
+    for r in cur["records"]:
+        if r["name"].startswith(("streaming_vgg16", "streaming_resnet18")):
+            r["us_per_call"] *= 10
+    assert gate.compare(base, cur) == []
+
+
+def test_gate_baseline_without_network_rows_accepts_new_rows():
+    base = _payload(100, 300, 200)
+    assert gate.compare(base, _payload_networks()) == []
