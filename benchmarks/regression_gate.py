@@ -13,7 +13,15 @@ row) — and fails when any executor mode's share grew by more than
 
 Also checks the modelled DRAM traffic (``dram_traffic_bytes``): traffic
 is a pure function of the plans, so any *increase* is a planner/lowering
-regression, not noise, and fails at any size.
+regression, not noise, and fails at any size. Rows carrying a
+``launches`` meta (megakernel / graphkernel, ISSUE 6) get the same
+no-growth rule on kernel launch counts — more launches means a fused
+chain split up or a fused path fell back to per-layer dispatch.
+Graphkernel rows are presence/launch/traffic-gated but never
+time-gated: interpret-mode CI pays per-step emulation cost instead of
+the launch overhead the fused chain eliminates, so their wall-clock is
+not the artifact (and the big noisy row would destabilise every other
+share in its group).
 
 Per-network rows (``streaming_vgg16_*`` / ``streaming_resnet18_*``,
 ISSUE 5): these reduced-scale few-rep rows are not time-gated; instead
@@ -52,8 +60,14 @@ GROUPS = ("streaming_conv1", "streaming_alexnet")
 # only anchor the group sum's scale), and the one-shot rows —
 # interpreted walk, Pallas tile backend, fused-pool backend — which are
 # single-rep by design (benchmarks/run.py --smoke omits them entirely)
-# and far too noisy to gate
-SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool")
+# and far too noisy to gate. Graphkernel rows (ISSUE 6) are also not
+# share-gated: in interpret-mode CI their wall-clock is per-step
+# emulation cost, not the launch-overhead the mode eliminates, and the
+# huge noisy row would destabilise every other share in its group —
+# their acceptance artifacts are the launches / traffic / presence
+# rules below
+SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool",
+                 "_graphkernel")
 
 # per-network graph rows (ISSUE 5): VGG-16 / ResNet-18 stacks. These
 # run few-rep at reduced scale, so their times are NOT share-gated;
@@ -102,6 +116,13 @@ def _network_rows(names) -> list[str]:
     return [n for n in names if n.startswith(NETWORK_PREFIXES)]
 
 
+def _graphkernel_rows(names) -> list[str]:
+    """Graphkernel rows outside the per-network set (e.g. the AlexNet
+    group's row): launch/traffic/presence-gated, never time-gated."""
+    return [n for n in names if n.endswith("_graphkernel")
+            and not n.startswith(NETWORK_PREFIXES)]
+
+
 def _group_sums(recs: dict, names) -> dict:
     sums: dict = {}
     for n in names:
@@ -140,25 +161,43 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20,
             failures.append(
                 f"{name}: {b_cost:.3g} -> {c_cost:.3g} {unit} "
                 f"(+{slowdown * 100:.0f}% > {threshold * 100:.0f}%)")
-    # per-network rows are not time-gated, but once committed they must
-    # keep appearing — a missing row means the bench silently stopped
-    # measuring that network
+    # per-network and graphkernel rows are not time-gated, but once
+    # committed they must keep appearing — a missing row means the
+    # bench silently stopped measuring that network / fused path
     for name in _network_rows(base):
         if name not in cur:
             failures.append(
                 f"{name}: per-network row present in baseline but "
                 f"missing from the current run — the bench stopped "
                 f"measuring this network")
-    # ONE traffic rule for every gated + per-network row: traffic is a
-    # pure function of the plans, so any increase is a planner/lowering
-    # regression, not noise
-    for name in shared + [n for n in _network_rows(base) if n in cur]:
+    for name in _graphkernel_rows(base):
+        if name not in cur:
+            failures.append(
+                f"{name}: graphkernel row present in baseline but "
+                f"missing from the current run — the bench stopped "
+                f"measuring the fused-chain path")
+    # ONE traffic rule for every gated + per-network + graphkernel row:
+    # traffic is a pure function of the plans, so any increase is a
+    # planner/lowering regression, not noise
+    for name in shared \
+            + [n for n in _network_rows(base) if n in cur] \
+            + [n for n in _graphkernel_rows(base) if n in cur]:
         b_traffic = base[name].get("meta", {}).get("dram_traffic_bytes")
         c_traffic = cur[name].get("meta", {}).get("dram_traffic_bytes")
         if b_traffic and c_traffic and c_traffic > b_traffic:
             failures.append(
                 f"{name}: modelled DRAM traffic grew "
                 f"{b_traffic} -> {c_traffic} bytes (plan regression)")
+        # launches-no-growth (ISSUE 6): kernel launch counts are a pure
+        # function of the chain partition / schedule, so a row whose
+        # launch count grew means fusion regressed — a chain split up,
+        # or a fused path silently fell back to per-layer launches
+        b_launch = base[name].get("meta", {}).get("launches")
+        c_launch = cur[name].get("meta", {}).get("launches")
+        if b_launch and c_launch and c_launch > b_launch:
+            failures.append(
+                f"{name}: kernel launches grew {b_launch} -> {c_launch} "
+                f"(chain-fusion regression)")
     # int8 acceptance ratio: the baseline ratio is gated strictly (it is
     # the committed artifact); the current run gets the same relative
     # slack as the share checks

@@ -17,6 +17,10 @@
                        int8 operands, int32 VMEM accumulators, requantize
                        fused into each epilogue, raw int8 activations
                        between layers — same KernelPrograms as fp32
+  streamed-graphkernel whole fused chains of layers — up to the entire
+                       network — as ONE pallas_call (ISSUE 6): a VMEM
+                       activation arena carries every inter-layer
+                       tensor, launches = number of fused chains
 
 The scan/wave rows replay a static schedule from one compiled
 executable — the software analogue of the paper's command decoder — so
@@ -61,6 +65,35 @@ def plan_traffic_bytes(plans) -> int:
     """Decomposition-model DRAM bytes (paper §5 accounting) for a set
     of layer plans."""
     return sum(p.dram_traffic for p in plans)
+
+
+def graphkernel_traffic_bytes(chains, gkps, plans) -> int:
+    """Decomposition-model DRAM bytes for a fused-chain partition.
+
+    Inside a multi-node chain every inter-layer activation lives in the
+    VMEM arena, so the chain's only HBM traffic is the head's padded
+    input, each node's weights, and the tail's output (same fixed-point
+    word size as the per-layer model). Single-node chains fall back to
+    their per-layer plan's accounting. ``plans`` maps conv name -> Plan.
+    """
+    total = 0
+    for c in chains:
+        head = c.convs[0]
+        if head not in gkps:
+            total += plans[head].dram_traffic
+            continue
+        gkp = gkps[head]
+        h0 = gkp.nodes[0].kp
+        bpe = h0.wave.program.layer.bytes_per_elem
+        total += h0.pad_h * h0.pad_w * h0.in_c_kpad * bpe
+        for spec in gkp.nodes:
+            l = spec.kp.wave.program.layer
+            total += l.kernel * l.kernel * (l.in_c // l.groups) \
+                * l.out_c * bpe
+        out = gkp.out_layer
+        kl = gkp.out_kp
+        total += kl.out_h * kl.out_w * out.out_c * bpe
+    return total
 
 
 def _time(fn, *args, reps: int = 3, **kw):
@@ -207,9 +240,33 @@ def _stack_records(reps: int, smoke: bool) -> list[dict]:
     recs.append(_record(
         "streaming_alexnet_megakernel", timings["megakernel"],
         speedup_vs_wave=round(timings["wave"] / timings["megakernel"], 2),
-        pallas_calls=len(programs),
+        pallas_calls=len(programs), launches=len(programs),
         grid_steps=sum(kp.n_tiles * kp.n_chain for kp in kprogs),
         dram_traffic_bytes=mega_traffic, psum_hbm_bytes=0))
+
+    # graphkernel: the whole conv stack fused into ONE pallas_call (a
+    # 16 MB VMEM arena holds every inter-layer activation, so the only
+    # HBM traffic is the input, the flat weights, and the final output)
+    from repro.core.graph import chain_graph, conv_keyed
+    from repro.core.streaming import (compile_graph, graph_chain_programs,
+                                      graph_forward_fn, graph_operands)
+    g = chain_graph(tuple(layers), name="alexnet_bench")
+    gprogs = compile_graph(g, list(plans))
+    gweights = conv_keyed(g, list(weights), "weights")
+    budget_gk = 16 * 2 ** 20           # the 12.4 MB whole-stack arena
+    chains, _, gkps = graph_chain_programs(g, gprogs, budget_gk)
+    fwd_gk = jax.jit(graph_forward_fn(g, gprogs, mode="graphkernel",
+                                      vmem_budget=budget_gk))
+    ops_gk = graph_operands(g, gprogs, mode="graphkernel",
+                            vmem_budget=budget_gk)
+    us_gk, _ = _time(fwd_gk, x, gweights, ops_gk, reps=reps)
+    gk_traffic = graphkernel_traffic_bytes(
+        chains, gkps, dict(zip((l.name for l in layers), plans)))
+    recs.append(_record(
+        "streaming_alexnet_graphkernel", us_gk,
+        speedup_vs_megakernel=round(timings["megakernel"] / us_gk, 2),
+        launches=len(chains), fused_chains=[len(c.convs) for c in chains],
+        dram_traffic_bytes=gk_traffic, psum_hbm_bytes=0))
 
     # int8 megakernel: calibrate on the bench input, then serve the
     # quantized datapath over the SAME kernel programs / operand tables.
@@ -249,7 +306,8 @@ def _network_records(reps: int) -> list[dict]:
     """
     from repro.core.graph import (peak_activation_bytes, residual_fusion)
     from repro.core.model_zoo import resnet18_graph, vgg16_graph
-    from repro.core.streaming import (compile_graph, graph_forward_fn,
+    from repro.core.streaming import (compile_graph, graph_chain_programs,
+                                      graph_forward_fn,
                                       graph_kernel_programs,
                                       graph_operands, plan_graph,
                                       run_graph_streamed)
@@ -269,15 +327,27 @@ def _network_records(reps: int) -> list[dict]:
         mega_traffic = sum(
             kp.wave.program.plan.dram_traffic
             for kp in graph_kernel_programs(g, programs).values())
-        for mode in ("wave", "megakernel"):
+        chains, _, gkps = graph_chain_programs(g, programs)
+        gk_traffic = graphkernel_traffic_bytes(chains, gkps, plans)
+        timings = {}
+        for mode in ("wave", "megakernel", "graphkernel"):
             fwd = jax.jit(graph_forward_fn(g, programs, mode=mode))
             ops = graph_operands(g, programs, mode)
             us, _ = _time(fwd, x, ws, ops, reps=reps)
+            timings[mode] = us
             meta = dict(mode=mode, conv_nodes=len(g.conv_nodes()),
                         scale="64px/w16",
-                        dram_traffic_bytes=(mega_traffic
-                                            if mode == "megakernel"
-                                            else traffic))
+                        dram_traffic_bytes=(
+                            gk_traffic if mode == "graphkernel"
+                            else mega_traffic if mode == "megakernel"
+                            else traffic))
+            if mode == "megakernel":
+                meta["launches"] = len(g.conv_nodes())
+            if mode == "graphkernel":
+                meta["launches"] = len(chains)
+                meta["fused_chains"] = [len(c.convs) for c in chains]
+                meta["speedup_vs_megakernel"] = round(
+                    timings["megakernel"] / us, 2)
             if name == "resnet18":
                 meta["residual_adds_fused"] = \
                     len(residual_fusion(g).fused)

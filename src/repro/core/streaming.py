@@ -73,11 +73,12 @@ from repro.core.decomposition import (ConvLayer, Plan, evaluate,
                                       plan_decomposition, tile_grid)
 from repro.core.graph import (INPUT, NetworkGraph, chain_graph,
                               check_graph_input, conv_keyed,
-                              plan_buffers, residual_fusion,
-                              topological_schedule)
+                              fusible_chains, plan_buffers,
+                              residual_fusion, topological_schedule)
 from repro.core.schedule import (DEFAULT_VMEM_BUDGET as _VMEM_DEFAULT,
-                                 KernelProgram, TileProgram, WaveProgram,
-                                 compile_layer, lower_kernel_program,
+                                 ChainNodeSpec, KernelProgram, TileProgram,
+                                 WaveProgram, compile_layer,
+                                 lower_graph_kernel, lower_kernel_program,
                                  partition_waves)
 
 
@@ -120,10 +121,11 @@ def _normalize_mode(mode: str) -> str:
     ``jit`` and ``scan`` name the same serial scan replay."""
     if mode in ("jit", "scan"):
         return "scan"
-    if mode in ("wave", "interpret", "megakernel"):
+    if mode in ("wave", "interpret", "megakernel", "graphkernel"):
         return mode
     raise ValueError(f"unknown executor mode {mode!r} "
-                     f"(expected megakernel | wave | scan/jit | interpret)")
+                     f"(expected graphkernel | megakernel | wave | "
+                     f"scan/jit | interpret)")
 
 
 def xla_tile_conv_fn(stride: int) -> Callable:
@@ -459,9 +461,36 @@ def run_layer_megakernel(wprog: WaveProgram, x: jax.Array, w: jax.Array,
     """
     l = wprog.program.layer
     _check_input(l, x)
+    wprog = _coarsen_single_wave(wprog, fuse_pool, vmem_budget)
     kprog = _lower_kernel_cached(wprog, relu=relu, fuse_pool=fuse_pool,
                                  vmem_budget=vmem_budget)
     return _run_kernel_program(kprog, x, w, b)
+
+
+def _coarsen_single_wave(wprog: WaveProgram, fuse_pool: bool,
+                         vmem_budget: Optional[int]) -> WaveProgram:
+    """Wave-equivalent coarsening for tiny chains (BENCH regression fix).
+
+    Chain coarsening folds waves per grid step, but a single-wave
+    schedule (``n_waves == 1`` — e.g. AlexNet conv1's 7-tile plan at
+    the 128 KB SRAM point) has nothing to fold, so the megakernel
+    replays every tiny tile as its own grid step and fixed per-step
+    dispatch dominates (megakernel 0.6x of the one-dispatch wave
+    executor). Re-plan the tile grid at the kernel's VMEM budget
+    instead — conv1 becomes a single 1x1-tile grid step, the same
+    one-dispatch shape the wave executor runs — and keep the coarser
+    plan only when it strictly reduces grid steps. Grouped layers keep
+    their schedule (their plans carry group-alignment constraints).
+    """
+    if vmem_budget is None or wprog.n_waves > 1 \
+            or wprog.program.layer.groups > 1:
+        return wprog
+    l = wprog.program.layer
+    plan = plan_for_vmem(l, vmem_budget, fuse_pool, residual=False)
+    coarse = _partition_waves_cached(compile_layer(l, plan))
+    if coarse.n_tiles * coarse.n_waves < wprog.n_tiles * wprog.n_waves:
+        return coarse
+    return wprog
 
 
 def _run_kernel_program(kprog: KernelProgram, x, w, b):
@@ -516,6 +545,7 @@ def run_layer_megakernel_q(wprog: WaveProgram, x: jax.Array, quant,
     """
     l = wprog.program.layer
     _check_input(l, x)
+    wprog = _coarsen_single_wave(wprog, fuse_pool, vmem_budget)
     kprog = _lower_kernel_cached(wprog, relu=relu, fuse_pool=fuse_pool,
                                  vmem_budget=vmem_budget)
     # precision is an explicit key component: the int8 path accepts the
@@ -632,6 +662,10 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
     so signatures and return types match the float executors.
     """
     mode = _normalize_mode(mode)
+    if mode == "graphkernel":
+        # a single layer is a one-node chain: the per-layer launch IS
+        # the graph kernel's fallback for it
+        mode = "megakernel"
     if precision not in ("fp32", "int8"):
         raise ValueError(f"unknown precision {precision!r} "
                          f"(expected fp32 | int8)")
@@ -749,16 +783,60 @@ def graph_kernel_programs(
         for name, p in programs.items())
 
 
+def graph_chain_programs(graph: NetworkGraph, programs,
+                         vmem_budget: Optional[int] = _VMEM_DEFAULT,
+                         quantized: bool = False):
+    """Partition a graph into fused chains and lower each multi-node
+    chain to its whole-chain ``GraphKernelProgram``.
+
+    Returns ``(chains, kprogs, gkps)``: the ``FusedChain`` partition in
+    schedule order, the per-node ``KernelProgram`` map (single-node
+    chains fall back to these per-layer launches), and the
+    ``GraphKernelProgram`` per multi-node chain keyed by its HEAD conv
+    name. Deterministic for a (graph, programs, budget, precision)
+    tuple, so operand tables and the forward fn derive the identical
+    partition independently."""
+    programs = _conv_keyed(graph, programs, "programs")
+    kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+    chains = fusible_chains(graph, kprogs, vmem_budget=vmem_budget,
+                            quantized=quantized)
+    epi = _graph_epilogues(graph)
+    by_name = {n.name: n for n in graph.nodes}
+    gkps = {}
+    for c in chains:
+        if len(c.convs) < 2:
+            continue
+        specs = [ChainNodeSpec(name=name, kp=kprogs[name],
+                               in_value=by_name[name].inputs[0],
+                               out_value=epi[name][2],
+                               residual_value=epi[name][1])
+                 for name in c.convs]
+        gkps[c.convs[0]] = lower_graph_kernel(specs, quantized=quantized)
+    return chains, kprogs, gkps
+
+
 def graph_operands(graph: NetworkGraph, programs, mode: str = "wave",
-                   vmem_budget: Optional[int] = _VMEM_DEFAULT
+                   vmem_budget: Optional[int] = _VMEM_DEFAULT,
+                   precision: str = "fp32"
                    ) -> "OrderedDict[str, jax.Array]":
     """Per-conv-node operand tables matching ``graph_forward_fn``,
     keyed by node name (wave dispatch tables, megakernel SMEM tables,
-    or flat scan step tables)."""
+    whole-chain graphkernel tables keyed by chain head, or flat scan
+    step tables)."""
     mode = _normalize_mode(mode)
     if mode == "interpret":
         raise ValueError("interpret mode has no operand tables")
     programs = _conv_keyed(graph, programs, "programs")
+    if mode == "graphkernel":
+        chains, kprogs, gkps = graph_chain_programs(
+            graph, programs, vmem_budget,
+            quantized=precision == "int8")
+        return OrderedDict(
+            (c.convs[0],
+             jnp.asarray(gkps[c.convs[0]].operand_table()
+                         if c.convs[0] in gkps
+                         else kprogs[c.convs[0]].operand_table()))
+            for c in chains)
     if mode == "megakernel":
         return OrderedDict(
             (name, jnp.asarray(kp.operand_table()))
@@ -819,10 +897,10 @@ def graph_forward_fn(graph: NetworkGraph, programs,
     bplan = plan_buffers(graph)
 
     if precision == "int8":
-        if mode != "megakernel":
+        if mode not in ("megakernel", "graphkernel"):
             raise ValueError(
                 "precision='int8' runs on the quantized megakernel only "
-                "— pass mode='megakernel'")
+                "— pass mode='megakernel' or mode='graphkernel'")
         if qgraph is None:
             raise ValueError(
                 "precision='int8' needs a calibrated QuantizedGraph — "
@@ -830,10 +908,18 @@ def graph_forward_fn(graph: NetworkGraph, programs,
                 "for a linear stack) over a few batches first")
         from repro.core.quantization import (dequantize_int8,
                                              quantize_int8_sym)
+        from repro.kernels.wave_replay_q.graph import wave_replay_graph_q
         from repro.kernels.wave_replay_q.kernel import residual_add_i8
         from repro.kernels.wave_replay_q.ops import wave_replay_q_layer
         epi = _graph_epilogues(graph)
-        kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+        if mode == "graphkernel":
+            chains, kprogs, gkps = graph_chain_programs(
+                graph, programs, vmem_budget, quantized=True)
+            chain_of = {c.convs[0]: c for c in chains}
+            members = {name for c in chains for name in c.convs[1:]}
+        else:
+            kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+            chain_of, members, gkps = {}, set(), {}
         statics = {name: (qgraph.quants[name].pre_shift,
                           qgraph.quants[name].fan_chunk)
                    for name in kprogs}
@@ -848,13 +934,27 @@ def graph_forward_fn(graph: NetworkGraph, programs,
                    else quantize_int8_sym(x, in_scale)}
             for i, n in enumerate(sched):
                 if n.op == "conv":
-                    relu_e, resv, outv = epi[n.name]
-                    wq, bq, m, s = weights[n.name]
-                    ps, fc = statics[n.name]
-                    env[outv] = wave_replay_q_layer(
-                        kprogs[n.name], env[n.inputs[0]], wq, bq, m, s,
-                        pre_shift=ps, fan_chunk=fc, table=ops[n.name],
-                        residual=env[resv] if resv is not None else None)
+                    if n.name in members:
+                        pass                  # runs inside its chain head
+                    elif n.name in gkps:      # multi-node fused chain
+                        c = chain_of[n.name]
+                        env[c.output_value] = wave_replay_graph_q(
+                            gkps[n.name], env[c.input_value],
+                            [weights[m] for m in c.convs],
+                            pre_shifts=[statics[m][0] for m in c.convs],
+                            fan_chunks=[statics[m][1] for m in c.convs],
+                            table=ops[n.name])
+                    else:
+                        relu_e, resv, outv = epi[n.name]
+                        wq, bq, m, s = weights[n.name]
+                        ps, fc = statics[n.name]
+                        env[outv] = wave_replay_q_layer(
+                            kprogs[n.name], env[n.inputs[0]],
+                            wq, bq, m, s,
+                            pre_shift=ps, fan_chunk=fc,
+                            table=ops[n.name],
+                            residual=env[resv] if resv is not None
+                            else None)
                 elif n.name not in fused_adds:
                     env[n.name] = residual_add_i8(
                         env[n.inputs[0]], env[n.inputs[1]], n.relu)
@@ -865,10 +965,18 @@ def graph_forward_fn(graph: NetworkGraph, programs,
 
         return forward_q
 
-    if mode == "megakernel":
+    if mode in ("megakernel", "graphkernel"):
+        from repro.kernels.wave_replay.graph import wave_replay_graph
         from repro.kernels.wave_replay.ops import wave_replay_layer
         epi = _graph_epilogues(graph)
-        kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+        if mode == "graphkernel":
+            chains, kprogs, gkps = graph_chain_programs(
+                graph, programs, vmem_budget, quantized=False)
+            chain_of = {c.convs[0]: c for c in chains}
+            members = {name for c in chains for name in c.convs[1:]}
+        else:
+            kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+            chain_of, members, gkps = {}, set(), {}
         fused_adds = {outv for _, resv, outv in epi.values()
                       if resv is not None}
 
@@ -877,13 +985,22 @@ def graph_forward_fn(graph: NetworkGraph, programs,
             env = {INPUT: x}
             for i, n in enumerate(sched):
                 if n.op == "conv":
-                    relu_e, resv, outv = epi[n.name]
-                    w, b = weights[n.name]
-                    env[outv] = wave_replay_layer(
-                        kprogs[n.name], env[n.inputs[0]], w, b,
-                        table=ops[n.name],
-                        residual=env[resv] if resv is not None else None
-                        ).astype(x.dtype)
+                    if n.name in members:
+                        pass                  # runs inside its chain head
+                    elif n.name in gkps:      # multi-node fused chain
+                        c = chain_of[n.name]
+                        env[c.output_value] = wave_replay_graph(
+                            gkps[n.name], env[c.input_value],
+                            [weights[m] for m in c.convs],
+                            table=ops[n.name]).astype(x.dtype)
+                    else:
+                        relu_e, resv, outv = epi[n.name]
+                        w, b = weights[n.name]
+                        env[outv] = wave_replay_layer(
+                            kprogs[n.name], env[n.inputs[0]], w, b,
+                            table=ops[n.name],
+                            residual=env[resv] if resv is not None
+                            else None).astype(x.dtype)
                 elif n.name not in fused_adds:
                     y = env[n.inputs[0]] + env[n.inputs[1]]
                     env[n.name] = jnp.maximum(y, 0) if n.relu else y
@@ -986,8 +1103,14 @@ def run_graph_streamed(graph: NetworkGraph, plans, x: jax.Array, weights,
     elementwise ops); the compiled modes build one whole-graph
     executable, cached by the graph's **topology key** plus per-node
     schedule geometry — two graphs sharing a layer geometry but wired
-    differently can never collide. ``precision="int8"`` (megakernel
-    only) needs a calibrated ``qgraph`` and ignores ``weights``.
+    differently can never collide. ``precision="int8"`` (megakernel /
+    graphkernel) needs a calibrated ``qgraph`` and ignores ``weights``.
+
+    ``mode="graphkernel"`` partitions the graph into fused chains
+    (``fusible_chains``) and runs each multi-node chain as ONE
+    persistent pallas_call with a VMEM activation arena carrying every
+    inter-layer tensor — zero HBM round-trips inside a chain,
+    O(#chains) launches per forward.
 
     ``liveness=False`` disables the buffer-liveness pass on the eager
     walk (every activation held to the end — the naive per-edge
@@ -1052,7 +1175,7 @@ def run_graph_streamed(graph: NetworkGraph, plans, x: jax.Array, weights,
     fn = _cached_executable(key, lambda: jax.jit(graph_forward_fn(
         graph, programs, conv_fn=conv_fn, conv_backend=conv_backend,
         mode=mode, precision=precision, qgraph=qgraph)))
-    ops = graph_operands(graph, programs, mode)
+    ops = graph_operands(graph, programs, mode, precision=precision)
     if precision == "int8":
         return fn(x, qgraph.device_weights(), ops)
     return fn(x, weights, ops)

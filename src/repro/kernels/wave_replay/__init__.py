@@ -1,5 +1,8 @@
+from repro.kernels.wave_replay.graph import (pack_graph_weights,
+                                             wave_replay_graph,
+                                             wave_replay_graph_raw)
 from repro.kernels.wave_replay.ops import (expand_grouped, launch_count,
-                                           pad_operands,
+                                           pad_input, pad_operands,
                                            reset_launch_count,
                                            wave_replay_layer)
 from repro.kernels.wave_replay.ref import wave_replay_ref

@@ -1,0 +1,268 @@
+"""Whole-graph persistent wave-replay kernel (ISSUE 6 tentpole, fp32).
+
+ONE ``pallas_call`` replays a fused CHAIN of conv nodes: the grid is the
+concatenation of every node's (tile, chain) steps and the SMEM operand
+table (``GraphKernelProgram``, core/schedule.py) grows NODE/K dispatch
+plus flat weight/bias offsets. Inter-layer activations never round-trip
+HBM — each liveness interval owns a VMEM arena slot (``plan_arena``):
+producers write their masked epilogue blocks at the value's layout pad,
+conv consumers window the halo back out of the slot, and residual
+operands read their blocks from the slot that held the shortcut — Du et
+al.'s layer-sequencing controller walking one set of SRAM banks.
+
+Each node's steps replay its per-layer ``KernelProgram`` verbatim (same
+im2col, same accumulation order, same masked epilogue), so a fused
+chain's output is bit-identical to the per-layer megakernel's.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import (GRAPH_OP_COLS, GOP_BOFF, GOP_C0, GOP_IX,
+                                 GOP_IY, GOP_K, GOP_NODE, GOP_OX, GOP_OY,
+                                 GOP_TX, GOP_TY, GOP_VC, GOP_VR, GOP_WOFF,
+                                 GraphKernelProgram)
+from repro.kernels.common import pool_max_subsampled
+from repro.kernels.wave_replay import ops as _ops
+
+
+def _node_step(tbl_ref, x_ref, wf_ref, bf_ref, o_ref, slots, acc_ref,
+               gkp: GraphKernelProgram, ni: int, t):
+    """Replay node ``ni``'s per-layer grid step at flat step ``t``."""
+    spec = gkp.nodes[ni]
+    kp = spec.kp
+    l = kp.wave.program.layer
+    K, stride = l.kernel, l.stride
+    last = ni == len(gkp.nodes) - 1
+    k = tbl_ref[t, GOP_K]
+    ty = tbl_ref[t, GOP_TY]
+    tx = tbl_ref[t, GOP_TX]
+    ah, aw, oc = kp.acc_h, kp.acc_w, kp.out_c_pad
+
+    if not last:
+        osi = gkp.arena.slot_of(spec.out_value)
+
+        # this node's first flat step: clear its output slot so masked
+        # lanes and never-written channels read as the exact zeros the
+        # per-layer path's pad_operands/pad_residual would supply
+        @pl.when(t == gkp.node_steps[ni])
+        def _zero_slot():
+            slots[osi][...] = jnp.zeros_like(slots[osi])
+
+    @pl.when(k == 0)
+    def _init():                      # chain start: zero the psum bank
+        acc_ref[:, :ah, :aw, :oc] = jnp.zeros_like(
+            acc_ref[:, :ah, :aw, :oc])
+
+    if ni == 0 and not gkp.input_in_arena:
+        x = x_ref[...]                # table-steered halo window
+    else:
+        # window the halo straight out of the producer's arena slot:
+        # the node-boundary "reload" is an index, not an HBM round-trip
+        iv = gkp.arena.value(spec.in_value)
+        isi = gkp.arena.slot_of(spec.in_value)
+        iy = iv.pad[0] - l.pad + ty * (kp.blk_h * kp.pool_stride * stride)
+        ix = iv.pad[1] - l.pad + tx * (kp.blk_w * kp.pool_stride * stride)
+        c0 = k * kp.c_width if l.groups == 1 else 0
+        x = slots[isi][:, pl.ds(iy, kp.ih), pl.ds(ix, kp.iw),
+                       pl.ds(c0, kp.c_width)]
+    B, cin = x.shape[0], x.shape[-1]
+    patches = []
+    for ky in range(K):
+        for kx in range(K):
+            patches.append(jax.lax.slice(
+                x, (0, ky, kx, 0),
+                (B, ky + (ah - 1) * stride + 1,
+                 kx + (aw - 1) * stride + 1, cin),
+                (1, stride, stride, 1)))
+    pat = jnp.concatenate(patches, -1).reshape(B * ah * aw, K * K * cin)
+    w = wf_ref[0:gkp.w_chunks[ni]].reshape(K * K * cin, oc)
+    acc_ref[:, :ah, :aw, :oc] += jax.lax.dot_general(
+        pat, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(B, ah, aw, oc)
+
+    @pl.when(k == kp.n_chain - 1)
+    def _epilogue():                  # node boundary: finish in VMEM
+        a = acc_ref[:, :ah, :aw, :oc] + bf_ref[0:oc]
+        if spec.residual_value is not None:
+            rv = gkp.arena.value(spec.residual_value)
+            rsi = gkp.arena.slot_of(spec.residual_value)
+            a = a + slots[rsi][:, pl.ds(rv.pad[0] + ty * kp.blk_h,
+                                        kp.blk_h),
+                               pl.ds(rv.pad[1] + tx * kp.blk_w, kp.blk_w),
+                               0:oc]
+        if kp.relu:
+            a = jnp.maximum(a, 0.0)
+        if kp.fuse_pool:
+            a = pool_max_subsampled(a, pool=kp.pool, stride=kp.pool_stride,
+                                    out_h=kp.blk_h, out_w=kp.blk_w)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (kp.blk_h, kp.blk_w), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (kp.blk_h, kp.blk_w), 1)
+        mask = ((rows < tbl_ref[t, GOP_VR])
+                & (cols < tbl_ref[t, GOP_VC]))[None, :, :, None]
+        val = jnp.where(mask, a, 0.0)
+        if last:
+            o_ref[...] = val
+        else:
+            ov = gkp.arena.value(spec.out_value)
+            wc = min(oc, gkp.arena.slot_shapes[osi][2])
+            slots[osi][:, pl.ds(ov.pad[0] + ty * kp.blk_h, kp.blk_h),
+                       pl.ds(ov.pad[1] + tx * kp.blk_w, kp.blk_w),
+                       0:wc] = val[..., :wc]
+
+
+def _graph_replay_kernel(tbl_ref, x_ref, wf_ref, bf_ref, o_ref, *scratch,
+                         gkp: GraphKernelProgram):
+    """One fused grid step: the table's NODE column picks which node's
+    per-layer step body runs; everything else is baked in statically."""
+    n_slots = len(gkp.arena.slot_shapes)
+    slots, acc_ref = scratch[:n_slots], scratch[n_slots]
+    t = pl.program_id(0)
+    if gkp.input_in_arena:
+        # the chain input has in-chain consumers beyond the head conv
+        # (e.g. a shortcut): stage the whole padded input into its slot
+        iv = gkp.arena.value(gkp.input_value)
+        isi = gkp.arena.slot_of(gkp.input_value)
+        h0 = gkp.nodes[0].kp
+        pad0 = gkp.nodes[0].kp.wave.program.layer.pad
+        dy, dx = iv.pad[0] - pad0, iv.pad[1] - pad0
+
+        @pl.when(t == 0)
+        def _stage_input():
+            slots[isi][...] = jnp.zeros_like(slots[isi])
+            slots[isi][:, dy:dy + h0.pad_h, dx:dx + h0.pad_w,
+                       0:h0.in_c_kpad] = x_ref[...]
+    nd = tbl_ref[t, GOP_NODE]
+    for ni in range(len(gkp.nodes)):
+        @pl.when(nd == ni)
+        def _run(ni=ni):
+            _node_step(tbl_ref, x_ref, wf_ref, bf_ref, o_ref, slots,
+                       acc_ref, gkp, ni, t)
+
+
+def wave_replay_graph_raw(gkp: GraphKernelProgram, x: jax.Array,
+                          wf: jax.Array, bf: jax.Array, table: jax.Array,
+                          interpret: bool | None = None) -> jax.Array:
+    """Launch one fused chain as ONE persistent pallas_call.
+
+    ``x`` is the chain input pre-padded to the head program's buffer
+    geometry; ``wf``/``bf`` are the flat (w_total,)/(b_total,) fp32
+    weight and bias buffers laid out at the program's offsets; ``table``
+    the (total_steps, 14) int32 operand table. Returns the final node's
+    padded (B, out_h_pad, out_w_pad, out_c_pad) fp32 output.
+    """
+    if interpret is None:
+        from repro.kernels.common import pallas_interpret_default
+        interpret = pallas_interpret_default()
+    h0, kl = gkp.nodes[0].kp, gkp.out_kp
+    B = x.shape[0]
+    if x.shape != (B, h0.pad_h, h0.pad_w, h0.in_c_kpad):
+        raise ValueError(
+            f"graph kernel input {x.shape} != padded "
+            f"({B}, {h0.pad_h}, {h0.pad_w}, {h0.in_c_kpad})")
+    if wf.shape != (gkp.w_total,):
+        raise ValueError(f"flat weights {wf.shape} != ({gkp.w_total},)")
+    if bf.shape != (gkp.b_total,):
+        raise ValueError(f"flat bias {bf.shape} != ({gkp.b_total},)")
+    if table.shape != (gkp.total_steps, GRAPH_OP_COLS):
+        raise ValueError(
+            f"graph table {table.shape} != "
+            f"({gkp.total_steps}, {GRAPH_OP_COLS})")
+
+    if gkp.input_in_arena:
+        x_spec = pl.BlockSpec((B, h0.pad_h, h0.pad_w, h0.in_c_kpad),
+                              lambda t, tbl: (0, 0, 0, 0))
+    else:
+        x_spec = pl.BlockSpec(
+            (B, h0.ih, h0.iw, h0.c_width),
+            lambda t, tbl: (0, tbl[t, GOP_IY], tbl[t, GOP_IX],
+                            tbl[t, GOP_C0]),
+            indexing_mode=pl.unblocked)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,        # the SMEM operand table
+        grid=(gkp.total_steps,),
+        in_specs=[
+            x_spec,
+            # per-step windows into the flat chain buffers: VMEM holds
+            # one step's slice, never the whole chain's weights
+            pl.BlockSpec((gkp.w_max,),
+                         lambda t, tbl: (tbl[t, GOP_WOFF],),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((gkp.b_max,),
+                         lambda t, tbl: (tbl[t, GOP_BOFF],),
+                         indexing_mode=pl.unblocked),
+        ],
+        out_specs=pl.BlockSpec(
+            (B, kl.blk_h, kl.blk_w, kl.out_c_pad),
+            lambda t, tbl: (0, tbl[t, GOP_OY], tbl[t, GOP_OX], 0)),
+        # the activation arena + one shared psum bank
+        scratch_shapes=[pltpu.VMEM((B,) + s, jnp.float32)
+                        for s in gkp.arena.slot_shapes]
+        + [pltpu.VMEM((B,) + gkp.acc_shape(), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_graph_replay_kernel, gkp=gkp),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, kl.out_h_pad, kl.out_w_pad, kl.out_c_pad), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(table, x, wf, bf)
+
+
+def pack_graph_weights(gkp: GraphKernelProgram, weights):
+    """(w, b) per chain node -> flat (w_total,)/(b_total,) fp32 buffers.
+
+    Per node: grouped weights expand block-diagonally, pad to the
+    kernel geometry, then each chain step's fan slice flattens to a
+    contiguous chunk at the program's WOFF — exactly what the per-step
+    window DMA expects.
+    """
+    if len(weights) != len(gkp.nodes):
+        raise ValueError(f"{len(weights)} weight pairs for "
+                         f"{len(gkp.nodes)} chain nodes")
+    chunks, bvecs = [], []
+    for spec, (w, b) in zip(gkp.nodes, weights):
+        kp = spec.kp
+        g = kp.wave.program
+        l = g.layer
+        wd = _ops.expand_grouped(w.astype(jnp.float32), kp.groups)
+        wp = jnp.pad(wd, ((0, 0), (0, 0),
+                          (0, kp.w_in_kpad - wd.shape[2]),
+                          (0, g.out_c_pad - l.out_c)))
+        for kk in range(kp.n_chain):
+            chunks.append(
+                wp[:, :, kk * kp.fan_width:(kk + 1) * kp.fan_width, :]
+                .reshape(-1))
+        bias = jnp.zeros((g.out_c_pad,), jnp.float32)
+        if b is not None:
+            bias = bias.at[:l.out_c].set(b.astype(jnp.float32))
+        bvecs.append(bias)
+    flat_w = jnp.concatenate(chunks)
+    flat_b = jnp.concatenate(bvecs)
+    return (jnp.pad(flat_w, (0, gkp.w_total - flat_w.shape[0])),
+            jnp.pad(flat_b, (0, gkp.b_total - flat_b.shape[0])))
+
+
+def wave_replay_graph(gkp: GraphKernelProgram, x: jax.Array, weights,
+                      table: jax.Array | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Execute a fused conv chain as ONE persistent pallas_call.
+
+    ``x`` (B, in_h, in_w, in_c) is the chain input's natural activation;
+    ``weights`` is a (w, b) pair per chain node in chain order. Returns
+    the final node's valid (B, out_h, out_w, out_c) fp32 output —
+    identical to running the per-layer megakernel node by node.
+    """
+    _ops._LAUNCHES += 1               # one launch for the whole chain
+    if table is None:
+        table = jnp.asarray(gkp.operand_table())
+    xp = _ops.pad_input(gkp.nodes[0].kp, x)
+    wf, bf = pack_graph_weights(gkp, weights)
+    y = wave_replay_graph_raw(gkp, xp, wf, bf, table, interpret=interpret)
+    kl = gkp.out_kp
+    return y[:, :kl.out_h, :kl.out_w, :gkp.out_layer.out_c]

@@ -48,22 +48,34 @@ def expand_grouped(w: jax.Array, groups: int) -> jax.Array:
     return jnp.concatenate(rows, axis=2)
 
 
+def pad_input(kp: KernelProgram, x: jax.Array) -> jax.Array:
+    """Pad an input activation to the program's buffer geometry.
+
+    Conv padding goes top/left; the tile grid's trailing zeros (or trim,
+    when the conv window never reaches the last rows) complete ``pad_h``
+    x ``pad_w``; channels round up to whole chunks. Shared by the
+    per-layer launch and the graph kernel's chain-input staging so both
+    see bit-identical buffers.
+    """
+    l = kp.wave.program.layer
+    return jnp.pad(x, ((0, 0),
+                       (l.pad, max(0, kp.pad_h - l.in_h - l.pad)),
+                       (l.pad, max(0, kp.pad_w - l.in_w - l.pad)),
+                       (0, kp.in_c_kpad - x.shape[-1])
+                       ))[:, :kp.pad_h, :kp.pad_w]
+
+
 def pad_operands(kp: KernelProgram, x: jax.Array, w: jax.Array,
                  b: jax.Array | None):
     """Pad (x, w, b) to the megakernel's static buffer geometry.
 
-    Conv padding goes top/left; the tile grid's trailing zeros (or trim,
-    when the conv window never reaches the last rows) complete ``pad_h``
-    x ``pad_w``; channels round up to whole chunks; grouped weights are
-    expanded block-diagonally (``expand_grouped``). All padding is
-    zeros, which add exact 0.0 into every accumulation.
+    Input via ``pad_input``; grouped weights are expanded
+    block-diagonally (``expand_grouped``). All padding is zeros, which
+    add exact 0.0 into every accumulation.
     """
     g = kp.wave.program
     l = g.layer
-    xp = jnp.pad(x, ((0, 0),
-                     (l.pad, max(0, kp.pad_h - l.in_h - l.pad)),
-                     (l.pad, max(0, kp.pad_w - l.in_w - l.pad)),
-                     (0, kp.in_c_kpad - l.in_c)))[:, :kp.pad_h, :kp.pad_w]
+    xp = pad_input(kp, x)
     wd = expand_grouped(w, kp.groups)
     wp = jnp.pad(wd, ((0, 0), (0, 0),
                       (0, kp.w_in_kpad - wd.shape[2]),

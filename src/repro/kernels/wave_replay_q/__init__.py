@@ -1,3 +1,6 @@
+from repro.kernels.wave_replay_q.graph import (pack_graph_operands_q,
+                                               wave_replay_graph_q,
+                                               wave_replay_graph_q_raw)
 from repro.kernels.wave_replay_q.kernel import (exact_channel_chunk,
                                                 q_weight_fan,
                                                 q_weight_full_fan,

@@ -1,0 +1,357 @@
+"""Whole-graph persistent int8 wave-replay kernel (ISSUE 6, int8 twin).
+
+The quantized sibling of ``kernels/wave_replay/graph.py``: ONE
+``pallas_call`` replays a fused chain of conv nodes with the int8
+datapath — int8 activation arena slots, the shared int32 psum bank for
+multi-step nodes (single-step nodes bypass it, exactly like the
+per-layer kernel), exact-fp32 sub-gemms, and the requantize-on-writeback
+epilogue whose residual add reads the shortcut's int8 slot at the
+calibrated output scale. Integer arithmetic is associative, so a fused
+chain's output is bit-identical to the per-layer int8 megakernel and to
+the int32 reference model.
+
+Requant vectors ride alongside the flat bias buffer: three int32 flat
+operands (bias, m, shift) share the table's BOFF offsets, padded
+channels carrying m=0 / shift=31 so their lanes requantize to exact 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import requantize_i32
+from repro.core.schedule import (GRAPH_OP_COLS, GOP_BOFF, GOP_C0, GOP_IX,
+                                 GOP_IY, GOP_K, GOP_NODE, GOP_OX, GOP_OY,
+                                 GOP_TX, GOP_TY, GOP_VC, GOP_VR, GOP_WOFF,
+                                 GraphKernelProgram)
+from repro.kernels.common import pool_max_subsampled
+from repro.kernels.wave_replay.ops import pad_input
+from repro.kernels.wave_replay_q import ops as _ops
+from repro.kernels.wave_replay_q.kernel import (exact_channel_chunk,
+                                                q_weight_fan,
+                                                q_weight_full_fan,
+                                                residual_add_i8)
+
+
+def _q_node_step(tbl_ref, x_ref, wf_ref, bf_ref, mf_ref, sf_ref, o_ref,
+                 slots, acc_ref, gkp: GraphKernelProgram, ni: int,
+                 pre_shift: int, c_sub: int, t):
+    """Replay node ``ni``'s int8 per-layer grid step at flat step ``t``."""
+    spec = gkp.nodes[ni]
+    kp = spec.kp
+    l = kp.wave.program.layer
+    K, stride, groups = l.kernel, l.stride, l.groups
+    last = ni == len(gkp.nodes) - 1
+    k = tbl_ref[t, GOP_K]
+    ty = tbl_ref[t, GOP_TY]
+    tx = tbl_ref[t, GOP_TX]
+    ah, aw, oc = kp.acc_h, kp.acc_w, kp.out_c_pad
+    single = kp.n_chain == 1
+    step_in_c = l.in_c // groups if groups > 1 else kp.c_width
+    masked = kp.out_h_pad != kp.out_h or kp.out_w_pad != kp.out_w
+
+    if not last:
+        osi = gkp.arena.slot_of(spec.out_value)
+
+        @pl.when(t == gkp.node_steps[ni])
+        def _zero_slot():
+            slots[osi][...] = jnp.zeros_like(slots[osi])
+
+    if not single:
+        @pl.when(k == 0)
+        def _init():              # chain start: zero the int32 psum bank
+            acc_ref[:, :ah, :aw, :oc] = jnp.zeros_like(
+                acc_ref[:, :ah, :aw, :oc])
+
+    if ni == 0 and not gkp.input_in_arena:
+        x = x_ref[...]
+    else:
+        iv = gkp.arena.value(spec.in_value)
+        isi = gkp.arena.slot_of(spec.in_value)
+        iy = iv.pad[0] - l.pad + ty * (kp.blk_h * kp.pool_stride * stride)
+        ix = iv.pad[1] - l.pad + tx * (kp.blk_w * kp.pool_stride * stride)
+        c0 = k * kp.c_width if groups == 1 else 0
+        x = slots[isi][:, pl.ds(iy, kp.ih), pl.ds(ix, kp.iw),
+                       pl.ds(c0, kp.c_width)]
+    w = wf_ref[0:gkp.w_chunks[ni]].reshape(
+        K, K, q_weight_fan(kp), oc)
+    B = x.shape[0]
+    opg = oc // groups
+
+    group_cols = []
+    for g in range(groups):                       # static per-group gemms
+        acc_g = None
+        for cc0 in range(0, step_in_c, c_sub):    # static exact-fan chunks
+            cc1 = min(cc0 + c_sub, step_in_c)
+            cw = cc1 - cc0
+            xs = jax.lax.slice_in_dim(x, g * step_in_c + cc0,
+                                      g * step_in_c + cc1, axis=3)
+            rows = jnp.concatenate([
+                jax.lax.slice(
+                    xs, (0, ky, 0, 0),
+                    (B, ky + (ah - 1) * stride + 1, xs.shape[2], cw),
+                    (1, stride, 1, 1))
+                for ky in range(K)], -1)
+            pat = jnp.concatenate([
+                jax.lax.slice(
+                    rows, (0, 0, kx, 0),
+                    (B, ah, kx + (aw - 1) * stride + 1, K * cw),
+                    (1, 1, stride, 1))
+                for kx in range(K)], -1)
+            pat = pat.reshape(B * ah * aw, K * K * cw).astype(jnp.float32)
+            wf = jax.lax.slice(w, (0, 0, cc0, g * opg),
+                               (K, K, cc1, (g + 1) * opg))
+            wf = wf.transpose(1, 0, 2, 3).reshape(
+                K * K * cw, opg).astype(jnp.float32)
+            part = jax.lax.dot_general(
+                pat, wf, (((1,), (0,)), ((), ())),
+                precision=jax.lax.Precision.HIGHEST,
+                preferred_element_type=jnp.float32).astype(jnp.int32)
+            acc_g = part if acc_g is None else acc_g + part
+        group_cols.append(acc_g)
+    step = group_cols[0] if groups == 1 \
+        else jnp.concatenate(group_cols, -1)
+    step = step.reshape(B, ah, aw, oc)
+
+    def _finish(a):               # requantize-on-writeback, all in VMEM
+        a = a + bf_ref[0:oc]
+        residual = spec.residual_value is not None
+        q = requantize_i32(a, mf_ref[0:oc], sf_ref[0:oc], pre_shift,
+                           relu=kp.relu and not residual)
+        if residual:
+            rv = gkp.arena.value(spec.residual_value)
+            rsi = gkp.arena.slot_of(spec.residual_value)
+            r = slots[rsi][:, pl.ds(rv.pad[0] + ty * kp.blk_h, kp.blk_h),
+                           pl.ds(rv.pad[1] + tx * kp.blk_w, kp.blk_w),
+                           0:oc]
+            q = residual_add_i8(q, r, kp.relu)
+        if kp.fuse_pool:
+            q = pool_max_subsampled(q, pool=kp.pool, stride=kp.pool_stride,
+                                    out_h=kp.blk_h, out_w=kp.blk_w)
+        if masked:
+            rows2 = jax.lax.broadcasted_iota(jnp.int32,
+                                             (kp.blk_h, kp.blk_w), 0)
+            cols2 = jax.lax.broadcasted_iota(jnp.int32,
+                                             (kp.blk_h, kp.blk_w), 1)
+            mask = ((rows2 < tbl_ref[t, GOP_VR])
+                    & (cols2 < tbl_ref[t, GOP_VC]))[None, :, :, None]
+            q = jnp.where(mask, q, jnp.zeros_like(q))
+        if last:
+            o_ref[...] = q
+        else:
+            ov = gkp.arena.value(spec.out_value)
+            wc = min(oc, gkp.arena.slot_shapes[osi][2])
+            slots[osi][:, pl.ds(ov.pad[0] + ty * kp.blk_h, kp.blk_h),
+                       pl.ds(ov.pad[1] + tx * kp.blk_w, kp.blk_w),
+                       0:wc] = q[..., :wc]
+
+    if single:
+        _finish(step)             # psums never touch the scratch bank
+    else:
+        acc_ref[:, :ah, :aw, :oc] += step
+
+        @pl.when(k == kp.n_chain - 1)
+        def _epilogue():
+            _finish(acc_ref[:, :ah, :aw, :oc])
+
+
+def _graph_replay_q_kernel(tbl_ref, x_ref, wf_ref, bf_ref, mf_ref,
+                           sf_ref, o_ref, *scratch,
+                           gkp: GraphKernelProgram, pre_shifts, c_subs):
+    n_slots = len(gkp.arena.slot_shapes)
+    slots, acc_ref = scratch[:n_slots], scratch[n_slots]
+    t = pl.program_id(0)
+    if gkp.input_in_arena:
+        iv = gkp.arena.value(gkp.input_value)
+        isi = gkp.arena.slot_of(gkp.input_value)
+        h0 = gkp.nodes[0].kp
+        pad0 = gkp.nodes[0].kp.wave.program.layer.pad
+        dy, dx = iv.pad[0] - pad0, iv.pad[1] - pad0
+
+        @pl.when(t == 0)
+        def _stage_input():
+            slots[isi][...] = jnp.zeros_like(slots[isi])
+            slots[isi][:, dy:dy + h0.pad_h, dx:dx + h0.pad_w,
+                       0:h0.in_c_kpad] = x_ref[...]
+    nd = tbl_ref[t, GOP_NODE]
+    for ni in range(len(gkp.nodes)):
+        @pl.when(nd == ni)
+        def _run(ni=ni):
+            _q_node_step(tbl_ref, x_ref, wf_ref, bf_ref, mf_ref, sf_ref,
+                         o_ref, slots, acc_ref, gkp, ni,
+                         pre_shifts[ni], c_subs[ni], t)
+
+
+def wave_replay_graph_q_raw(gkp: GraphKernelProgram, xq: jax.Array,
+                            wf: jax.Array, bf: jax.Array, mf: jax.Array,
+                            sf: jax.Array, table: jax.Array, *,
+                            pre_shifts, fan_chunks,
+                            interpret: bool | None = None) -> jax.Array:
+    """Launch one fused int8 chain as ONE persistent pallas_call.
+
+    ``xq`` int8 pre-padded to the head program's buffer geometry;
+    ``wf`` flat (w_total,) int8 weights; ``bf``/``mf``/``sf`` flat
+    (b_total,) int32 bias/requant-multiplier/shift buffers sharing the
+    BOFF offsets; ``pre_shifts``/``fan_chunks`` one entry per chain
+    node (``LayerQuant`` statics). Returns the final node's padded int8
+    output.
+    """
+    if interpret is None:
+        from repro.kernels.common import pallas_interpret_default
+        interpret = pallas_interpret_default()
+    if not gkp.quantized:
+        raise ValueError("int8 graph kernel wants a program lowered "
+                         "with quantized=True (flat weight offsets use "
+                         "the natural grouped layout)")
+    h0, kl = gkp.nodes[0].kp, gkp.out_kp
+    B = xq.shape[0]
+    for spec in gkp.nodes:
+        kp = spec.kp
+        g = kp.wave.program
+        l = g.layer
+        if l.groups > 1 and (kp.n_chain != 1 or g.out_c_pad != l.out_c):
+            raise ValueError(
+                f"{l.name}: grouped int8 kernel expects a single-step "
+                f"chain over the full out_c (got n_chain={kp.n_chain}, "
+                f"out_c_pad={g.out_c_pad})")
+    if xq.dtype != jnp.int8 or wf.dtype != jnp.int8:
+        raise ValueError(f"int8 graph kernel operands must be int8 "
+                         f"(got x {xq.dtype}, w {wf.dtype})")
+    if xq.shape != (B, h0.pad_h, h0.pad_w, h0.in_c_kpad):
+        raise ValueError(
+            f"int8 graph kernel input {xq.shape} != padded "
+            f"({B}, {h0.pad_h}, {h0.pad_w}, {h0.in_c_kpad})")
+    if wf.shape != (gkp.w_total,):
+        raise ValueError(f"flat weights {wf.shape} != ({gkp.w_total},)")
+    for name, arr in (("bias_q", bf), ("m", mf), ("shift", sf)):
+        if arr.shape != (gkp.b_total,) or arr.dtype != jnp.int32:
+            raise ValueError(f"{name} must be int32 ({gkp.b_total},), "
+                             f"got {arr.dtype} {arr.shape}")
+    if table.shape != (gkp.total_steps, GRAPH_OP_COLS):
+        raise ValueError(
+            f"graph table {table.shape} != "
+            f"({gkp.total_steps}, {GRAPH_OP_COLS})")
+    if len(pre_shifts) != len(gkp.nodes) \
+            or len(fan_chunks) != len(gkp.nodes):
+        raise ValueError("pre_shifts/fan_chunks must have one entry "
+                         "per chain node")
+
+    c_subs = []
+    for spec, fc in zip(gkp.nodes, fan_chunks):
+        l = spec.kp.wave.program.layer
+        step_in_c = l.in_c // l.groups if l.groups > 1 \
+            else spec.kp.c_width
+        c_subs.append(exact_channel_chunk(l.kernel) if fc is None
+                      else max(1, min(int(fc), step_in_c)))
+
+    if gkp.input_in_arena:
+        x_spec = pl.BlockSpec((B, h0.pad_h, h0.pad_w, h0.in_c_kpad),
+                              lambda t, tbl: (0, 0, 0, 0))
+    else:
+        x_spec = pl.BlockSpec(
+            (B, h0.ih, h0.iw, h0.c_width),
+            lambda t, tbl: (0, tbl[t, GOP_IY], tbl[t, GOP_IX],
+                            tbl[t, GOP_C0]),
+            indexing_mode=pl.unblocked)
+    woff_spec = pl.BlockSpec((gkp.w_max,),
+                             lambda t, tbl: (tbl[t, GOP_WOFF],),
+                             indexing_mode=pl.unblocked)
+    boff_spec = pl.BlockSpec((gkp.b_max,),
+                             lambda t, tbl: (tbl[t, GOP_BOFF],),
+                             indexing_mode=pl.unblocked)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(gkp.total_steps,),
+        in_specs=[x_spec, woff_spec, boff_spec, boff_spec, boff_spec],
+        out_specs=pl.BlockSpec(
+            (B, kl.blk_h, kl.blk_w, kl.out_c_pad),
+            lambda t, tbl: (0, tbl[t, GOP_OY], tbl[t, GOP_OX], 0)),
+        # int8 activation arena + the shared int32 psum bank (token
+        # buffer when every node is single-step)
+        scratch_shapes=[pltpu.VMEM((B,) + s, jnp.int8)
+                        for s in gkp.arena.slot_shapes]
+        + [pltpu.VMEM(
+            (B,) + gkp.acc_shape(multi_only=True)
+            if any(s.kp.n_chain > 1 for s in gkp.nodes)
+            else (1, 1, 1, 1), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_graph_replay_q_kernel, gkp=gkp,
+                          pre_shifts=tuple(pre_shifts),
+                          c_subs=tuple(c_subs)),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, kl.out_h_pad, kl.out_w_pad, kl.out_c_pad), jnp.int8),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(table, xq, wf, bf, mf, sf)
+
+
+def pack_graph_operands_q(gkp: GraphKernelProgram, qops):
+    """(wq, bq, m, shift) per chain node -> flat int8/int32 buffers.
+
+    Weights keep the per-layer kernel's layout: natural per-group fan
+    for grouped nodes (whole tensor = the single step's chunk), chain
+    chunk fan slices for ungrouped ones. Padded output channels carry
+    m=0 / shift=31 so their requantized lanes are exact zeros — same as
+    ``pad_operands_q``.
+    """
+    if len(qops) != len(gkp.nodes):
+        raise ValueError(f"{len(qops)} quantized operand tuples for "
+                         f"{len(gkp.nodes)} chain nodes")
+    chunks, bvecs, mvecs, svecs = [], [], [], []
+    for spec, (wq, bq, m, shift) in zip(gkp.nodes, qops):
+        kp = spec.kp
+        g = kp.wave.program
+        l = g.layer
+        wp = jnp.pad(wq, ((0, 0), (0, 0),
+                          (0, q_weight_full_fan(kp) - wq.shape[2]),
+                          (0, g.out_c_pad - l.out_c)))
+        if l.groups > 1:
+            chunks.append(wp.reshape(-1))
+        else:
+            for kk in range(kp.n_chain):
+                chunks.append(
+                    wp[:, :, kk * kp.fan_width:(kk + 1) * kp.fan_width, :]
+                    .reshape(-1))
+        pad_c = g.out_c_pad - l.out_c
+        bvecs.append(jnp.pad(bq.astype(jnp.int32), (0, pad_c)))
+        mvecs.append(jnp.pad(m.astype(jnp.int32), (0, pad_c)))
+        svecs.append(jnp.pad(shift.astype(jnp.int32), (0, pad_c),
+                             constant_values=31))
+    flat_w = jnp.concatenate(chunks)
+    flat_b = jnp.concatenate(bvecs)
+    flat_m = jnp.concatenate(mvecs)
+    flat_s = jnp.concatenate(svecs)
+    pad_b = gkp.b_total - flat_b.shape[0]
+    return (jnp.pad(flat_w, (0, gkp.w_total - flat_w.shape[0])),
+            jnp.pad(flat_b, (0, pad_b)), jnp.pad(flat_m, (0, pad_b)),
+            jnp.pad(flat_s, (0, pad_b), constant_values=31))
+
+
+def wave_replay_graph_q(gkp: GraphKernelProgram, xq: jax.Array, qops,
+                        *, pre_shifts, fan_chunks,
+                        table: jax.Array | None = None,
+                        interpret: bool | None = None) -> jax.Array:
+    """Execute a fused int8 conv chain as ONE persistent pallas_call.
+
+    ``xq`` (B, in_h, in_w, in_c) int8 at the head's calibrated input
+    scale; ``qops`` one (wq, bq, m, shift) tuple per chain node;
+    ``pre_shifts``/``fan_chunks`` the matching ``LayerQuant`` statics.
+    Returns the final node's valid int8 output — bit-identical to the
+    per-layer int8 megakernel run node by node.
+    """
+    _ops._LAUNCHES += 1               # one launch for the whole chain
+    if table is None:
+        table = jnp.asarray(gkp.operand_table())
+    xp = pad_input(gkp.nodes[0].kp, xq)
+    wf, bf, mf, sf = pack_graph_operands_q(gkp, qops)
+    y = wave_replay_graph_q_raw(gkp, xp, wf, bf, mf, sf, table,
+                                pre_shifts=pre_shifts,
+                                fan_chunks=fan_chunks,
+                                interpret=interpret)
+    kl = gkp.out_kp
+    return y[:, :kl.out_h, :kl.out_w, :gkp.out_layer.out_c]

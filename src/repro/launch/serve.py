@@ -49,7 +49,7 @@ def cnn_main(args):
     H, W, C = graph.in_shape
     if args.precision == "int8":
         from repro.quant import calibrate_graph
-        if mode != "megakernel":
+        if mode not in ("megakernel", "graphkernel"):
             print("--precision int8 runs the quantized megakernel; "
                   f"overriding --mode {mode}")
             mode = "megakernel"
@@ -98,13 +98,16 @@ def main():
                     help="number of single-image requests (--cnn)")
     ap.add_argument("--sram-kb", type=int, default=128,
                     help="planner buffer budget in KiB (--cnn)")
-    ap.add_argument("--mode", choices=("wave", "scan", "megakernel"),
+    ap.add_argument("--mode", choices=("wave", "scan", "megakernel",
+                                       "graphkernel"),
                     default="wave",
                     help="streaming executor: wave-parallel fused "
-                         "dispatches (default), serial scan replay, or "
+                         "dispatches (default), serial scan replay, "
                          "one persistent Pallas megakernel per layer "
                          "(partial sums stay in VMEM; bias+ReLU+pool "
-                         "fused in the kernel epilogue)")
+                         "fused in the kernel epilogue), or the "
+                         "whole-graph kernel (fused layer chains share "
+                         "one pallas_call and a VMEM activation arena)")
     ap.add_argument("--pool-backend", choices=("xla", "fused"),
                     default="xla",
                     help="CONV+POOL layers: XLA maxpool after the "

@@ -50,7 +50,9 @@ class StreamingSession:
     wave of the schedule is one fused dispatch), ``"megakernel"`` (one
     persistent Pallas kernel per conv node; bias+ReLU+pool AND residual
     adds fused in the kernel epilogue, so ``pool_backend`` is ignored),
-    or ``"scan"`` (serial step replay). ``pool_backend="fused"`` serves
+    ``"graphkernel"`` (fused chains of conv nodes share ONE persistent
+    kernel and a VMEM activation arena — O(#chains) launches), or
+    ``"scan"`` (serial step replay). ``pool_backend="fused"`` serves
     CONV+POOL nodes through the Pallas fused conv+ReLU+pool kernel.
 
     ``donate`` (default True) donates the input batch buffer to the
@@ -120,7 +122,8 @@ class StreamingSession:
                     "the float (w, b) pairs")
             self.weights = self._conv_dict(weights, "weights")
         self.qnet = qnet
-        self._ops = graph_operands(graph, self._progs, mode)
+        self._ops = graph_operands(graph, self._progs, mode,
+                                   precision=precision)
         self._forward = graph_forward_fn(graph, self._progs, conv_fn,
                                          conv_backend, mode=mode,
                                          pool_backend=pool_backend,

@@ -16,16 +16,15 @@ from repro.core.model_zoo import resnet18_graph, vgg16_graph
 
 try:
     import hypothesis
-    import hypothesis.strategies as st
+    from strategies import _conv, residual_graphs
 except ImportError:  # dev-only dependency (requirements.txt)
     hypothesis = None
 
-
-def _conv(name, h, c_in, c_out, inputs, stride=1, relu=True, pool=1):
-    return GraphNode(name, "conv", inputs,
-                     layer=ConvLayer(name, h, h, c_in, c_out, 3,
-                                     stride=stride, pad=1, pool=pool),
-                     relu=relu)
+    def _conv(name, h, c_in, c_out, inputs, stride=1, relu=True, pool=1):
+        return GraphNode(name, "conv", inputs,
+                         layer=ConvLayer(name, h, h, c_in, c_out, 3,
+                                         stride=stride, pad=1, pool=pool),
+                         relu=relu)
 
 
 def _block_graph():
@@ -248,40 +247,6 @@ def test_topology_key_distinguishes_same_geometry_graphs():
 # ---------------------------------------------------------------------------
 
 if hypothesis is not None:
-    @st.composite
-    def residual_graphs(draw):
-        """Random-but-valid residual networks: a stem then 1-4 blocks,
-        each with random width/stride/shortcut/ReLU choices."""
-        h = draw(st.sampled_from([8, 12, 16]))
-        c = draw(st.integers(2, 6))
-        width = draw(st.integers(2, 6))
-        nodes = [_conv("stem", h, c, width, (INPUT,))]
-        prev, c_in = "stem", width
-        for bi in range(draw(st.integers(1, 4))):
-            stride = draw(st.sampled_from([1, 2])) if h >= 4 else 1
-            c_out = c_in if stride == 1 else 2 * c_in
-            ho = (h + 2 - 3) // stride + 1
-            relu_c2 = draw(st.booleans())
-            nodes.append(_conv(f"b{bi}_c1", h, c_in, c_out, (prev,),
-                               stride=stride))
-            nodes.append(_conv(f"b{bi}_c2", ho, c_out, c_out,
-                               (f"b{bi}_c1",), relu=relu_c2))
-            if stride != 1 or c_in != c_out:
-                nodes.append(GraphNode(
-                    f"b{bi}_proj", "conv", (prev,),
-                    layer=ConvLayer(f"b{bi}_proj", h, h, c_in, c_out, 1,
-                                    stride=stride), relu=False))
-                short = f"b{bi}_proj"
-            else:
-                short = prev
-            nodes.append(GraphNode(f"b{bi}_add", "add",
-                                   (f"b{bi}_c2", short),
-                                   relu=draw(st.booleans())))
-            prev, c_in, h = f"b{bi}_add", c_out, ho
-        return NetworkGraph("rand", (nodes[0].layer.in_h,
-                                     nodes[0].layer.in_w, c),
-                            tuple(nodes), prev)
-
     @hypothesis.given(residual_graphs())
     @hypothesis.settings(max_examples=40, deadline=None)
     def test_random_graph_schedule_and_shapes(g):

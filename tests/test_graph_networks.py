@@ -51,7 +51,7 @@ def _rel_err(got, ref):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("mode", ["interpret", "scan", "wave",
-                                  "megakernel"])
+                                  "megakernel", "graphkernel"])
 def test_resnet18_all_modes_match_direct(tiny_resnet, mode):
     g, plans, ws, x = tiny_resnet
     ref = apply_graph(g, ws, x)
@@ -61,7 +61,7 @@ def test_resnet18_all_modes_match_direct(tiny_resnet, mode):
 
 
 @pytest.mark.parametrize("mode", ["interpret", "scan", "wave",
-                                  "megakernel"])
+                                  "megakernel", "graphkernel"])
 def test_vgg16_all_modes_match_direct(tiny_vgg, mode):
     g, plans, ws, x = tiny_vgg
     ref = apply_graph(g, ws, x)
@@ -236,6 +236,7 @@ def test_compiled_graph_paths_reject_mismatched_input(tiny_resnet):
     from repro.core.graph import GraphValidationError
     g, plans, ws, _ = tiny_resnet
     bad = jax.random.normal(jax.random.key(8), (1, 30, 30, 3))
-    for mode in ("wave", "scan", "megakernel", "interpret"):
+    for mode in ("wave", "scan", "megakernel", "graphkernel",
+                 "interpret"):
         with pytest.raises(GraphValidationError, match="wrong pixels"):
             run_graph_streamed(g, plans, bad, ws, mode=mode)

@@ -205,3 +205,85 @@ def test_gate_network_rows_are_not_time_gated():
 def test_gate_baseline_without_network_rows_accepts_new_rows():
     base = _payload(100, 300, 200)
     assert gate.compare(base, _payload_networks()) == []
+
+
+# ---------------------------------------------------------------------------
+# Launches-no-growth (ISSUE 6): fused-chain launch counts must not grow
+# ---------------------------------------------------------------------------
+
+def _payload_graphkernel(launches=1, net_launches=2, traffic=800):
+    p = _payload(100, 300, 200)
+    p["records"] += [
+        {"name": "streaming_alexnet_graphkernel", "us_per_call": 150,
+         "meta": {"launches": launches, "dram_traffic_bytes": traffic}},
+        {"name": "streaming_resnet18_graphkernel", "us_per_call": 40,
+         "meta": {"launches": net_launches, "dram_traffic_bytes": 400}},
+    ]
+    return p
+
+
+def test_gate_launches_pass_identical():
+    base = _payload_graphkernel()
+    assert gate.compare(base, base) == []
+
+
+def test_gate_fails_on_launch_growth_gated_row():
+    """The alexnet graphkernel row is launch-gated: a chain splitting
+    1 -> 2 launches fails even at the same speed."""
+    base = _payload_graphkernel(launches=1)
+    cur = _payload_graphkernel(launches=2)
+    fails = gate.compare(base, cur)
+    assert any("streaming_alexnet_graphkernel" in f
+               and "launches grew 1 -> 2" in f for f in fails)
+
+
+def test_gate_graphkernel_rows_are_not_time_gated():
+    """Interpret-mode CI pays emulation cost, not launch overhead:
+    graphkernel wall-clock alone must never fail the gate, and the big
+    noisy row must not destabilise its group's share sums."""
+    base = _payload_graphkernel()
+    cur = _payload_graphkernel()
+    for r in cur["records"]:
+        if r["name"].endswith("_graphkernel"):
+            r["us_per_call"] *= 10
+    assert gate.compare(base, cur) == []
+
+
+def test_gate_fails_when_graphkernel_row_goes_missing():
+    base = _payload_graphkernel()
+    cur = _payload_graphkernel()
+    cur["records"] = [r for r in cur["records"]
+                      if r["name"] != "streaming_alexnet_graphkernel"]
+    fails = gate.compare(base, cur)
+    assert len(fails) == 1 and "streaming_alexnet_graphkernel" in fails[0] \
+        and "fused-chain path" in fails[0]
+
+
+def test_gate_fails_on_graphkernel_traffic_growth():
+    base = _payload_graphkernel(traffic=800)
+    cur = _payload_graphkernel(traffic=900)
+    fails = gate.compare(base, cur)
+    assert len(fails) == 1 and "streaming_alexnet_graphkernel" in fails[0] \
+        and "DRAM traffic" in fails[0]
+
+
+def test_gate_fails_on_launch_growth_network_row():
+    base = _payload_graphkernel(net_launches=2)
+    cur = _payload_graphkernel(net_launches=5)
+    fails = gate.compare(base, cur)
+    assert len(fails) == 1 and "resnet18_graphkernel" in fails[0] \
+        and "chain-fusion regression" in fails[0]
+
+
+def test_gate_launch_shrink_is_fine():
+    """Fewer launches (better fusion) never fails."""
+    base = _payload_graphkernel(launches=2, net_launches=5)
+    cur = _payload_graphkernel(launches=1, net_launches=2)
+    assert gate.compare(base, cur) == []
+
+
+def test_gate_rows_without_launches_meta_unaffected():
+    base = _payload_graphkernel()
+    for r in base["records"]:
+        r["meta"].pop("launches", None)
+    assert gate.compare(base, _payload_graphkernel()) == []
