@@ -38,6 +38,12 @@ run's ratio is gated too, with the same relative ``--threshold`` slack
 the share checks get (CI machines are noisy; the committed baseline is
 the artifact of record).
 
+Zero-degradation rule (ISSUE 7): any current record whose meta carries
+a nonzero ``degradation_events`` count fails the gate — the
+graceful-degradation runtime demoted nodes during the bench, so the
+row timed a cheaper executor than its name claims. Clean hosts must
+report 0.
+
 ``--current`` accepts several measurement files; they merge by
 per-record minimum before comparing. CI runs the smoke bench more than
 once and gates on the merge: contention tends to poison a whole run at
@@ -198,6 +204,18 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20,
             failures.append(
                 f"{name}: kernel launches grew {b_launch} -> {c_launch} "
                 f"(chain-fusion regression)")
+    # zero-degradation rule (ISSUE 7): a clean bench host must resolve
+    # every graph at full fidelity — a current record carrying a nonzero
+    # ``degradation_events`` count means the fallback runtime quietly
+    # demoted nodes to a cheaper executor, so the row's time measures a
+    # DIFFERENT executor than its name claims. Gated on the current run
+    # only (old baselines predate the meta key)
+    for name, rec in cur.items():
+        ev = rec.get("meta", {}).get("degradation_events")
+        if ev:
+            failures.append(
+                f"{name}: {ev} degradation event(s) during a clean "
+                f"bench run — the row measured a degraded executor")
     # int8 acceptance ratio: the baseline ratio is gated strictly (it is
     # the committed artifact); the current run gets the same relative
     # slack as the share checks

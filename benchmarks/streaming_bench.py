@@ -262,11 +262,20 @@ def _stack_records(reps: int, smoke: bool) -> list[dict]:
     us_gk, _ = _time(fwd_gk, x, gweights, ops_gk, reps=reps)
     gk_traffic = graphkernel_traffic_bytes(
         chains, gkps, dict(zip((l.name for l in layers), plans)))
+    # graceful-degradation runtime (ISSUE 7): resolve the same graph
+    # through the fallback chain and record how many nodes degraded — a
+    # clean bench host must report 0, and the regression gate fails the
+    # run otherwise (a nonzero count means the bench silently measured
+    # a cheaper executor than the row claims)
+    from repro.runtime.fallback import resolve_graph
+    resolved = resolve_graph(g, gprogs, mode="graphkernel",
+                             vmem_budget=budget_gk)
     recs.append(_record(
         "streaming_alexnet_graphkernel", us_gk,
         speedup_vs_megakernel=round(timings["megakernel"] / us_gk, 2),
         launches=len(chains), fused_chains=[len(c.convs) for c in chains],
-        dram_traffic_bytes=gk_traffic, psum_hbm_bytes=0))
+        dram_traffic_bytes=gk_traffic, psum_hbm_bytes=0,
+        degradation_events=len(resolved.events)))
 
     # int8 megakernel: calibrate on the bench input, then serve the
     # quantized datapath over the SAME kernel programs / operand tables.

@@ -487,7 +487,8 @@ class FusedChain:
 
 def fusible_chains(graph: NetworkGraph, kprogs,
                    *, vmem_budget: Optional[int] = None,
-                   quantized: bool = False) -> Tuple[FusedChain, ...]:
+                   quantized: bool = False,
+                   only: Optional[frozenset] = None) -> Tuple[FusedChain, ...]:
     """Greedily partition the conv schedule into fusible chains.
 
     A chain grows over consecutive conv nodes (fused residual adds ride
@@ -509,17 +510,24 @@ def fusible_chains(graph: NetworkGraph, kprogs,
     ``kprogs`` maps conv node name -> its per-layer KernelProgram (the
     exact programs the chain will replay). Returns chains covering
     every conv node exactly once, in schedule order.
+
+    ``only`` (the fallback runtime, runtime/fallback.py) restricts
+    fusion to a subset of conv nodes: nodes outside it are emitted as
+    single-node chains, break every run they sit in, and need no entry
+    in ``kprogs`` (a degraded node may have none — its per-layer
+    lowering is what failed).
     """
     from repro.core.schedule import (DEFAULT_VMEM_BUDGET, ChainNodeSpec,
                                      chain_vmem_bytes)
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
-    kprogs = conv_keyed(graph, kprogs, "kernel programs")
+    if only is None:
+        kprogs = conv_keyed(graph, kprogs, "kernel programs")
     fusion = residual_fusion(graph)
     conv_res = fusion.conv_residual()
     add_of = fusion.add_of_conv()
     cons = value_consumers(graph)
 
-    specs = [ChainNodeSpec(name=n.name, kp=kprogs[n.name],
+    specs = [ChainNodeSpec(name=n.name, kp=kprogs.get(n.name),
                            in_value=n.inputs[0],
                            out_value=add_of.get(n.name, n.name),
                            residual_value=conv_res.get(n.name))
@@ -539,9 +547,13 @@ def fusible_chains(graph: NetworkGraph, kprogs,
         values = {head.in_value, head.out_value}
         external_res = (head.residual_value is not None
                         and head.residual_value != head.in_value)
+        if only is not None and head.name not in only:
+            external_res = True         # excluded node: singleton chain
         j = i + 1
         while j < len(specs) and not external_res:
             s = specs[j]
+            if only is not None and s.name not in only:
+                break
             if s.in_value not in values:
                 break
             if s.residual_value is not None \

@@ -31,6 +31,10 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.decomposition import ConvLayer, Plan, _ceil_div
+# the lowering/validation sites raise the runtime's typed taxonomy
+# (each a ValueError subclass — pre-taxonomy callers are unaffected) so
+# the fallback chain can attribute failures to a pipeline stage
+from repro.runtime.errors import LoweringError, PlanError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,7 +129,7 @@ def compile_layer(layer: ConvLayer, plan: Plan) -> TileProgram:
     elif plan.feat_splits > 1:
         # planner guarantees in_splits == 1 and feat alignment with groups
         if l.out_c % plan.feat_splits or plan.feat_splits % l.groups:
-            raise ValueError(
+            raise PlanError(
                 f"{l.name}: feat_splits={plan.feat_splits} does not align "
                 f"with groups={l.groups}")
         cg = fan = in_per_group
@@ -255,7 +259,7 @@ def partition_waves(program: TileProgram) -> WaveProgram:
 
     sizes = {len(w) for w in waves}
     if len(sizes) > 1:
-        raise ValueError(
+        raise LoweringError(
             f"{program.layer.name}: ragged waves {sorted(sizes)} — "
             f"chains of unequal length cannot batch into one dispatch")
 
@@ -314,23 +318,23 @@ def validate_waves(wp: WaveProgram) -> None:
         blocks = [(s[2], s[3], s[6]) for s in wave]
         if len(set(blocks)) != len(blocks):
             dupes = {b for b in blocks if blocks.count(b) > 1}
-            raise ValueError(
+            raise LoweringError(
                 f"{g.layer.name} wave {k}: output blocks written twice "
                 f"within one wave: {sorted(dupes)}")
         if blocks != expect:
-            raise ValueError(
+            raise LoweringError(
                 f"{g.layer.name} wave {k}: blocks deviate from the "
                 f"raster tiling the batched reassembly assumes")
         if g.layer.groups == 1:
             chans = {(s[4], s[5]) for s in wave}
             if len(chans) != 1:
-                raise ValueError(
+                raise LoweringError(
                     f"{g.layer.name} wave {k}: mixed input-channel "
                     f"groups {sorted(chans)} cannot fuse into one "
                     f"dispatch")
         tiles = [r[:4] for r in wp.tile_waves[k]]
         if tiles != [r[:4] for r in wp.tile_waves[0]]:
-            raise ValueError(
+            raise LoweringError(
                 f"{g.layer.name} wave {k}: tile windows differ from "
                 f"wave 0 — the once-per-window gather and the "
                 f"megakernel operand tables assume wave-invariant "
@@ -511,16 +515,16 @@ def lower_kernel_program(
     g = wprog.program
     l, plan = g.layer, g.plan
     if fuse_pool and l.pool <= 1:
-        raise ValueError(f"{l.name}: fuse_pool on a layer without a pool")
+        raise LoweringError(f"{l.name}: fuse_pool on a layer without a pool")
     if residual and fuse_pool:
-        raise ValueError(
+        raise LoweringError(
             f"{l.name}: residual add cannot fuse with the pool epilogue "
             f"— the add runs on the conv-geometry accumulator")
 
     if fuse_pool:
         ps = l.pool_stride or l.pool
         if l.pooled_h < 1 or l.pooled_w < 1:
-            raise ValueError(
+            raise LoweringError(
                 f"{l.name}: conv output {l.out_h}x{l.out_w} smaller than "
                 f"pool {l.pool}")
         blk_h = _ceil_div(l.pooled_h, plan.tiles_h)
@@ -581,7 +585,7 @@ def lower_kernel_program(
                     # reuse the wave rows (raster order per invariant 2/4)
                     iy, ix = rows[i][0], rows[i][1]
                     if (rows[i][2], rows[i][3]) != (ty * blk_h, tx * blk_w):
-                        raise ValueError(
+                        raise LoweringError(
                             f"{l.name}: wave {j * chunk} tile {i} out of "
                             f"raster order — cannot index a rectangular "
                             f"grid")
@@ -627,11 +631,11 @@ def validate_kernel_program(kp: KernelProgram) -> None:
     l, plan = g.layer, g.plan
     tab = kp.operand_table()
     if tab.shape != (kp.n_chain, kp.n_tiles, KERNEL_OP_COLS):
-        raise ValueError(
+        raise LoweringError(
             f"{l.name}: operand table {tab.shape} is not the dense "
             f"({kp.n_chain}, {kp.n_tiles}, {KERNEL_OP_COLS}) grid")
     if kp.n_chain * kp.chain_chunk < kp.wave.n_waves:
-        raise ValueError(
+        raise LoweringError(
             f"{l.name}: {kp.n_chain} steps x chunk {kp.chain_chunk} "
             f"drop waves of the {kp.wave.n_waves}-long chain")
     expect_blocks = [(ty, tx) for ty in range(plan.tiles_h)
@@ -639,30 +643,30 @@ def validate_kernel_program(kp: KernelProgram) -> None:
     for j in range(kp.n_chain):
         rows = tab[j]
         if [(r[OP_TY], r[OP_TX]) for r in rows] != expect_blocks:
-            raise ValueError(
+            raise LoweringError(
                 f"{l.name} step {j}: output blocks deviate from the "
                 f"raster tiling")
         c0s = {(r[OP_C0], r[OP_WC0]) for r in rows}
         if len(c0s) != 1:
-            raise ValueError(
+            raise LoweringError(
                 f"{l.name} step {j}: mixed channel offsets {sorted(c0s)}")
         if l.groups == 1 and c0s != {(j * kp.c_width, j * kp.fan_width)}:
-            raise ValueError(
+            raise LoweringError(
                 f"{l.name} step {j}: channel offsets {sorted(c0s)} break "
                 f"chain order (expected chunk {j} at {j * kp.c_width})")
         for r in rows:
             if not (0 <= r[OP_IY] and r[OP_IY] + kp.ih <= kp.pad_h
                     and 0 <= r[OP_IX] and r[OP_IX] + kp.iw <= kp.pad_w):
-                raise ValueError(
+                raise LoweringError(
                     f"{l.name} step {j}: input window ({r[OP_IY]}, "
                     f"{r[OP_IX]})+({kp.ih}, {kp.iw}) outside the padded "
                     f"({kp.pad_h}, {kp.pad_w}) buffer")
             if r[OP_C0] + kp.c_width > kp.in_c_kpad:
-                raise ValueError(
+                raise LoweringError(
                     f"{l.name} step {j}: channel offset {r[OP_C0]} + "
                     f"width {kp.c_width} exceeds {kp.in_c_kpad}")
             if r[OP_WC0] + kp.fan_width > kp.w_in_kpad:
-                raise ValueError(
+                raise LoweringError(
                     f"{l.name} step {j}: weight fan offset {r[OP_WC0]} "
                     f"+ {kp.fan_width} exceeds {kp.w_in_kpad}")
     # masks tile the valid output exactly (step 0 suffices: masks are
@@ -671,7 +675,7 @@ def validate_kernel_program(kp: KernelProgram) -> None:
                  for ty in range(plan.tiles_h))
     vc_sum = sum(int(tab[0][tx][OP_VC]) for tx in range(plan.tiles_w))
     if vr_sum != kp.out_h or vc_sum != kp.out_w:
-        raise ValueError(
+        raise LoweringError(
             f"{l.name}: write masks cover {vr_sum}x{vc_sum}, valid "
             f"output is {kp.out_h}x{kp.out_w}")
 
@@ -773,13 +777,13 @@ def plan_arena(values: Sequence[ArenaValue]) -> ArenaPlan:
     """
     order = [v.birth for v in values]
     if order != sorted(order):
-        raise ValueError(f"arena values out of birth order: {order}")
+        raise LoweringError(f"arena values out of birth order: {order}")
     slot_death: List[int] = []
     shapes: List[List[int]] = []
     assign: List[int] = []
     for v in values:
         if v.death < v.birth:
-            raise ValueError(f"{v.name}: dies ({v.death}) before "
+            raise LoweringError(f"{v.name}: dies ({v.death}) before "
                              f"birth ({v.birth})")
         si = next((i for i, d in enumerate(slot_death) if d < v.birth),
                   None)
@@ -816,11 +820,11 @@ def _chain_layout(specs: Sequence[ChainNodeSpec], quantized: bool):
     ``lower_graph_kernel`` layers the strict checks on top.
     """
     if not specs:
-        raise ValueError("empty chain")
+        raise LoweringError("empty chain")
     input_value = specs[0].in_value
     names = [s.out_value for s in specs]
     if len(set(names)) != len(names) or input_value in names:
-        raise ValueError(f"chain value names collide: {names}")
+        raise LoweringError(f"chain value names collide: {names}")
 
     conv_readers: dict = {}
     res_readers: dict = {}
@@ -1035,15 +1039,15 @@ def lower_graph_kernel(specs: Sequence[ChainNodeSpec], *,
     for i, s in enumerate(specs):
         l = s.kp.wave.program.layer
         if s.in_value not in visible:
-            raise ValueError(
+            raise LoweringError(
                 f"{s.name}: input {s.in_value!r} not produced earlier "
                 f"in the chain")
         if s.residual_value is not None and s.residual_value not in visible:
-            raise ValueError(
+            raise LoweringError(
                 f"{s.name}: residual {s.residual_value!r} not produced "
                 f"earlier in the chain")
         if s.kp.residual != (s.residual_value is not None):
-            raise ValueError(
+            raise LoweringError(
                 f"{s.name}: KernelProgram residual={s.kp.residual} "
                 f"disagrees with residual_value={s.residual_value!r}")
         visible.add(s.out_value)
@@ -1064,14 +1068,14 @@ def lower_graph_kernel(specs: Sequence[ChainNodeSpec], *,
                 ok = (s.kp.out_h == p.kp.out_h and s.kp.out_w == p.kp.out_w
                       and rl.out_c == pl_.out_c)
             if not ok:
-                raise ValueError(
+                raise LoweringError(
                     f"{s.name}: {kind} input {val!r} geometry "
                     f"mismatch with producer {p.name}")
     for i, s in enumerate(specs[:-1]):
         if not any(t.in_value == s.out_value
                    or t.residual_value == s.out_value
                    for t in specs[i + 1:]):
-            raise ValueError(
+            raise LoweringError(
                 f"{s.name}: internal value {s.out_value!r} has no "
                 f"reader inside the chain — invalid cut")
 
@@ -1117,7 +1121,7 @@ def validate_graph_kernel(gkp: GraphKernelProgram) -> None:
     """
     tab = gkp.operand_table()
     if tab.shape != (gkp.total_steps, GRAPH_OP_COLS):
-        raise ValueError(
+        raise LoweringError(
             f"graph table {tab.shape} != ({gkp.total_steps}, "
             f"{GRAPH_OP_COLS})")
     last = len(gkp.nodes) - 1
@@ -1128,32 +1132,32 @@ def validate_graph_kernel(gkp: GraphKernelProgram) -> None:
         hi = gkp.node_steps[ni + 1] if ni + 1 < len(gkp.nodes) \
             else gkp.total_steps
         if hi - lo != n:
-            raise ValueError(f"{s.name}: rows [{lo}, {hi}) != {n} steps")
+            raise LoweringError(f"{s.name}: rows [{lo}, {hi}) != {n} steps")
         r = 0
         for t in range(kp.n_tiles):
             for k in range(kp.n_chain):
                 row = tab[lo + r]
                 src = kp.table[k][t]
                 if (row[GOP_NODE], row[GOP_K]) != (ni, k):
-                    raise ValueError(
+                    raise LoweringError(
                         f"{s.name} row {r}: dispatch "
                         f"({row[GOP_NODE]}, {row[GOP_K]}) != ({ni}, {k})")
                 if (row[GOP_TY], row[GOP_TX], row[GOP_VR],
                         row[GOP_VC]) != (src[2], src[3], src[6], src[7]):
-                    raise ValueError(
+                    raise LoweringError(
                         f"{s.name} row {r}: tile/mask columns deviate "
                         f"from the per-layer table")
                 want_oyx = (src[2], src[3]) if ni == last else (0, 0)
                 if (row[GOP_OY], row[GOP_OX]) != want_oyx:
-                    raise ValueError(
+                    raise LoweringError(
                         f"{s.name} row {r}: output steering "
                         f"({row[GOP_OY]}, {row[GOP_OX]}) != {want_oyx}")
                 if row[GOP_WOFF] + gkp.w_max > gkp.w_total:
-                    raise ValueError(
+                    raise LoweringError(
                         f"{s.name} row {r}: weight window "
                         f"{row[GOP_WOFF]}+{gkp.w_max} > {gkp.w_total}")
                 if row[GOP_BOFF] + gkp.b_max > gkp.b_total:
-                    raise ValueError(
+                    raise LoweringError(
                         f"{s.name} row {r}: bias window "
                         f"{row[GOP_BOFF]}+{gkp.b_max} > {gkp.b_total}")
                 r += 1
@@ -1161,12 +1165,12 @@ def validate_graph_kernel(gkp: GraphKernelProgram) -> None:
     for v, si in zip(gkp.arena.values, gkp.arena.slots):
         shape = gkp.arena.slot_shapes[si]
         if any(a > b for a, b in zip(v.shape, shape)):
-            raise ValueError(
+            raise LoweringError(
                 f"arena: {v.name} extent {v.shape} overflows slot "
                 f"{si} {shape}")
         for u in occupants.get(si, []):
             if not (u.death < v.birth or v.death < u.birth):
-                raise ValueError(
+                raise LoweringError(
                     f"arena: {u.name} [{u.birth}, {u.death}] and "
                     f"{v.name} [{v.birth}, {v.death}] alias slot {si} "
                     f"while both live")

@@ -80,6 +80,7 @@ from repro.core.schedule import (DEFAULT_VMEM_BUDGET as _VMEM_DEFAULT,
                                  WaveProgram, compile_layer,
                                  lower_graph_kernel, lower_kernel_program,
                                  partition_waves)
+from repro.runtime.errors import PlanError
 
 
 def conv2d_direct(x: jax.Array, w: jax.Array, stride: int = 1,
@@ -408,13 +409,13 @@ def run_layer_wave(wprog: WaveProgram, x: jax.Array, w: jax.Array,
     _check_input(l, x)
     conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride,
                                          conv_fn_name)
-    key = (wprog.geometry, conv_key, "fp32", b is not None, x.shape[0],
-           str(x.dtype))
-    fn = _cached_executable(key, lambda: jax.jit(
-        functools.partial(_wave_executor, wprog, conv_fn, b is not None)))
+    key = (wprog.geometry, "wave", conv_key, "fp32", b is not None,
+           x.shape[0], str(x.dtype))
     ops = jnp.asarray(wprog.tile_operands())
     bias = b if b is not None else jnp.zeros((0,), x.dtype)
-    return fn(x, w, bias, ops)
+    return _call_cached(key, lambda: jax.jit(
+        functools.partial(_wave_executor, wprog, conv_fn, b is not None)),
+        x, w, bias, ops)
 
 
 # ---------------------------------------------------------------------------
@@ -496,11 +497,11 @@ def _coarsen_single_wave(wprog: WaveProgram, fuse_pool: bool,
 def _run_kernel_program(kprog: KernelProgram, x, w, b):
     key = (kprog.geometry, "megakernel", "fp32", b is not None,
            x.shape[0], str(x.dtype))
-    fn = _cached_executable(key, lambda: jax.jit(
-        functools.partial(_megakernel_executor, kprog, b is not None)))
     table = jnp.asarray(kprog.operand_table())
     bias = b if b is not None else jnp.zeros((0,), x.dtype)
-    return fn(x, w, bias, table)
+    return _call_cached(key, lambda: jax.jit(
+        functools.partial(_megakernel_executor, kprog, b is not None)),
+        x, w, bias, table)
 
 
 # ---------------------------------------------------------------------------
@@ -554,12 +555,12 @@ def run_layer_megakernel_q(wprog: WaveProgram, x: jax.Array, quant,
     key = (kprog.geometry, "megakernel", "int8", quant.pre_shift,
            quant.fan_chunk, float(quant.in_scale),
            float(quant.out_scale), dequantize, x.shape[0], str(x.dtype))
-    fn = _cached_executable(key, lambda: jax.jit(functools.partial(
-        _megakernel_q_executor, kprog, quant.pre_shift, quant.fan_chunk,
-        float(quant.in_scale), float(quant.out_scale), dequantize)))
     table = jnp.asarray(kprog.operand_table())
     wq, bq, m, shift = quant.device_arrays()
-    return fn(x, wq, bq, m, shift, table)
+    return _call_cached(key, lambda: jax.jit(functools.partial(
+        _megakernel_q_executor, kprog, quant.pre_shift, quant.fan_chunk,
+        float(quant.in_scale), float(quant.out_scale), dequantize)),
+        x, wq, bq, m, shift, table)
 
 
 # One jitted executable per (schedule geometry, backend, batch shape).
@@ -602,6 +603,24 @@ def _cached_executable(key: tuple, build: Callable) -> Callable:
     return fn
 
 
+def _call_cached(key: tuple, build: Callable, *args):
+    """Get-or-build the executable for ``key`` and invoke it.
+
+    ``jax.jit`` is lazy — the trace/compile happens on the *first call*,
+    after ``_cached_executable`` has already inserted the entry — so a
+    failing compile used to leave a poisoned entry behind under a
+    healthy-looking key. Evict on any failure: the cache only ever
+    holds executables whose most recent call succeeded, and a later
+    retry (or a fallback-mode rebuild under a different key) starts
+    from a clean slot."""
+    fn = _cached_executable(key, build)
+    try:
+        return fn(*args)
+    except Exception:
+        _EXECUTOR_CACHE.pop(key, None)
+        raise
+
+
 def _check_input(l: ConvLayer, x: jax.Array) -> None:
     if x.shape[1:] != (l.in_h, l.in_w, l.in_c):
         raise ValueError(
@@ -626,13 +645,13 @@ def run_layer_scheduled(program: TileProgram, x: jax.Array, w: jax.Array,
     _check_input(l, x)
     conv_fn, conv_key = _resolve_conv_fn(conv_fn, conv_backend, l.stride,
                                          conv_fn_name)
-    key = (program.geometry, conv_key, "fp32", b is not None, x.shape[0],
-           str(x.dtype))
-    fn = _cached_executable(key, lambda: jax.jit(
-        functools.partial(_scan_executor, program, conv_fn, b is not None)))
+    key = (program.geometry, "scan", conv_key, "fp32", b is not None,
+           x.shape[0], str(x.dtype))
     ops = jnp.asarray(program.operands())
     bias = b if b is not None else jnp.zeros((0,), x.dtype)
-    return fn(x, w, bias, ops)
+    return _call_cached(key, lambda: jax.jit(
+        functools.partial(_scan_executor, program, conv_fn, b is not None)),
+        x, w, bias, ops)
 
 
 def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
@@ -1172,13 +1191,13 @@ def run_graph_streamed(graph: NetworkGraph, plans, x: jax.Array, weights,
     key = (graph.topology_key,
            tuple(p.geometry for p in programs.values()),
            mode, precision, conv_key, qsig, x.shape[0], str(x.dtype))
-    fn = _cached_executable(key, lambda: jax.jit(graph_forward_fn(
+    build = lambda: jax.jit(graph_forward_fn(
         graph, programs, conv_fn=conv_fn, conv_backend=conv_backend,
-        mode=mode, precision=precision, qgraph=qgraph)))
+        mode=mode, precision=precision, qgraph=qgraph))
     ops = graph_operands(graph, programs, mode, precision=precision)
     if precision == "int8":
-        return fn(x, qgraph.device_weights(), ops)
-    return fn(x, weights, ops)
+        return _call_cached(key, build, x, qgraph.device_weights(), ops)
+    return _call_cached(key, build, x, weights, ops)
 
 
 # ---------------------------------------------------------------------------
@@ -1298,7 +1317,7 @@ def plan_for_vmem(layer: ConvLayer,
                 if best is None or key < best[0]:
                     best = (key, p)
     if best is None:
-        raise ValueError(f"{layer.name}: no feasible megakernel plan")
+        raise PlanError(f"{layer.name}: no feasible megakernel plan")
     return best[1]
 
 

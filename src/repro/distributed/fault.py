@@ -1,17 +1,196 @@
-"""Fault-tolerance runtime: step watchdog (straggler detection) and a
+"""Fault-tolerance runtime: deterministic fault injection for the
+graceful-degradation runtime, step watchdog (straggler detection) and a
 restart-loop driver.
 
-At 1000+ nodes the dominant failures are (a) node loss -> handled by
-checkpoint/restart with deterministic data (pipeline is stateless in
-step), and (b) stragglers -> detected here by step-time outlier tracking;
-on a real fleet the hook triggers requeue/hot-swap, here it logs and
-counts (tested by injecting slow steps).
+``FaultInjector`` (ISSUE 7) arms stage-scoped failures so every edge of
+the executor fallback chain (runtime/fallback.py) is exercisable in
+CPU CI without real hardware faults:
+
+  * ``arm("plan" | "lower" | "launch", node=..., mode=...)`` — raise the
+    matching taxonomy error (``PlanError`` / ``LoweringError`` /
+    ``KernelLaunchError``) at that pipeline stage, optionally scoped to
+    one node and/or one executor mode. Launch faults fire at trace
+    time: the kernels' op entry points (``wave_replay{,_q}/ops.py``)
+    call ``fault_point`` before building the pallas_call.
+  * ``arm_nan(node=...)`` — poison that node's activation with NaN
+    (sticky while armed: the poison is baked into traced forwards, so
+    consuming it per-fire would make retraces nondeterministic); the
+    numeric guards (runtime/guard.py) detect it and re-run the node on
+    the reference path.
+  * ``arm_vmem(budget, node=...)`` — shrink the VMEM budget the
+    fallback resolver checks lowered programs against, forcing
+    ``BudgetExceeded`` (megakernel -> wave) without touching real
+    lowering.
+
+Injection is explicit and deterministic: faults fire only where the
+instrumented code calls the module hooks (``fault_point`` /
+``apply_poison`` / ``effective_vmem``), in program order, the armed
+number of ``times`` — no randomness, no wall clock. The injector is a
+context manager installing itself as the process-global active
+injector; the hooks are no-ops when nothing is installed, so the hot
+paths pay one global read.
+
+``StepWatchdog``: at 1000+ nodes the dominant failures are (a) node
+loss -> handled by checkpoint/restart with deterministic data (pipeline
+is stateless in step), and (b) stragglers -> detected here by step-time
+outlier tracking; on a real fleet the hook triggers requeue/hot-swap,
+here it logs and counts (tested by injecting slow steps).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Tuple
+
+from repro.runtime.errors import (KernelLaunchError, LoweringError,
+                                  PlanError, RestartsExhausted)
+
+_STAGE_ERRORS = {
+    "plan": PlanError,
+    "lower": LoweringError,
+    "launch": KernelLaunchError,
+}
+
+
+@dataclasses.dataclass
+class _Arm:
+    stage: str                       # plan | lower | launch | nan
+    node: Optional[str]              # None = any node
+    mode: Optional[str]              # None = any executor mode
+    times: int                       # remaining fires (nan arms: sticky)
+
+
+class FaultInjector:
+    """Deterministic, stage-scoped fault arming (context manager).
+
+    >>> with FaultInjector() as inj:
+    ...     inj.arm("lower", node="c2", mode="megakernel")
+    ...     ...   # the next megakernel lowering of c2 raises LoweringError
+    >>> inj.fired
+    [("lower", "c2", "megakernel")]
+    """
+
+    def __init__(self):
+        self._arms: List[_Arm] = []
+        self._vmem: List[Tuple[Optional[str], int]] = []
+        self.fired: List[Tuple[str, str, Optional[str]]] = []
+
+    # -- arming --------------------------------------------------------
+    def arm(self, stage: str, node: Optional[str] = None,
+            mode: Optional[str] = None, times: int = 1) -> "FaultInjector":
+        if stage not in _STAGE_ERRORS:
+            raise ValueError(f"unknown fault stage {stage!r} (expected "
+                             f"{' | '.join(_STAGE_ERRORS)}; NaN poisoning "
+                             f"is arm_nan, budgets are arm_vmem)")
+        self._arms.append(_Arm(stage, node, mode, int(times)))
+        return self
+
+    def arm_nan(self, node: str) -> "FaultInjector":
+        """Poison ``node``'s activation with NaN (sticky while armed)."""
+        self._arms.append(_Arm("nan", node, None, -1))
+        return self
+
+    def arm_vmem(self, budget: int,
+                 node: Optional[str] = None) -> "FaultInjector":
+        """Clamp the fallback resolver's VMEM budget check to ``budget``
+        bytes (optionally for one node only)."""
+        self._vmem.append((node, int(budget)))
+        return self
+
+    def disarm_nan(self, node: str) -> None:
+        self._arms = [a for a in self._arms
+                      if not (a.stage == "nan" and a.node == node)]
+
+    # -- hook queries --------------------------------------------------
+    def _match(self, stage: str, node: str,
+               mode: Optional[str]) -> Optional[_Arm]:
+        for a in self._arms:
+            if a.stage != stage or a.times == 0:
+                continue
+            if a.node is not None and a.node != node:
+                continue
+            if a.mode is not None and mode is not None and a.mode != mode:
+                continue
+            return a
+        return None
+
+    def check(self, stage: str, node: str, mode: Optional[str]) -> None:
+        a = self._match(stage, node, mode)
+        if a is None:
+            return
+        if a.times > 0:
+            a.times -= 1
+        self.fired.append((stage, node, mode))
+        raise _STAGE_ERRORS[stage](
+            f"{node}: injected {stage}-stage fault"
+            + (f" (mode={mode})" if mode else ""))
+
+    def poison_nodes(self) -> Tuple[str, ...]:
+        """Nodes with a sticky NaN arm — part of executable cache keys,
+        so a poisoned trace can never be reused by a clean run."""
+        return tuple(sorted({a.node for a in self._arms
+                             if a.stage == "nan" and a.times != 0}))
+
+    def vmem_budget(self, default: Optional[int],
+                    node: Optional[str] = None) -> Optional[int]:
+        for scope, budget in self._vmem:
+            if scope is None or scope == node:
+                return budget
+        return default
+
+    # -- installation --------------------------------------------------
+    def __enter__(self) -> "FaultInjector":
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("a FaultInjector is already active")
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        global _ACTIVE
+        _ACTIVE = None
+
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def active_injector() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+def fault_point(stage: str, node: str, mode: Optional[str] = None) -> None:
+    """Instrumentation hook: raises the armed taxonomy error, else no-op.
+
+    Called from the fallback resolver's per-stage attempts and from the
+    wave_replay kernels' op entry points (stage ``"launch"``, at trace
+    time — before any pallas_call is built)."""
+    if _ACTIVE is not None:
+        _ACTIVE.check(stage, node, mode)
+
+
+def apply_poison(node: str, y):
+    """Poison hook: NaN-stamp element [..., 0] of a node's activation
+    when armed (trace-safe — a pure ``where`` on the first lane)."""
+    if _ACTIVE is None or _ACTIVE._match("nan", node, None) is None:
+        return y
+    import jax.numpy as jnp
+    flat = y.reshape(-1)
+    flat = flat.at[0].set(jnp.nan)
+    _ACTIVE.fired.append(("nan", node, None))
+    return flat.reshape(y.shape)
+
+
+def effective_vmem(default: Optional[int],
+                   node: Optional[str] = None) -> Optional[int]:
+    """Budget hook: the armed tiny VMEM budget, else ``default``."""
+    if _ACTIVE is None:
+        return default
+    return _ACTIVE.vmem_budget(default, node)
+
+
+def poison_signature() -> Tuple[str, ...]:
+    """Armed NaN-poison nodes, for executable cache keys."""
+    return () if _ACTIVE is None else _ACTIVE.poison_nodes()
 
 
 @dataclasses.dataclass
@@ -42,10 +221,21 @@ class StepWatchdog:
 def run_with_restarts(make_runner: Callable[[], Callable[[], int]],
                       max_restarts: int = 3,
                       on_restart: Optional[Callable[[int, Exception], None]]
-                      = None) -> int:
+                      = None,
+                      backoff_base: float = 0.01,
+                      backoff_cap: float = 1.0,
+                      sleep_fn: Callable[[float], None] = time.sleep) -> int:
     """Drive a training runner, restarting from the latest checkpoint on
     failure. ``make_runner()`` must rebuild all state from disk (which the
-    train loop does via CheckpointManager.restore_latest)."""
+    train loop does via CheckpointManager.restore_latest).
+
+    Restarts back off deterministically: restart k sleeps
+    ``min(backoff_base * 2**(k-1), backoff_cap)`` seconds (``sleep_fn``
+    injectable for tests). When the budget is exhausted the loop raises
+    ``RestartsExhausted`` **chained from the final failure** — the real
+    traceback survives as ``__cause__`` instead of being re-raised bare
+    with the restart context lost.
+    """
     attempts = 0
     while True:
         try:
@@ -58,5 +248,8 @@ def run_with_restarts(make_runner: Callable[[], Callable[[], int]],
             if on_restart is not None:
                 on_restart(attempts, e)
             if attempts > max_restarts:
-                raise
-            time.sleep(0.01)
+                raise RestartsExhausted(
+                    f"gave up after {max_restarts} restarts "
+                    f"({attempts} failures); last: {type(e).__name__}: {e}"
+                ) from e
+            sleep_fn(min(backoff_base * 2 ** (attempts - 1), backoff_cap))

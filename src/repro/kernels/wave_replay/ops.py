@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schedule import KernelProgram
+from repro.distributed.fault import fault_point
 from repro.kernels.wave_replay.kernel import wave_replay_raw
 
 _LAUNCHES = 0
@@ -115,6 +116,10 @@ def wave_replay_layer(kp: KernelProgram, x: jax.Array, w: jax.Array,
     global _LAUNCHES
     _LAUNCHES += 1
     l = kp.wave.program.layer
+    # launch-stage fault hook (trace time, before the pallas_call is
+    # built): lets the FaultInjector exercise the fallback runtime's
+    # KernelLaunchError path in CPU CI (distributed/fault.py)
+    fault_point("launch", l.name, "megakernel")
     if table is None:
         table = jnp.asarray(kp.operand_table())
     if kp.residual and residual is None:

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schedule import KernelProgram
+from repro.distributed.fault import fault_point
 from repro.kernels.wave_replay_q.kernel import (q_weight_full_fan,
                                                 wave_replay_q_raw)
 
@@ -92,6 +93,8 @@ def wave_replay_q_layer(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
     global _LAUNCHES
     _LAUNCHES += 1
     l = kp.wave.program.layer
+    # launch-stage fault hook (trace time): see wave_replay/ops.py
+    fault_point("launch", l.name, "megakernel")
     if table is None:
         table = jnp.asarray(kp.operand_table())
     if kp.residual and residual is None:

@@ -61,7 +61,9 @@ def cnn_main(args):
                                       mode=mode,
                                       pool_backend=args.pool_backend,
                                       precision=args.precision,
-                                      qnet=qnet)
+                                      qnet=qnet,
+                                      fallback=args.fallback or None,
+                                      guard=args.guard or None)
     imgs = jax.random.normal(jax.random.key(99),
                              (args.requests, H, W, C))
     # warm-up: one padded flush compiles the (only) executable
@@ -79,6 +81,9 @@ def cnn_main(args):
           f"({args.requests/dt:.1f} img/s), "
           f"compiles={sess.compile_count}, batched calls={sess.calls}")
     print(sess.describe())
+    if args.health:
+        import json
+        print(json.dumps(sess.health(), indent=2))
 
 
 def main():
@@ -114,6 +119,23 @@ def main():
                          "executor, or the fused Pallas conv+pool kernel "
                          "(ignored by --mode megakernel, which fuses "
                          "pooling itself)")
+    ap.add_argument("--fallback", action="store_true",
+                    help="resolve the graph through the graceful-"
+                         "degradation runtime (repro.runtime): a node "
+                         "that fails to plan/lower/launch at the chosen "
+                         "mode degrades to the next cheaper executor "
+                         "(graphkernel -> megakernel -> wave -> scan) "
+                         "instead of failing the whole session")
+    ap.add_argument("--guard", action="store_true",
+                    help="post-execution numeric guards: quarantine a "
+                         "batch whose output goes NaN/Inf (fp32) or "
+                         "saturates wholesale (int8) and re-run it on "
+                         "the reference path (implies --fallback)")
+    ap.add_argument("--health", action="store_true",
+                    help="after serving, print the session's health "
+                         "report as JSON: per-node executor modes, "
+                         "degradation events, shed/deadline/guard/"
+                         "retry counters")
     ap.add_argument("--precision", choices=("fp32", "int8"),
                     default="fp32",
                     help="int8 calibrates the stack (PTQ, a few random "

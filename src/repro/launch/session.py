@@ -17,8 +17,10 @@ compilation.
 Serving modes:
 
   * ``run_batch(x)`` — synchronous batched inference; the executable
-    cache is keyed on (shape, dtype), so steady-state traffic of a fixed
-    batch shape compiles exactly once (``compile_count`` exposes this).
+    cache is keyed on (shape, dtype, mode, precision, resolved
+    fallback signature), so steady-state traffic of a fixed batch
+    shape compiles exactly once (``compile_count`` exposes this) and a
+    degraded resolution never aliases a clean one.
   * ``submit(img)`` / ``result(ticket)`` — micro-batching queue: many
     independent single-image requests are coalesced into one
     ``max_batch``-sized compiled call (partial batches are zero-padded
@@ -28,6 +30,7 @@ DESIGN.md §2 maps this onto the paper's control path in detail.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -39,6 +42,7 @@ from repro.core.graph import NetworkGraph, chain_graph, conv_keyed
 from repro.core.schedule import TileProgram
 from repro.core.streaming import (compile_graph, graph_forward_fn,
                                   graph_operands, plan_graph)
+from repro.runtime.errors import DeadlineExceeded, Overloaded
 
 
 class StreamingSession:
@@ -78,7 +82,14 @@ class StreamingSession:
                  conv_backend: str = "xla", max_batch: int = 8,
                  mode: str = "wave", pool_backend: str = "xla",
                  donate: bool = True, precision: str = "fp32",
-                 qnet=None):
+                 qnet=None,
+                 fallback=None, guard=None,
+                 max_pending: Optional[int] = None,
+                 compile_retries: int = 2,
+                 backoff_base: float = 0.05,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 validate_inputs: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
         if not isinstance(graph, NetworkGraph):
             graph = chain_graph(tuple(graph))
         self.graph = graph
@@ -122,19 +133,65 @@ class StreamingSession:
                     "the float (w, b) pairs")
             self.weights = self._conv_dict(weights, "weights")
         self.qnet = qnet
-        self._ops = graph_operands(graph, self._progs, mode,
-                                   precision=precision)
-        self._forward = graph_forward_fn(graph, self._progs, conv_fn,
-                                         conv_backend, mode=mode,
-                                         pool_backend=pool_backend,
-                                         precision=precision,
-                                         qgraph=qgraph)
+        self._qgraph = qgraph
+        self._conv_fn, self._conv_backend = conv_fn, conv_backend
+        # -- graceful degradation (runtime/fallback.py, runtime/guard.py)
+        if guard is not None and guard is not False and fallback is None:
+            fallback = True             # repair needs the resolved plan
+        self.guard = None
+        if guard is not None and guard is not False:
+            from repro.runtime.guard import GuardConfig
+            self.guard = guard if isinstance(guard, GuardConfig) \
+                else GuardConfig()
+            # the repair path re-reads the input batch — incompatible
+            # with donating its buffer to the compiled executable
+            self.donate = False
+        self.resolved = None
+        if fallback is not None and fallback is not False:
+            from repro.runtime.fallback import (FallbackChain,
+                                                resolve_graph)
+            chain = fallback if isinstance(fallback, FallbackChain) \
+                else None
+            self.resolved = resolve_graph(graph, self._progs, mode=mode,
+                                          chain=chain,
+                                          precision=precision,
+                                          qgraph=qgraph)
+            # int8 + guard: the guard must see raw int8 codes
+            # (saturation is invisible after dequantize) — the session
+            # dequantizes after the check
+            self._guard_raw = (self.guard is not None
+                               and precision == "int8")
+            self._ops = self.resolved.operands()
+            self._forward = self.resolved.forward_fn(
+                conv_fn, conv_backend,
+                dequantize=not self._guard_raw)
+        else:
+            self._guard_raw = False
+            self._ops = graph_operands(graph, self._progs, mode,
+                                       precision=precision)
+            self._forward = graph_forward_fn(graph, self._progs, conv_fn,
+                                             conv_backend, mode=mode,
+                                             pool_backend=pool_backend,
+                                             precision=precision,
+                                             qgraph=qgraph)
+        # -- serving guardrails
+        self.max_pending = max_pending
+        self.compile_retries = int(compile_retries)
+        self.backoff_base = float(backoff_base)
+        self._sleep = sleep_fn
+        self._clock = clock
+        self.validate_inputs = bool(validate_inputs)
+        self.shed = 0                   # requests rejected (queue full)
+        self.deadline_expired = 0       # requests dropped past deadline
+        self.guard_trips = 0            # batches quarantined + repaired
+        self.compile_retries_used = 0   # transient-failure retries taken
         self._executables: Dict[tuple, Callable] = {}
         self.compile_count = 0          # traces performed (the spy)
         self.calls = 0                  # compiled-executable invocations
-        # micro-batch queue state
-        self._pending: List[Tuple[int, jax.Array]] = []
+        # micro-batch queue state: (ticket, image, expiry | None)
+        self._pending: List[Tuple[int, jax.Array, Optional[float]]] = []
         self._results: Dict[int, jax.Array] = {}
+        self._expired: set = set()
         self._next_ticket = 0
 
     def _conv_dict(self, items, what: str):
@@ -161,8 +218,15 @@ class StreamingSession:
     # ------------------------------------------------------------------
     # compiled batched path
     # ------------------------------------------------------------------
-    def _executable(self, shape, dtype) -> Callable:
-        key = (tuple(shape), str(dtype))
+    def _exec_key(self, shape, dtype) -> tuple:
+        # mode + precision + the resolved mixed-mode signature: a
+        # degraded executable must never collide with a clean one (nor
+        # fp32 with int8 on the same geometry)
+        sig = self.resolved.signature() if self.resolved is not None \
+            else ()
+        return (tuple(shape), str(dtype), self.mode, self.precision, sig)
+
+    def _executable(self, key: tuple) -> Callable:
         if key not in self._executables:
             def traced(x, weights, ops):
                 # runs only while jax traces: counts (re)compilations
@@ -187,38 +251,139 @@ class StreamingSession:
             self._executables[key] = jitted
         return self._executables[key]
 
+    def check_input(self, x, batched: bool = True) -> None:
+        """Reject a request whose shape/dtype/content can't be served.
+
+        The error names the expected spec — a serving boundary that
+        answers garbage shapes with XLA trace errors (or worse, a
+        silently mis-addressed schedule) is not a boundary."""
+        H, W, C = self.graph.in_shape
+        spec = (f"(B, {H}, {W}, {C})" if batched else f"({H}, {W}, {C})")
+        what = "run_batch" if batched else "submit"
+        want_nd = 4 if batched else 3
+        if getattr(x, "ndim", None) != want_nd \
+                or tuple(x.shape[-3:]) != (H, W, C):
+            raise ValueError(
+                f"{self.graph.name}.{what}: expected {spec} "
+                f"{self.graph.dtype} input, got shape "
+                f"{tuple(getattr(x, 'shape', ()))}")
+        dt = jnp.asarray(x).dtype
+        ok = (jnp.issubdtype(dt, jnp.floating)
+              or (self.precision == "int8" and dt == jnp.int8))
+        if not ok:
+            raise ValueError(
+                f"{self.graph.name}.{what}: expected {spec} "
+                f"{self.graph.dtype} input, got dtype {dt}")
+        if jnp.issubdtype(dt, jnp.floating) \
+                and not bool(jnp.isfinite(x).all()):
+            raise ValueError(
+                f"{self.graph.name}.{what}: input contains NaN/Inf — "
+                f"refusing to serve (expected finite {spec} "
+                f"{self.graph.dtype})")
+
+    def _dequant_out(self, y: jax.Array) -> jax.Array:
+        from repro.core.quantization import dequantize_int8
+        return dequantize_int8(y, self._qgraph.scales[self.graph.output])
+
     def run_batch(self, x: jax.Array) -> jax.Array:
         """(B, H, W, C) -> network output, through the cached executable.
 
         With ``donate=True`` (default) ``x``'s buffer is donated — treat
-        it as consumed after this call."""
-        fn = self._executable(x.shape, x.dtype)
-        self.calls += 1
-        return fn(x, self.weights, self._ops)
+        it as consumed after this call. Transient compile/launch
+        failures retry up to ``compile_retries`` times with exponential
+        backoff; a failed compile is evicted from the executable cache
+        immediately, so it can never poison later calls. With
+        ``guard=`` set, the output is checked post-execution and a
+        tripped batch re-runs on the reference path."""
+        if self.validate_inputs:
+            self.check_input(x, batched=True)
+        key = self._exec_key(x.shape, x.dtype)
+        attempts = 0
+        while True:
+            fn = self._executable(key)
+            try:
+                self.calls += 1
+                y = fn(x, self.weights, self._ops)
+                break
+            except Exception:
+                # evict FIRST: a half-built executable must not serve
+                # the next request (cache-poisoning fix, ISSUE 7)
+                self._executables.pop(key, None)
+                attempts += 1
+                if attempts > self.compile_retries:
+                    raise
+                self.compile_retries_used += 1
+                self._sleep(min(self.backoff_base * 2 ** (attempts - 1),
+                                1.0))
+        if self.guard is not None:
+            from repro.runtime.guard import guarded_output
+            weights = self.weights if self.precision == "fp32" else None
+            y, cause = guarded_output(self.resolved, y, x, weights,
+                                      self.guard,
+                                      raw_int8=self._guard_raw,
+                                      conv_fn=self._conv_fn,
+                                      conv_backend=self._conv_backend)
+            if cause is not None:
+                self.guard_trips += 1
+        if self._guard_raw:
+            y = self._dequant_out(y)
+        return y
 
     # ------------------------------------------------------------------
     # micro-batching queue: single-image requests share one compiled call
     # ------------------------------------------------------------------
-    def submit(self, image: jax.Array) -> int:
+    def submit(self, image: jax.Array,
+               deadline: Optional[float] = None) -> int:
         """Enqueue one (H, W, C) image; returns a ticket for result().
 
         Auto-flushes whenever a full ``max_batch`` accumulates, so a
-        steady stream of submits turns into back-to-back full batches."""
-        if image.ndim != 3:
+        steady stream of submits turns into back-to-back full batches.
+        With ``max_pending`` set, a full queue rejects the request with
+        ``Overloaded`` (explicit load-shedding — the alternative is an
+        unbounded queue whose latency grows without limit). ``deadline``
+        is a per-request budget in seconds: a request still queued when
+        it expires is dropped at the next flush and its ``result()``
+        raises ``DeadlineExceeded``."""
+        if self.validate_inputs:
+            self.check_input(image, batched=False)
+        elif getattr(image, "ndim", None) != 3:
             raise ValueError(f"submit() wants (H, W, C), got {image.shape}")
+        if self.max_pending is not None \
+                and len(self._pending) >= self.max_pending:
+            self.shed += 1
+            raise Overloaded(
+                f"{self.graph.name}: pending queue full "
+                f"({len(self._pending)}/{self.max_pending}) — request "
+                f"shed; retry after a flush")
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, image))
+        expiry = None if deadline is None else self._clock() + deadline
+        self._pending.append((ticket, image, expiry))
         if len(self._pending) >= self.max_batch:
             self.flush()
         return ticket
 
     def flush(self) -> None:
-        """Run all pending requests as one (padded) compiled batch."""
+        """Run all pending requests as one (padded) compiled batch.
+
+        Requests whose deadline already passed are dropped here —
+        spending a batch slot on an answer nobody is waiting for only
+        delays the live requests behind it."""
         if not self._pending:
             return
-        tickets = [t for t, _ in self._pending]
-        imgs = jnp.stack([im for _, im in self._pending])
+        now = self._clock()
+        live = []
+        for t, im, exp in self._pending:
+            if exp is not None and now > exp:
+                self._expired.add(t)
+                self.deadline_expired += 1
+            else:
+                live.append((t, im))
+        self._pending.clear()
+        if not live:
+            return
+        tickets = [t for t, _ in live]
+        imgs = jnp.stack([im for _, im in live])
         n = imgs.shape[0]
         if n < self.max_batch:
             # zero-pad to the session batch so the same executable serves
@@ -229,16 +394,21 @@ class StreamingSession:
         out = self.run_batch(imgs)
         for i, t in enumerate(tickets):
             self._results[t] = out[i]
-        self._pending.clear()
 
     def result(self, ticket: int) -> jax.Array:
         """Fetch (and forget) one request's output; flushes if pending.
 
         Results are held until fetched or discarded — a server dropping
         clients mid-flight must ``discard()`` abandoned tickets or the
-        result map grows without bound."""
+        result map grows without bound. A ticket dropped past its
+        deadline raises ``DeadlineExceeded``."""
         if ticket not in self._results:
             self.flush()
+        if ticket in self._expired:
+            self._expired.discard(ticket)
+            raise DeadlineExceeded(
+                f"ticket {ticket}: dropped — its deadline passed while "
+                f"queued")
         if ticket not in self._results:
             raise KeyError(
                 f"ticket {ticket}: unknown, already fetched, or discarded")
@@ -246,12 +416,43 @@ class StreamingSession:
 
     def discard(self, ticket: int) -> None:
         """Drop a pending or completed request without fetching it."""
-        self._pending = [(t, im) for t, im in self._pending if t != ticket]
+        self._pending = [(t, im, e) for t, im, e in self._pending
+                         if t != ticket]
         self._results.pop(ticket, None)
+        self._expired.discard(ticket)
 
     @property
     def pending(self) -> int:
         return len(self._pending)
+
+    def health(self) -> dict:
+        """Machine-readable serving health: per-node executor modes,
+        degradation events, and the guardrail counters (``serve
+        --health`` prints this)."""
+        h = {
+            "graph": self.graph.name,
+            "mode": self.mode,
+            "precision": self.precision,
+            "fallback": self.resolved is not None,
+            "guard": self.guard is not None,
+            "degradation_events": [],
+            "node_modes": {},
+            "counters": {
+                "shed": self.shed,
+                "deadline_expired": self.deadline_expired,
+                "guard_trips": self.guard_trips,
+                "compile_retries_used": self.compile_retries_used,
+                "compiles": self.compile_count,
+                "calls": self.calls,
+            },
+            "pending": len(self._pending),
+            "executables": len(self._executables),
+        }
+        if self.resolved is not None:
+            h["node_modes"] = dict(self.resolved.node_modes)
+            h["degradation_events"] = [e.as_dict()
+                                       for e in self.resolved.events]
+        return h
 
     def describe(self) -> str:
         lines = [f"StreamingSession[{self.graph.name}]: "
@@ -262,5 +463,15 @@ class StreamingSession:
                  f"max_batch={self.max_batch}, "
                  f"executables={len(self._executables)}, "
                  f"compiles={self.compile_count}, calls={self.calls}"]
+        if self.resolved is not None:
+            counts = self.resolved.mode_counts()
+            lines.append(
+                "  fallback: " +
+                ", ".join(f"{m}={n}" for m, n in sorted(counts.items())) +
+                f", degradations={len(self.resolved.events)}, "
+                f"guard={'on' if self.guard is not None else 'off'}, "
+                f"shed={self.shed}, expired={self.deadline_expired}, "
+                f"guard_trips={self.guard_trips}, "
+                f"retries={self.compile_retries_used}")
         lines += ["  " + p.describe() for p in self.programs]
         return "\n".join(lines)

@@ -1,0 +1,42 @@
+"""Graceful-degradation runtime (ISSUE 7): executor fallback chains,
+numeric guards, and the typed error taxonomy shared by the whole
+executor pipeline.
+
+Lazy re-exports: ``core/schedule.py`` imports ``repro.runtime.errors``
+at module load, and ``runtime/fallback.py`` imports ``core/streaming``
+— importing fallback eagerly here would close that cycle, so anything
+beyond the (dependency-free) error taxonomy resolves on first access.
+"""
+from repro.runtime.errors import (BudgetExceeded, DeadlineExceeded,
+                                  ExecutorError, FallbackExhausted,
+                                  KernelLaunchError, LoweringError,
+                                  NumericGuardTripped, Overloaded,
+                                  PlanError, RestartsExhausted)
+
+_LAZY = {
+    "FallbackChain": "repro.runtime.fallback",
+    "DegradationEvent": "repro.runtime.fallback",
+    "ResolvedGraph": "repro.runtime.fallback",
+    "resolve_graph": "repro.runtime.fallback",
+    "run_graph_degraded": "repro.runtime.fallback",
+    "degradation_event_count": "repro.runtime.fallback",
+    "reset_degradation_events": "repro.runtime.fallback",
+    "GuardConfig": "repro.runtime.guard",
+    "check_fp32": "repro.runtime.guard",
+    "check_int8": "repro.runtime.guard",
+    "guarded_output": "repro.runtime.guard",
+    "MODE_ORDER": "repro.runtime.fallback",
+    "INT8_MODE_ORDER": "repro.runtime.fallback",
+}
+
+__all__ = ["ExecutorError", "PlanError", "LoweringError", "BudgetExceeded",
+           "KernelLaunchError", "NumericGuardTripped", "FallbackExhausted",
+           "Overloaded", "DeadlineExceeded", "RestartsExhausted",
+           *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

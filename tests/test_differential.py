@@ -156,10 +156,74 @@ def test_graphkernel_int8_matches_megakernel_int8_grouped():
 
 
 if hypothesis is not None:
+    import hypothesis.strategies as st
+
     @hypothesis.given(streaming_graphs())
     @hypothesis.settings(max_examples=10, deadline=None)
     def test_random_graphs_all_executors_agree(g):
         _run_all_modes(g)
+
+    # -- fault-injection differential harness (ISSUE 7): one random
+    # fault per run, the degraded output must still match the
+    # interpreter and every degradation must be a structured event
+    @hypothesis.given(g=streaming_graphs(), data=st.data())
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_random_fault_degraded_output_matches_interpreter(g, data):
+        from repro.distributed.fault import FaultInjector
+        from repro.runtime import run_graph_degraded
+        plans = plan_graph(g, BUDGET)
+        ws = init_graph_weights(g, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (2,) + g.in_shape)
+        ref = run_graph_streamed(g, plans, x, ws, mode="interpret")
+        node = data.draw(st.sampled_from(
+            [n.name for n in g.conv_nodes()]), label="node")
+        kind = data.draw(st.sampled_from(
+            ["plan", "lower", "launch", "vmem"]), label="fault")
+        with FaultInjector() as fi:
+            if kind == "vmem":
+                fi.arm_vmem(128, node=node)   # nothing lowers into 128 B
+            else:
+                # mode=None: fire at the first probe of that stage,
+                # wherever the node currently sits in the chain
+                fi.arm(kind, node=node)
+            got, res = run_graph_degraded(g, plans, x, ws)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err <= 1e-4, (g.name, node, kind, err)
+        if fi.fired:
+            # the injected fault produced structured degradation events
+            # on the faulted node (chain-unit faults land on the head)
+            assert res.events, (node, kind, fi.fired)
+            assert any(e.node == node or node in e.cause
+                       for e in res.events)
+            # degradation moved DOWN the chain, one edge per event
+            for e in res.events:
+                assert e.to_mode in ("megakernel", "wave", "scan")
+                assert e.cause and e.retry >= 1
+
+    @hypothesis.given(g=streaming_graphs(allow_groups=False),
+                      data=st.data())
+    @hypothesis.settings(max_examples=6, deadline=None)
+    def test_random_fault_int8_stays_bit_exact(g, data):
+        from repro.distributed.fault import FaultInjector
+        from repro.runtime import run_graph_degraded
+        plans = plan_graph(g, BUDGET)
+        ws = init_graph_weights(g, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (2,) + g.in_shape)
+        qg = calibrate_graph(g, ws, x)
+        node = data.draw(st.sampled_from(
+            [n.name for n in g.conv_nodes()]), label="node")
+        stage = data.draw(st.sampled_from(["plan", "lower"]),
+                          label="stage")
+        with FaultInjector() as fi:
+            fi.arm(stage, node=node, mode="graphkernel")
+            got, res = run_graph_degraded(g, plans, x, ws,
+                                          precision="int8", qgraph=qg,
+                                          dequantize=False)
+        ref_q = quant_graph_reference_acts(qg, x)[g.output]
+        assert jnp.array_equal(got, ref_q), (g.name, node, stage)
+        if fi.fired:
+            assert res.node_modes[node] == "megakernel"
+            assert any(e.node == node for e in res.events)
 
     @hypothesis.given(streaming_graphs(allow_groups=False))
     @hypothesis.settings(max_examples=6, deadline=None)

@@ -1,0 +1,189 @@
+"""Deterministic fault injection (ISSUE 7): the FaultInjector's arming
+/ scoping / consumption semantics, the module hooks the executor stack
+calls, and the hardened restart-loop driver (exponential backoff +
+exception chaining)."""
+import pytest
+
+from repro.distributed.fault import (FaultInjector, active_injector,
+                                     apply_poison, effective_vmem,
+                                     fault_point, poison_signature,
+                                     run_with_restarts)
+from repro.runtime.errors import (KernelLaunchError, LoweringError,
+                                  PlanError, RestartsExhausted)
+
+
+# ---------------------------------------------------------------------------
+# Injector semantics
+# ---------------------------------------------------------------------------
+
+def test_hooks_are_noops_without_active_injector():
+    assert active_injector() is None
+    fault_point("plan", "c1", "megakernel")       # no raise
+    assert effective_vmem(1234) == 1234
+    assert poison_signature() == ()
+    assert apply_poison("c1", object()) is not None
+
+
+def test_stage_maps_to_taxonomy_error():
+    for stage, err in (("plan", PlanError), ("lower", LoweringError),
+                       ("launch", KernelLaunchError)):
+        with FaultInjector() as fi:
+            fi.arm(stage, node="c1")
+            with pytest.raises(err, match="c1: injected"):
+                fault_point(stage, "c1", "megakernel")
+        assert fi.fired == [(stage, "c1", "megakernel")]
+
+
+def test_unknown_stage_rejected_at_arm_time():
+    fi = FaultInjector()
+    with pytest.raises(ValueError, match="unknown fault stage"):
+        fi.arm("compile")
+
+
+def test_node_and_mode_scoping():
+    with FaultInjector() as fi:
+        fi.arm("plan", node="c2", mode="graphkernel")
+        fault_point("plan", "c1", "graphkernel")       # other node: no-op
+        fault_point("plan", "c2", "megakernel")        # other mode: no-op
+        fault_point("lower", "c2", "graphkernel")      # other stage: no-op
+        with pytest.raises(PlanError):
+            fault_point("plan", "c2", "graphkernel")
+    assert fi.fired == [("plan", "c2", "graphkernel")]
+
+
+def test_times_consumed_then_dormant():
+    with FaultInjector() as fi:
+        fi.arm("launch", node="c1", times=2)
+        for _ in range(2):
+            with pytest.raises(KernelLaunchError):
+                fault_point("launch", "c1", "megakernel")
+        fault_point("launch", "c1", "megakernel")      # budget spent
+    assert len(fi.fired) == 2
+
+
+def test_injection_is_deterministic_program_order():
+    """Same arming, same call sequence -> identical fire logs."""
+    def drive():
+        with FaultInjector() as fi:
+            fi.arm("plan", node="a")
+            fi.arm("lower", node="b", times=2)
+            log = []
+            for stage, node in [("plan", "a"), ("lower", "b"),
+                                ("plan", "a"), ("lower", "b"),
+                                ("lower", "b")]:
+                try:
+                    fault_point(stage, node, "wave")
+                    log.append("ok")
+                except (PlanError, LoweringError):
+                    log.append("fire")
+            return log, list(fi.fired)
+    assert drive() == drive()
+    assert drive()[0] == ["fire", "fire", "ok", "fire", "ok"]
+
+
+def test_single_active_injector_enforced():
+    with FaultInjector():
+        with pytest.raises(RuntimeError, match="already active"):
+            FaultInjector().__enter__()
+    assert active_injector() is None
+
+
+def test_vmem_arm_scoped_and_default_passthrough():
+    with FaultInjector() as fi:
+        fi.arm_vmem(256, node="c3")
+        assert effective_vmem(10 ** 6, "c3") == 256
+        assert effective_vmem(10 ** 6, "c1") == 10 ** 6
+        assert effective_vmem(None, "c1") is None
+
+
+def test_nan_arm_is_sticky_and_keys_the_signature():
+    import jax.numpy as jnp
+    with FaultInjector() as fi:
+        fi.arm_nan("c2")
+        assert poison_signature() == ("c2",)
+        y = jnp.ones((2, 3))
+        for _ in range(3):                      # sticky: every apply fires
+            assert bool(jnp.isnan(apply_poison("c2", y)).any())
+        assert not bool(jnp.isnan(apply_poison("c1", y)).any())
+        fi.disarm_nan("c2")
+        assert poison_signature() == ()
+        assert not bool(jnp.isnan(apply_poison("c2", y)).any())
+    assert poison_signature() == ()
+
+
+# ---------------------------------------------------------------------------
+# run_with_restarts: deterministic backoff + chained final exception
+# ---------------------------------------------------------------------------
+
+def test_run_with_restarts_backoff_sequence_is_exponential():
+    sleeps = []
+    calls = {"n": 0}
+
+    def make_runner():
+        def run():
+            calls["n"] += 1
+            if calls["n"] < 4:
+                raise RuntimeError(f"boom {calls['n']}")
+            return 41 + 1
+        return run
+
+    out = run_with_restarts(make_runner, max_restarts=3,
+                            backoff_base=0.01, backoff_cap=1.0,
+                            sleep_fn=sleeps.append)
+    assert out == 42
+    assert sleeps == [0.01, 0.02, 0.04]
+
+
+def test_run_with_restarts_backoff_respects_cap():
+    sleeps = []
+    calls = {"n": 0}
+
+    def make_runner():
+        def run():
+            calls["n"] += 1
+            if calls["n"] < 6:
+                raise RuntimeError("boom")
+            return 0
+        return run
+
+    run_with_restarts(make_runner, max_restarts=5, backoff_base=0.01,
+                      backoff_cap=0.03, sleep_fn=sleeps.append)
+    assert sleeps == [0.01, 0.02, 0.03, 0.03, 0.03]
+
+
+def test_run_with_restarts_chains_final_exception():
+    root = ValueError("the real failure")
+
+    def make_runner():
+        def run():
+            raise root
+        return run
+
+    with pytest.raises(RestartsExhausted) as ei:
+        run_with_restarts(make_runner, max_restarts=2,
+                          sleep_fn=lambda _: None)
+    # the real traceback survives as __cause__ (raise ... from e), and
+    # the message names the budget and the final error
+    assert ei.value.__cause__ is root
+    assert "gave up after 2 restarts" in str(ei.value)
+    assert "ValueError: the real failure" in str(ei.value)
+    # RestartsExhausted stays a RuntimeError for pre-existing callers
+    assert isinstance(ei.value, RuntimeError)
+
+
+def test_run_with_restarts_counts_and_reports_each_restart():
+    seen = []
+    calls = {"n": 0}
+
+    def make_runner():
+        def run():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError(f"fail {calls['n']}")
+            return 7
+        return run
+
+    assert run_with_restarts(make_runner, max_restarts=3,
+                             on_restart=lambda k, e: seen.append((k, str(e))),
+                             sleep_fn=lambda _: None) == 7
+    assert seen == [(1, "fail 1"), (2, "fail 2")]

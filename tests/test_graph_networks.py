@@ -146,6 +146,46 @@ def test_graph_cache_no_collision_on_shared_layer_geometry():
         y_resid - jnp.maximum(y_chain + x, 0))) < 1e-5
 
 
+def test_executor_cache_keys_mode_precision_and_degradation():
+    """ISSUE 7 satellite: on the SAME graph geometry, each executor
+    mode, each precision, and each degraded resolution gets its own
+    cache entry — a wave executable must never serve a scan request,
+    an fp32 one an int8 request, or a degraded trace a clean run."""
+    from repro.distributed.fault import FaultInjector
+    from repro.runtime import run_graph_degraded
+    l1 = ConvLayer("c1", 12, 12, 4, 4, 3, pad=1)
+    l2 = ConvLayer("c2", 12, 12, 4, 4, 3, pad=1)
+    g = NetworkGraph("g", (12, 12, 4), (
+        GraphNode("c1", "conv", (INPUT,), layer=l1),
+        GraphNode("c2", "conv", ("c1",), layer=l2, relu=False)), "c2")
+    plans = plan_graph(g, BUDGET)
+    ws = init_graph_weights(g, jax.random.key(3))
+    x = jax.random.normal(jax.random.key(4), (1, 12, 12, 4))
+    clear_executor_cache()
+    run_graph_streamed(g, plans, x, ws, mode="wave")
+    n = executor_cache_size()
+    run_graph_streamed(g, plans, x, ws, mode="scan")
+    assert executor_cache_size() == n + 1, "mode must be in the key"
+    n = executor_cache_size()
+    qg = calibrate_graph(g, ws, x)
+    run_graph_streamed(g, plans, x, ws, mode="megakernel",
+                       precision="int8", qgraph=qg)
+    assert executor_cache_size() > n, "precision must be in the key"
+    # a clean fallback resolution and a degraded one compile separately
+    n = executor_cache_size()
+    run_graph_degraded(g, plans, x, ws)
+    n_clean = executor_cache_size()
+    assert n_clean == n + 1
+    with FaultInjector() as fi:
+        fi.arm("plan", node="c1", mode="graphkernel")
+        run_graph_degraded(g, plans, x, ws)
+    assert executor_cache_size() == n_clean + 1, \
+        "degraded signature must be in the key"
+    # replaying the clean resolution hits the cache (no growth)
+    run_graph_degraded(g, plans, x, ws)
+    assert executor_cache_size() == n_clean + 1
+
+
 # ---------------------------------------------------------------------------
 # Buffer liveness: measured peak activation bytes drop on ResNet-18
 # ---------------------------------------------------------------------------

@@ -287,3 +287,47 @@ def test_gate_rows_without_launches_meta_unaffected():
     for r in base["records"]:
         r["meta"].pop("launches", None)
     assert gate.compare(base, _payload_graphkernel()) == []
+
+
+# ---------------------------------------------------------------------------
+# Zero-degradation rule (ISSUE 7): clean bench runs must report zero
+# fallback-runtime degradation events
+# ---------------------------------------------------------------------------
+
+def _payload_degradation(events):
+    p = _payload(100, 300, 200)
+    p["records"].append(
+        {"name": "streaming_alexnet_graphkernel", "us_per_call": 500,
+         "meta": {"launches": 1, "dram_traffic_bytes": 500,
+                  "degradation_events": events}})
+    return p
+
+
+def test_gate_zero_degradation_passes():
+    base = _payload_degradation(0)
+    assert gate.compare(base, _payload_degradation(0)) == []
+
+
+def test_gate_fails_on_degradation_events_in_current_run():
+    base = _payload_degradation(0)
+    fails = gate.compare(base, _payload_degradation(2))
+    assert len(fails) == 1
+    assert "2 degradation event(s)" in fails[0]
+    assert "graphkernel" in fails[0]
+
+
+def test_gate_degradation_rule_covers_rows_missing_from_baseline():
+    """The rule gates the CURRENT run only — a new row (absent from an
+    old baseline) with degradations still fails."""
+    base = _payload(100, 300, 200)       # baseline predates the meta key
+    fails = gate.compare(base, _payload_degradation(1))
+    assert any("degradation" in f for f in fails)
+
+
+def test_gate_rows_without_degradation_meta_unaffected():
+    """Old measurement files (no degradation_events key) keep passing."""
+    base = _payload_degradation(0)
+    cur = _payload_degradation(0)
+    for r in cur["records"]:
+        r["meta"].pop("degradation_events", None)
+    assert gate.compare(base, cur) == []
