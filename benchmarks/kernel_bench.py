@@ -60,4 +60,47 @@ def run() -> list[str]:
     us_r = _time(jnp.matmul, a, b)
     rows.append(f"kernel_quant_matmul,{us_k:.0f},interp_vs_fp32_x"
                 f"{us_k/us_r:.1f}")
+    rows.append(launch_overhead_row())
     return rows
+
+
+def launch_overhead_row(n: int = 32) -> str:
+    """Launch-overhead microbenchmark (ISSUE 8): ``n`` separate
+    dispatches of a tiny jitted ``pallas_call`` (a Python loop over the
+    cached executable — each iteration pays the full fixed
+    dispatch/launch cost) vs ONE dispatch replaying the same ``n``
+    steps as a grid. The measured gap is the per-launch fixed cost the
+    megakernel/graphkernel fusion and the batch-axis grid dimension
+    amortise — the quantity behind every "fewer launches" claim in
+    BENCH_streaming.json, measured on a body too trivial for compute to
+    matter. (Both sides must sit OUTSIDE a shared jit: wrapping the n
+    calls in one jit lets XLA fuse them back into a single launch,
+    which is exactly the wave/megakernel optimisation this row prices.)
+    """
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.common import pallas_interpret_default
+    interpret = pallas_interpret_default()
+
+    def add1(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + 1.0
+
+    xs = jnp.zeros((n, 8, 128), jnp.float32)
+    one = jax.jit(pl.pallas_call(
+        add1, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        interpret=interpret))
+
+    def many(x):
+        return [one(x[i]) for i in range(n)]
+
+    fused = jax.jit(pl.pallas_call(
+        add1, grid=(n,),
+        in_specs=[pl.BlockSpec((1, 8, 128), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, 8, 128), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 8, 128), jnp.float32),
+        interpret=interpret))
+    us_many = _time(many, xs)
+    us_fused = _time(fused, xs)
+    return (f"kernel_launch_overhead,{us_many:.0f},launches={n} "
+            f"fused={us_fused:.0f}us amortization_x{us_many/us_fused:.1f} "
+            f"per_launch_overhead={(us_many-us_fused)/n:.1f}us")

@@ -29,6 +29,19 @@ each network gets a baseline-present rule (rows in the committed
 baseline must appear in the current run — the bench must not silently
 stop measuring a network) and the DRAM-traffic no-growth rule per row.
 
+Batch-throughput + autotune ratchets (ISSUE 8): ``*_batch<B>`` rows
+form per-(network, executor) curve families; per network, the best
+family's batched rows (B >= 16) must reach ``--batch-speedup``
+(default 4.0) times that family's batch=1 images/second — the batch
+grid axis has to actually amortise launch overhead, or the feature is
+dead weight. And the
+``streaming_alexnet_auto`` row (the measured autotuner's mixed-mode
+plan) must not lose to the best fixed-mode row of its group — a tuner
+that picks plans worse than not tuning fails the gate. Both follow the
+int8 rule's shape: strict on the committed baseline, relative
+``--threshold`` slack on current runs, and once a family/row is in the
+baseline a current run must keep producing it.
+
 The int8 speedup gate (ISSUE 4 acceptance): when the baseline carries
 both megakernel rows, the *committed* int8/fp32 throughput ratio must
 be at least ``--int8-speedup`` (default 1.2) — the quantized datapath
@@ -57,6 +70,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 
 # benchmark groups: records sharing a normalising sum
@@ -73,7 +87,7 @@ GROUPS = ("streaming_conv1", "streaming_alexnet")
 # their acceptance artifacts are the launches / traffic / presence
 # rules below
 SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool",
-                 "_graphkernel")
+                 "_graphkernel", "_auto")
 
 # per-network graph rows (ISSUE 5): VGG-16 / ResNet-18 stacks. These
 # run few-rep at reduced scale, so their times are NOT share-gated;
@@ -83,11 +97,36 @@ SKIP_SUFFIXES = ("_interpreted", "_direct", "_pallas", "_fused_pool",
 # (b) the no-DRAM-traffic-growth rule per row (traffic is a pure
 # function of the plans at the bench's fixed scale, so any increase is
 # a planner/lowering regression, not noise)
-NETWORK_PREFIXES = ("streaming_vgg16", "streaming_resnet18")
+NETWORK_PREFIXES = ("streaming_vgg16", "streaming_resnet18",
+                    "streaming_facedet")
 
 # the int8 acceptance ratio: fp32 megakernel us / int8 megakernel us
 FP32_MEGA_ROW = "streaming_alexnet_megakernel"
 INT8_MEGA_ROW = "streaming_alexnet_megakernel_int8"
+
+# mode="auto" ratchet (ISSUE 8): the measured autotuner's mixed-mode
+# plan must not lose to the best fixed-mode row of the same group —
+# otherwise the tuner is picking plans worse than not tuning at all.
+# The committed baseline is held strictly; current runs get the same
+# relative --threshold slack as every other time rule
+AUTO_ROW = "streaming_alexnet_auto"
+AUTO_FIXED_ROWS = ("streaming_alexnet_scan", "streaming_alexnet_wave",
+                   "streaming_alexnet_megakernel",
+                   "streaming_alexnet_graphkernel")
+
+# batch-axis throughput ratchet (ISSUE 8): rows named *_batch<B> form
+# per-(network, executor) curve families; per NETWORK, the best
+# family's batched rows (B >= 16) must reach --batch-speedup x that
+# family's batch=1 throughput — one executor's curve saturating early
+# (megakernel VMEM clamps at big blocks) is fine as long as the
+# network has a curve that scales. Like the int8 rule: strict on the
+# committed baseline, threshold slack on current runs. Only the curve
+# families the bench emits are subject — they run at serving scale
+# (tiny frames, deep stacks), the regime the batch grid axis targets;
+# nameplate-scale rows are compute-bound on CPU hosts and carry no
+# _batch suffix
+_BATCH_ROW = re.compile(r"^(.*)_batch(\d+)$")
+_EXEC_SUFFIX = re.compile(r"_(scan|wave|megakernel|graphkernel)$")
 
 
 def _records(payload: dict) -> dict:
@@ -144,9 +183,69 @@ def _int8_ratio(recs: dict) -> "float | None":
     return None
 
 
+def _throughput(rec: dict) -> float:
+    """Images/second of one record: the explicit meta field when
+    present, else derived from us_per_call and the batch meta."""
+    meta = rec.get("meta", {})
+    if meta.get("throughput_imgs_s"):
+        return float(meta["throughput_imgs_s"])
+    return meta.get("batch", 1) / (rec["us_per_call"] * 1e-6)
+
+
+def _batch_families(recs: dict) -> dict:
+    """Group *_batch<B> rows: family name -> {batch: record}."""
+    fams: dict = {}
+    for name, rec in recs.items():
+        m = _BATCH_ROW.match(name)
+        if m:
+            fams.setdefault(m.group(1), {})[int(m.group(2))] = rec
+    return fams
+
+
+def _batch_speedup(family: "dict[int, dict]") -> "float | None":
+    """Best batched (batch >= 16) throughput gain over the family's
+    batch=1 row; None when either end of the curve is missing."""
+    if 1 not in family:
+        return None
+    big = [b for b in family if b >= 16]
+    if not big:
+        return None
+    base = _throughput(family[1])
+    return max(_throughput(family[b]) for b in big) / base
+
+
+def _network_batch_gains(recs: dict) -> "dict[str, float]":
+    """Per NETWORK, the best complete curve family's batched gain:
+    families group by their row prefix minus the executor token, so
+    ``streaming_facedet_wave`` and ``streaming_facedet_megakernel``
+    both score the ``streaming_facedet`` network. Networks whose every
+    family is incomplete don't appear (nothing to ratchet)."""
+    gains: "dict[str, float]" = {}
+    for fam, rows in _batch_families(recs).items():
+        gain = _batch_speedup(rows)
+        if gain is None:
+            continue
+        net = _EXEC_SUFFIX.sub("", fam)
+        gains[net] = max(gain, gains.get(net, 0.0))
+    return gains
+
+
+def _auto_vs_fixed(recs: dict) -> "tuple[float, str, float] | None":
+    """(auto us, best fixed row, best fixed us) when gateable."""
+    if AUTO_ROW not in recs:
+        return None
+    fixed = [(recs[n]["us_per_call"], n) for n in AUTO_FIXED_ROWS
+             if n in recs]
+    if not fixed:
+        return None
+    best_us, best_name = min(fixed)
+    return (recs[AUTO_ROW]["us_per_call"], best_name, best_us)
+
+
 def compare(baseline: dict, current: dict, threshold: float = 0.20,
             absolute: bool = False,
-            int8_speedup: float = 1.2) -> list[str]:
+            int8_speedup: float = 1.2,
+            batch_speedup: float = 4.0) -> list[str]:
     """Return a list of failure strings (empty = gate passes)."""
     base, cur = _records(baseline), _records(current)
     shared = [n for n in _gated(base) if n in cur]
@@ -241,6 +340,56 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20,
                 f"{INT8_MEGA_ROW}: measured int8 speedup {c_ratio:.2f}x "
                 f"< {floor:.2f}x floor ({int8_speedup:.2f}x required "
                 f"with {threshold:.0%} noise slack)")
+    # batch-axis throughput ratchet (ISSUE 8): per network, the best
+    # complete *_batch<B> curve family must show its batched rows
+    # (B >= 16) reaching --batch-speedup x its batch=1 throughput.
+    # Committed baseline strict; current runs get the relative
+    # threshold slack. A network gated in the baseline must keep
+    # producing a complete curve (a batch=1 anchor AND a B >= 16 row
+    # in at least one family) or the ratchet silently disarms
+    b_gains, c_gains = _network_batch_gains(base), _network_batch_gains(cur)
+    for net in sorted(b_gains):
+        if b_gains[net] < batch_speedup:
+            failures.append(
+                f"{net}: committed batched throughput gain "
+                f"{b_gains[net]:.2f}x < required {batch_speedup:.2f}x "
+                f"over batch=1")
+        if net not in c_gains:
+            failures.append(
+                f"{net}: batch curves present in baseline but incomplete "
+                f"in the current run — the batched-throughput gate "
+                f"cannot be evaluated")
+            continue
+        floor = batch_speedup / (1.0 + threshold)
+        if c_gains[net] < floor:
+            failures.append(
+                f"{net}: measured batched throughput gain "
+                f"{c_gains[net]:.2f}x < {floor:.2f}x floor "
+                f"({batch_speedup:.2f}x required with {threshold:.0%} "
+                f"noise slack)")
+    # mode="auto" ratchet (ISSUE 8): the tuned plan must not lose to
+    # the best fixed-mode row — strict on the committed baseline,
+    # threshold slack on current runs; once committed, the auto row
+    # must keep appearing
+    b_auto = _auto_vs_fixed(base)
+    if b_auto is not None:
+        auto_us, best_name, best_us = b_auto
+        if auto_us > best_us:
+            failures.append(
+                f"{AUTO_ROW}: committed tuned plan {auto_us:.0f}us slower "
+                f"than best fixed mode {best_name} ({best_us:.0f}us)")
+        c_auto = _auto_vs_fixed(cur)
+        if c_auto is None:
+            failures.append(
+                f"{AUTO_ROW}: auto row present in baseline but the "
+                f"current run cannot evaluate the autotune ratchet")
+        else:
+            auto_us, best_name, best_us = c_auto
+            if auto_us > best_us * (1.0 + threshold):
+                failures.append(
+                    f"{AUTO_ROW}: measured tuned plan {auto_us:.0f}us > "
+                    f"best fixed mode {best_name} {best_us:.0f}us + "
+                    f"{threshold:.0%} slack")
     return failures
 
 
@@ -258,6 +407,10 @@ def main(argv=None) -> None:
     ap.add_argument("--int8-speedup", type=float, default=1.2,
                     help="required int8/fp32 megakernel throughput ratio "
                          "when both rows are present (default 1.2)")
+    ap.add_argument("--batch-speedup", type=float, default=4.0,
+                    help="required batched (batch>=16) throughput gain "
+                         "over batch=1 for every *_batch<B> curve family "
+                         "(default 4.0)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -267,7 +420,8 @@ def main(argv=None) -> None:
             currents.append(json.load(f))
     current = merge_min(currents)
     failures = compare(baseline, current, args.threshold, args.absolute,
-                       int8_speedup=args.int8_speedup)
+                       int8_speedup=args.int8_speedup,
+                       batch_speedup=args.batch_speedup)
     compared = [n for n in _gated(_records(baseline))
                 if n in _records(current)]
     if failures:

@@ -488,7 +488,8 @@ class FusedChain:
 def fusible_chains(graph: NetworkGraph, kprogs,
                    *, vmem_budget: Optional[int] = None,
                    quantized: bool = False,
-                   only: Optional[frozenset] = None) -> Tuple[FusedChain, ...]:
+                   only: Optional[frozenset] = None,
+                   batch_block: int = 1) -> Tuple[FusedChain, ...]:
     """Greedily partition the conv schedule into fusible chains.
 
     A chain grows over consecutive conv nodes (fused residual adds ride
@@ -516,6 +517,13 @@ def fusible_chains(graph: NetworkGraph, kprogs,
     single-node chains, break every run they sit in, and need no entry
     in ``kprogs`` (a degraded node may have none — its per-layer
     lowering is what failed).
+
+    ``batch_block`` sizes the budget check for chains meant to process
+    that many images per grid step (ISSUE 8) — arena slots and the
+    accumulator scale per-image, weights are batch-shared. The default
+    (1) keeps chain membership batch-invariant: callers that batch a
+    per-image-fused chain clamp its kernel's block instead
+    (``streaming._chain_batch_block``).
     """
     from repro.core.schedule import (DEFAULT_VMEM_BUDGET, ChainNodeSpec,
                                      chain_vmem_bytes)
@@ -559,7 +567,8 @@ def fusible_chains(graph: NetworkGraph, kprogs,
             if s.residual_value is not None \
                     and s.residual_value not in values:
                 break
-            if chain_vmem_bytes(cur + [s], quantized) > budget:
+            if chain_vmem_bytes(cur + [s], quantized,
+                                batch_block=batch_block) > budget:
                 break
             cur.append(s)
             values.add(s.out_value)

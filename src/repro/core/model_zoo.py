@@ -150,6 +150,39 @@ def alexnet_graph(name: str = "alexnet") -> NetworkGraph:
     return chain_graph(ALEXNET_STACK, name=name)
 
 
+def facedet_graph(in_hw: int = 16, width: int = 8, depth: int = 14,
+                  name: str = "facedet") -> NetworkGraph:
+    """Compact sliding-window detector — the paper's §7 deployment
+    shape (a small face-detection CNN classifying tiny frames at high
+    request rate). A strided 3x3 stem with a 2x2 pool knocks the window
+    down fast, a second pool follows the first trunk pair, then a deep
+    trunk of alternating 1x1/3x3 convs runs at tiny spatial dims. At
+    this scale per-image conv compute is small and the per-launch /
+    per-dispatch overhead of ``depth`` kernels dominates a batch=1
+    forward — the regime the batch-axis grid dimension (ISSUE 8) exists
+    for, and the batched-throughput curve the bench gates rides this
+    graph."""
+    if depth < 4:
+        raise ValueError(f"facedet: depth {depth} < 4")
+    layers: List[ConvLayer] = []
+    h, c = in_hw, 3
+    stem = ConvLayer("c1", h, h, c, width, 3, stride=2, pad=1, pool=2)
+    layers.append(stem)
+    h, c = stem.out_h // 2, width
+    for i in range(2, depth + 1):
+        pool = 2 if i == 3 else 1
+        out_c = 4 * width if i > 3 else 2 * width
+        k = 3 if i % 2 else 1
+        l = ConvLayer(f"c{i}", h, h, c, out_c, k,
+                      pad=(1 if k == 3 else 0), pool=pool)
+        layers.append(l)
+        h, c = l.out_h // pool, out_c
+        if h < 1:
+            raise ValueError(f"facedet: input {in_hw} too small for "
+                             f"depth {depth}")
+    return chain_graph(tuple(layers), name=name)
+
+
 def network_graph(name: str, **kw) -> NetworkGraph:
     """Registry entry point for serving/benchmarks: name -> graph."""
     try:
@@ -163,4 +196,5 @@ NETWORKS = {
     "alexnet": alexnet_graph,
     "vgg16": vgg16_graph,
     "resnet18": resnet18_graph,
+    "facedet": facedet_graph,
 }

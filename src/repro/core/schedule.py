@@ -436,6 +436,13 @@ class KernelProgram:
     n_chain: int            # grid steps per tile chain
     n_tiles: int
     table: Tuple[Tuple[Tuple[int, ...], ...], ...]
+    # batch axis as a first-class grid dimension (ISSUE 8): images
+    # processed per grid step. The kernel grid iterates (batch-block,
+    # tile, chain); a runtime batch B launches ceil(B / batch_block)
+    # batch blocks (``batch_grid``). The default 1 keeps per-image
+    # working sets; batch-aware lowering raises it until the per-step
+    # VMEM working set fills the budget.
+    batch_block: int = 1
 
     def operand_table(self) -> np.ndarray:
         """(n_chain, n_tiles, 8) int32 SMEM operand table."""
@@ -459,16 +466,18 @@ class KernelProgram:
 
     @property
     def vmem_bytes(self) -> int:
-        """Per-grid-step fp32 working set (batch 1): accumulator +
-        input-window chunk + weight chunk (+ the residual block when the
-        epilogue adds one) — what ``vmem_budget`` bounds."""
+        """Per-grid-step fp32 working set: ``batch_block`` images'
+        accumulators + input-window chunks (+ residual blocks when the
+        epilogue adds them) plus the batch-shared weight chunk — what
+        ``vmem_budget`` bounds."""
         l = self.wave.program.layer
-        return 4 * (self.acc_h * self.acc_w * self.out_c_pad
-                    + self.ih * self.iw * self.c_width
+        return 4 * (self.batch_block
+                    * (self.acc_h * self.acc_w * self.out_c_pad
+                       + self.ih * self.iw * self.c_width
+                       + (self.blk_h * self.blk_w * self.out_c_pad
+                          if self.residual else 0))
                     + l.kernel * l.kernel * self.fan_width
-                    * self.out_c_pad
-                    + (self.blk_h * self.blk_w * self.out_c_pad
-                       if self.residual else 0))
+                    * self.out_c_pad)
 
     @property
     def geometry(self):
@@ -480,7 +489,7 @@ class KernelProgram:
             self.ih, self.iw, self.acc_h, self.acc_w, self.blk_h, self.blk_w,
             self.c_width, self.fan_width, self.out_c_pad, self.groups,
             self.pool, self.pool_stride, self.out_h, self.out_w,
-            self.chain_chunk, self.n_chain)
+            self.chain_chunk, self.n_chain, self.batch_block)
 
     def describe(self) -> str:
         l = self.wave.program.layer
@@ -489,6 +498,8 @@ class KernelProgram:
         fused += "+residual" if self.residual else ""
         chunk = f" (x{self.chain_chunk} waves/step)" \
             if self.chain_chunk > 1 else ""
+        chunk += f" x{self.batch_block} imgs/step" \
+            if self.batch_block > 1 else ""
         return (f"{l.name}: 1 pallas_call, grid {self.n_tiles}x"
                 f"{self.n_chain} (tile x chain{chunk}), acc {self.acc_h}x"
                 f"{self.acc_w}x{self.out_c_pad} VMEM"
@@ -496,10 +507,28 @@ class KernelProgram:
                 f"{KERNEL_OP_COLS} SMEM")
 
 
+def batch_grid(batch: int, batch_block: int) -> Tuple[int, int]:
+    """Split a runtime batch into ``(n_blocks, block)`` grid factors.
+
+    The kernels iterate the batch axis as their outermost grid
+    dimension in blocks of ``block = min(batch_block, batch)`` images;
+    ragged batches are zero-padded up to ``n_blocks * block`` by the
+    launchers (zero images convolve to exact zeros) and cropped on
+    return. Per-image independence of the im2col matmul rows makes the
+    split invisible numerically — only VMEM footprint and launch count
+    change.
+    """
+    if batch < 1:
+        raise ValueError(f"batch {batch} < 1")
+    bb = max(1, min(int(batch_block), batch))
+    return _ceil_div(batch, bb), bb
+
+
 def lower_kernel_program(
         wprog: WaveProgram, *, relu: bool = False, fuse_pool: bool = False,
         residual: bool = False,
-        vmem_budget: "int | None" = DEFAULT_VMEM_BUDGET) -> KernelProgram:
+        vmem_budget: "int | None" = DEFAULT_VMEM_BUDGET,
+        batch_block: int = 1) -> KernelProgram:
     """Lower a WaveProgram to the megakernel's static operand tables.
 
     ``relu`` bakes max(x, 0) into the epilogue; ``fuse_pool`` additionally
@@ -510,7 +539,11 @@ def lower_kernel_program(
     with ``fuse_pool``). ``vmem_budget`` bounds the per-step VMEM
     working set (accumulator + input-window chunk + weight chunk, fp32)
     used to coarsen long partial-sum chains; ``None`` keeps the
-    schedule's 1:1 wave chain (bit-faithful replay).
+    schedule's 1:1 wave chain (bit-faithful replay). ``batch_block``
+    asks for that many images per grid step (ISSUE 8); it is clamped so
+    a single-wave step still fits the budget — the batch-scaled terms
+    (accumulator, input window, residual block) are per image, the
+    weight chunk is shared.
     """
     g = wprog.program
     l, plan = g.layer, g.plan
@@ -545,14 +578,26 @@ def lower_kernel_program(
         pad_h, pad_w = g.pad_h, g.pad_w
         out_h, out_w = l.out_h, l.out_w
 
+    # batch-block clamp: bb images per grid step must fit the budget
+    # even at chunk = 1 — the weight chunk is batch-shared, everything
+    # else (accumulator, input window, residual block) scales per image
+    bb = max(1, int(batch_block))
+    if bb > 1 and vmem_budget is not None:
+        w1 = l.kernel * l.kernel * wprog.fan_width * g.out_c_pad * 4
+        per_img = 4 * (acc_h * acc_w * g.out_c_pad
+                       + ih * iw * wprog.c_width
+                       + (blk_h * blk_w * g.out_c_pad if residual else 0))
+        fit = (vmem_budget - w1) // per_img if vmem_budget > w1 else 1
+        bb = max(1, min(bb, fit))
+
     # chain coarsening: fold `chunk` consecutive waves per grid step so
     # the per-step working set fills (but stays under) the kernel's VMEM
     # budget — the planner's feasibility math re-run at the VMEM budget
     # point. Grouped layers have single-step chains; nothing to fold.
     chunk = 1
     if wprog.n_waves > 1 and vmem_budget is not None:
-        acc_bytes = acc_h * acc_w * g.out_c_pad * 4
-        per_wave = (ih * iw * wprog.c_width * 4
+        acc_bytes = bb * acc_h * acc_w * g.out_c_pad * 4
+        per_wave = (bb * ih * iw * wprog.c_width * 4
                     + l.kernel * l.kernel * wprog.fan_width
                     * g.out_c_pad * 4)
         if vmem_budget > acc_bytes + per_wave:
@@ -605,7 +650,7 @@ def lower_kernel_program(
         out_c_pad=g.out_c_pad, groups=l.groups,
         pool=pool, pool_stride=ps, out_h=out_h, out_w=out_w,
         chain_chunk=chunk, n_chain=n_chain, n_tiles=wprog.n_tiles,
-        table=tuple(table))
+        table=tuple(table), batch_block=bb)
     validate_kernel_program(kp)
     return kp
 
@@ -938,6 +983,10 @@ class GraphKernelProgram:
     b_max: int
     b_total: int
     table: Tuple[Tuple[int, ...], ...]
+    # images per grid step (ISSUE 8): the fused kernel's grid becomes
+    # (batch-block, flat step) — each batch block replays the whole
+    # chain through its own arena/accumulator slice
+    batch_block: int = 1
 
     def operand_table(self) -> np.ndarray:
         """(total_steps, 14) int32 SMEM operand table."""
@@ -962,9 +1011,10 @@ class GraphKernelProgram:
 
     @property
     def vmem_bytes(self) -> int:
-        """Per-step fp32 working-set model (batch 1): arena slots +
-        shared accumulator + the flat-buffer windows + input window +
-        output block. Deliberately precision-independent (4 B/elem)
+        """Per-step fp32 working-set model: arena slots, shared
+        accumulator, input window and output block scale per image
+        (``batch_block``); the flat weight/bias windows are
+        batch-shared. Deliberately precision-independent (4 B/elem)
         so fp32 and int8 partition a graph identically."""
         h0 = self.nodes[0].kp
         x_elems = (h0.pad_h * h0.pad_w * h0.in_c_kpad
@@ -972,14 +1022,17 @@ class GraphKernelProgram:
                    else h0.ih * h0.iw * h0.c_width)
         kl = self.out_kp
         ah, aw, ac = self.acc_shape()
-        return (self.arena.slot_bytes_f32
-                + 4 * (ah * aw * ac + self.w_max + self.b_max + x_elems
-                       + kl.blk_h * kl.blk_w * kl.out_c_pad))
+        bb = self.batch_block
+        return (bb * self.arena.slot_bytes_f32
+                + 4 * (bb * (ah * aw * ac + x_elems
+                             + kl.blk_h * kl.blk_w * kl.out_c_pad)
+                       + self.w_max + self.b_max))
 
     @property
     def geometry(self):
         """Everything the compiled kernel closure bakes in."""
         return (("graphkernel", self.quantized, self.input_in_arena,
+                 self.batch_block,
                  self.arena.slots, self.arena.slot_shapes,
                  tuple((v.birth, v.death, v.shape, v.pad)
                        for v in self.arena.values),
@@ -998,12 +1051,15 @@ class GraphKernelProgram:
 
 
 def chain_vmem_bytes(specs: Sequence[ChainNodeSpec],
-                     quantized: bool = False) -> int:
+                     quantized: bool = False,
+                     batch_block: int = 1) -> int:
     """Working-set estimate of a (possibly still-growing) chain.
 
     The greedy partitioner calls this on prefixes whose values may
     still leak to later nodes, so it skips ``lower_graph_kernel``'s
     strict consumption checks but shares its exact layout math.
+    ``batch_block`` scales the per-image terms (arena, accumulator,
+    input window, output block) like ``GraphKernelProgram.vmem_bytes``.
     """
     (_, input_in_arena, arena, _, _, w_max, _, _, b_max, _, _, _) = \
         _chain_layout(specs, quantized)
@@ -1014,13 +1070,16 @@ def chain_vmem_bytes(specs: Sequence[ChainNodeSpec],
     accs = [s.kp for s in specs]
     acc = (max(k.acc_h for k in accs) * max(k.acc_w for k in accs)
            * max(k.out_c_pad for k in accs))
-    return (arena.slot_bytes_f32
-            + 4 * (acc + w_max + b_max + x_elems
-                   + kl.blk_h * kl.blk_w * kl.out_c_pad))
+    bb = max(1, int(batch_block))
+    return (bb * arena.slot_bytes_f32
+            + 4 * (bb * (acc + x_elems
+                         + kl.blk_h * kl.blk_w * kl.out_c_pad)
+                   + w_max + b_max))
 
 
 def lower_graph_kernel(specs: Sequence[ChainNodeSpec], *,
-                       quantized: bool = False) -> GraphKernelProgram:
+                       quantized: bool = False,
+                       batch_block: int = 1) -> GraphKernelProgram:
     """Lower a fused chain of per-layer KernelPrograms to one program.
 
     Each node's rows replay its own table verbatim (same IY/IX/C0/VR/VC,
@@ -1099,7 +1158,8 @@ def lower_graph_kernel(specs: Sequence[ChainNodeSpec], *,
         node_steps=node_steps, total_steps=total_steps,
         w_chunks=w_chunks, w_offsets=w_offsets, w_max=w_max,
         w_total=w_total, b_offsets=b_offsets, b_max=b_max,
-        b_total=b_total, table=tuple(rows))
+        b_total=b_total, table=tuple(rows),
+        batch_block=max(1, int(batch_block)))
     validate_graph_kernel(gkp)
     return gkp
 

@@ -458,18 +458,24 @@ def run_layer_megakernel(wprog: WaveProgram, x: jax.Array, w: jax.Array,
     conv backend is *not* pluggable here — the megakernel IS the
     backend. ``vmem_budget`` mirrors ``lower_kernel_program``: the
     working-set bound for coarsening long partial-sum chains
-    (``None`` = keep the schedule's 1:1 wave chain).
+    (``None`` = keep the schedule's 1:1 wave chain). The batch rides
+    the kernel grid (ISSUE 8): the lowering requests
+    ``batch_block=x.shape[0]`` and the VMEM clamp sizes the per-step
+    image block to whatever fits the budget alongside the weights.
     """
     l = wprog.program.layer
     _check_input(l, x)
-    wprog = _coarsen_single_wave(wprog, fuse_pool, vmem_budget)
+    batch = x.shape[0]
+    wprog = _coarsen_single_wave(wprog, fuse_pool, vmem_budget, batch)
     kprog = _lower_kernel_cached(wprog, relu=relu, fuse_pool=fuse_pool,
-                                 vmem_budget=vmem_budget)
+                                 vmem_budget=vmem_budget,
+                                 batch_block=batch)
     return _run_kernel_program(kprog, x, w, b)
 
 
 def _coarsen_single_wave(wprog: WaveProgram, fuse_pool: bool,
-                         vmem_budget: Optional[int]) -> WaveProgram:
+                         vmem_budget: Optional[int],
+                         batch: int = 1) -> WaveProgram:
     """Wave-equivalent coarsening for tiny chains (BENCH regression fix).
 
     Chain coarsening folds waves per grid step, but a single-wave
@@ -487,7 +493,8 @@ def _coarsen_single_wave(wprog: WaveProgram, fuse_pool: bool,
             or wprog.program.layer.groups > 1:
         return wprog
     l = wprog.program.layer
-    plan = plan_for_vmem(l, vmem_budget, fuse_pool, residual=False)
+    plan = plan_for_vmem(l, vmem_budget, fuse_pool, residual=False,
+                         batch=batch)
     coarse = _partition_waves_cached(compile_layer(l, plan))
     if coarse.n_tiles * coarse.n_waves < wprog.n_tiles * wprog.n_waves:
         return coarse
@@ -546,9 +553,11 @@ def run_layer_megakernel_q(wprog: WaveProgram, x: jax.Array, quant,
     """
     l = wprog.program.layer
     _check_input(l, x)
-    wprog = _coarsen_single_wave(wprog, fuse_pool, vmem_budget)
+    batch = x.shape[0]
+    wprog = _coarsen_single_wave(wprog, fuse_pool, vmem_budget, batch)
     kprog = _lower_kernel_cached(wprog, relu=relu, fuse_pool=fuse_pool,
-                                 vmem_budget=vmem_budget)
+                                 vmem_budget=vmem_budget,
+                                 batch_block=batch)
     # precision is an explicit key component: the int8 path accepts the
     # SAME fp32 inputs over the SAME geometry as the fp32 megakernel,
     # so without it the two executables would collide
@@ -766,29 +775,33 @@ def _graph_epilogues(graph: NetworkGraph):
 
 def _graph_kernel_program(program: TileProgram, relu: bool,
                           residual: bool,
-                          vmem_budget: Optional[int]) -> KernelProgram:
+                          vmem_budget: Optional[int],
+                          batch: int = 1) -> KernelProgram:
     """Megakernel lowering for one graph conv node: the node's ReLU (or
     its fused add's) in the epilogue, the layer's pool fused when it has
     one, the residual operand when an add folds in, and the schedule
     re-planned at the kernel's VMEM budget point (``plan_for_vmem``;
-    ``None`` replays the given program 1:1)."""
+    ``None`` replays the given program 1:1). ``batch`` requests that
+    many images per grid step (clamped to the budget by the lowering)."""
     l = program.layer
     fuse = l.pool > 1
     if vmem_budget is None:
         return _lower_kernel_cached(_partition_waves_cached(program),
                                     relu=relu, fuse_pool=fuse,
-                                    residual=residual, vmem_budget=None)
-    plan = plan_for_vmem(l, vmem_budget, fuse, residual=residual)
+                                    residual=residual, vmem_budget=None,
+                                    batch_block=batch)
+    plan = plan_for_vmem(l, vmem_budget, fuse, residual=residual,
+                         batch=batch)
     return _lower_kernel_cached(
         _partition_waves_cached(compile_layer(l, plan)),
         relu=relu, fuse_pool=fuse, residual=residual,
-        vmem_budget=vmem_budget)
+        vmem_budget=vmem_budget, batch_block=batch)
 
 
 def graph_kernel_programs(
         graph: NetworkGraph, programs,
-        vmem_budget: Optional[int] = _VMEM_DEFAULT
-        ) -> "OrderedDict[str, KernelProgram]":
+        vmem_budget: Optional[int] = _VMEM_DEFAULT,
+        batch: int = 1) -> "OrderedDict[str, KernelProgram]":
     """The megakernel lowering of a whole graph, exactly as the graph
     forward replays it (per-node epilogue ReLU, fused pools, residual
     operands, VMEM re-planning) — public so weight packers and accuracy
@@ -798,13 +811,14 @@ def graph_kernel_programs(
     return OrderedDict(
         (name, _graph_kernel_program(p, epi[name][0],
                                      epi[name][1] is not None,
-                                     vmem_budget))
+                                     vmem_budget, batch))
         for name, p in programs.items())
 
 
 def graph_chain_programs(graph: NetworkGraph, programs,
                          vmem_budget: Optional[int] = _VMEM_DEFAULT,
-                         quantized: bool = False):
+                         quantized: bool = False,
+                         batch: int = 1):
     """Partition a graph into fused chains and lower each multi-node
     chain to its whole-chain ``GraphKernelProgram``.
 
@@ -812,11 +826,17 @@ def graph_chain_programs(graph: NetworkGraph, programs,
     schedule order, the per-node ``KernelProgram`` map (single-node
     chains fall back to these per-layer launches), and the
     ``GraphKernelProgram`` per multi-node chain keyed by its HEAD conv
-    name. Deterministic for a (graph, programs, budget, precision)
-    tuple, so operand tables and the forward fn derive the identical
-    partition independently."""
+    name. Deterministic for a (graph, programs, budget, precision,
+    batch) tuple, so operand tables and the forward fn derive the
+    identical partition independently.
+
+    ``batch`` (ISSUE 8): chain MEMBERSHIP is still decided at the
+    per-image footprint (a chain valid at one image per step stays
+    fusible at any batch), but each chain's kernel is lowered with the
+    largest per-step image block whose whole-chain arena + accumulator
+    footprint fits the budget."""
     programs = _conv_keyed(graph, programs, "programs")
-    kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+    kprogs = graph_kernel_programs(graph, programs, vmem_budget, batch)
     chains = fusible_chains(graph, kprogs, vmem_budget=vmem_budget,
                             quantized=quantized)
     epi = _graph_epilogues(graph)
@@ -830,18 +850,41 @@ def graph_chain_programs(graph: NetworkGraph, programs,
                                out_value=epi[name][2],
                                residual_value=epi[name][1])
                  for name in c.convs]
-        gkps[c.convs[0]] = lower_graph_kernel(specs, quantized=quantized)
+        gkps[c.convs[0]] = lower_graph_kernel(
+            specs, quantized=quantized,
+            batch_block=_chain_batch_block(specs, quantized,
+                                           vmem_budget, batch))
     return chains, kprogs, gkps
+
+
+def _chain_batch_block(specs, quantized: bool,
+                       vmem_budget: Optional[int], batch: int) -> int:
+    """Largest images-per-step block whose whole-chain VMEM footprint
+    (arena slots + accumulator + input/output blocks, all per-image)
+    fits ``vmem_budget``. ``chain_vmem_bytes`` is affine in the block
+    size — weights and bias are batch-shared — so the bound solves in
+    two evaluations. ``None`` budget takes the full batch."""
+    bb = max(1, int(batch))
+    if vmem_budget is None or bb == 1:
+        return bb
+    from repro.core.schedule import chain_vmem_bytes
+    b1 = chain_vmem_bytes(specs, quantized=quantized, batch_block=1)
+    per = chain_vmem_bytes(specs, quantized=quantized, batch_block=2) - b1
+    if per <= 0:
+        return bb
+    fit = (vmem_budget - (b1 - per)) // per
+    return max(1, min(bb, int(fit)))
 
 
 def graph_operands(graph: NetworkGraph, programs, mode: str = "wave",
                    vmem_budget: Optional[int] = _VMEM_DEFAULT,
-                   precision: str = "fp32"
-                   ) -> "OrderedDict[str, jax.Array]":
+                   precision: str = "fp32",
+                   batch: int = 1) -> "OrderedDict[str, jax.Array]":
     """Per-conv-node operand tables matching ``graph_forward_fn``,
     keyed by node name (wave dispatch tables, megakernel SMEM tables,
     whole-chain graphkernel tables keyed by chain head, or flat scan
-    step tables)."""
+    step tables). Pass the same ``batch`` as the forward builder — the
+    batch-aware chain coarsening can change table shapes."""
     mode = _normalize_mode(mode)
     if mode == "interpret":
         raise ValueError("interpret mode has no operand tables")
@@ -849,7 +892,7 @@ def graph_operands(graph: NetworkGraph, programs, mode: str = "wave",
     if mode == "graphkernel":
         chains, kprogs, gkps = graph_chain_programs(
             graph, programs, vmem_budget,
-            quantized=precision == "int8")
+            quantized=precision == "int8", batch=batch)
         return OrderedDict(
             (c.convs[0],
              jnp.asarray(gkps[c.convs[0]].operand_table()
@@ -860,7 +903,7 @@ def graph_operands(graph: NetworkGraph, programs, mode: str = "wave",
         return OrderedDict(
             (name, jnp.asarray(kp.operand_table()))
             for name, kp in graph_kernel_programs(
-                graph, programs, vmem_budget).items())
+                graph, programs, vmem_budget, batch).items())
     if mode == "wave":
         return OrderedDict(
             (name, jnp.asarray(
@@ -878,7 +921,8 @@ def graph_forward_fn(graph: NetworkGraph, programs,
                      vmem_budget: Optional[int] = _VMEM_DEFAULT,
                      precision: str = "fp32",
                      qgraph=None,
-                     dequantize: bool = True) -> Callable:
+                     dequantize: bool = True,
+                     batch: int = 1) -> Callable:
     """Whole-graph forward over pre-lowered programs, built for one jit.
 
     Returns ``f(x, weights, ops) -> y`` where ``weights`` maps conv
@@ -933,11 +977,13 @@ def graph_forward_fn(graph: NetworkGraph, programs,
         epi = _graph_epilogues(graph)
         if mode == "graphkernel":
             chains, kprogs, gkps = graph_chain_programs(
-                graph, programs, vmem_budget, quantized=True)
+                graph, programs, vmem_budget, quantized=True,
+                batch=batch)
             chain_of = {c.convs[0]: c for c in chains}
             members = {name for c in chains for name in c.convs[1:]}
         else:
-            kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+            kprogs = graph_kernel_programs(graph, programs, vmem_budget,
+                                           batch)
             chain_of, members, gkps = {}, set(), {}
         statics = {name: (qgraph.quants[name].pre_shift,
                           qgraph.quants[name].fan_chunk)
@@ -990,11 +1036,13 @@ def graph_forward_fn(graph: NetworkGraph, programs,
         epi = _graph_epilogues(graph)
         if mode == "graphkernel":
             chains, kprogs, gkps = graph_chain_programs(
-                graph, programs, vmem_budget, quantized=False)
+                graph, programs, vmem_budget, quantized=False,
+                batch=batch)
             chain_of = {c.convs[0]: c for c in chains}
             members = {name for c in chains for name in c.convs[1:]}
         else:
-            kprogs = graph_kernel_programs(graph, programs, vmem_budget)
+            kprogs = graph_kernel_programs(graph, programs, vmem_budget,
+                                           batch)
             chain_of, members, gkps = {}, set(), {}
         fused_adds = {outv for _, resv, outv in epi.values()
                       if resv is not None}
@@ -1193,8 +1241,10 @@ def run_graph_streamed(graph: NetworkGraph, plans, x: jax.Array, weights,
            mode, precision, conv_key, qsig, x.shape[0], str(x.dtype))
     build = lambda: jax.jit(graph_forward_fn(
         graph, programs, conv_fn=conv_fn, conv_backend=conv_backend,
-        mode=mode, precision=precision, qgraph=qgraph))
-    ops = graph_operands(graph, programs, mode, precision=precision)
+        mode=mode, precision=precision, qgraph=qgraph,
+        batch=x.shape[0]))
+    ops = graph_operands(graph, programs, mode, precision=precision,
+                         batch=x.shape[0])
     if precision == "int8":
         return _call_cached(key, build, x, qgraph.device_weights(), ops)
     return _call_cached(key, build, x, weights, ops)
@@ -1223,7 +1273,8 @@ def network_forward_fn(programs: Sequence[TileProgram],
                        vmem_budget: Optional[int] = _VMEM_DEFAULT,
                        precision: str = "fp32",
                        qnet=None,
-                       dequantize: bool = True) -> Callable:
+                       dequantize: bool = True,
+                       batch: int = 1) -> Callable:
     """Whole-network forward over pre-lowered programs, built for one jit.
 
     The linear-stack shim over ``graph_forward_fn``: the positional
@@ -1266,7 +1317,7 @@ def network_forward_fn(programs: Sequence[TileProgram],
                                pool_backend=pool_backend,
                                vmem_budget=vmem_budget,
                                precision=precision, qgraph=qgraph,
-                               dequantize=dequantize)
+                               dequantize=dequantize, batch=batch)
     names = [n.name for n in g.conv_nodes()]
 
     def forward(x, weights, ops_list):
@@ -1281,7 +1332,8 @@ def plan_for_vmem(layer: ConvLayer,
                   vmem_budget: int = _VMEM_DEFAULT,
                   fuse_pool: bool = False,
                   max_tiles: int = 8,
-                  residual: bool = False) -> Plan:
+                  residual: bool = False,
+                  batch: int = 1) -> Plan:
     """Re-plan a layer's decomposition at the megakernel's VMEM budget.
 
     DESIGN.md §6's point made literal: the decomposition planner serves
@@ -1297,6 +1349,14 @@ def plan_for_vmem(layer: ConvLayer,
     scratch beats a grid that explodes the step count. ``residual``
     (graph convs with a fused add) counts the residual block in each
     candidate's working set.
+
+    ``batch`` (ISSUE 8) makes the scoring batch-aware: each candidate
+    is lowered with ``batch_block=batch`` so the budget clamp sizes the
+    per-step image block, and the step count becomes the TOTAL grid
+    steps for the whole batch — ``ceil(batch / batch_block) * tiles *
+    chain`` — so a plan whose accumulator leaves room for more images
+    per step beats one that wins per-image but serialises the batch.
+    ``batch=1`` reproduces the historical per-image scoring exactly.
     """
     best = None          # ((over_budget, grid_steps, ws), plan)
     in_choices = sorted({1, 2, 4, 8, 16, 32, 64, 128, layer.in_c})
@@ -1311,9 +1371,12 @@ def plan_for_vmem(layer: ConvLayer,
                 kp = _lower_kernel_cached(
                     _partition_waves_cached(compile_layer(layer, p)),
                     relu=True, fuse_pool=fuse_pool, residual=residual,
-                    vmem_budget=None)
+                    vmem_budget=None if batch == 1 else vmem_budget,
+                    batch_block=batch)
                 ws = kp.vmem_bytes
-                key = (ws > vmem_budget, kp.n_tiles * kp.n_chain, ws)
+                n_bb = -(-batch // kp.batch_block)
+                key = (ws > vmem_budget,
+                       n_bb * kp.n_tiles * kp.n_chain, ws)
                 if best is None or key < best[0]:
                     best = (key, p)
     if best is None:
@@ -1323,27 +1386,31 @@ def plan_for_vmem(layer: ConvLayer,
 
 def network_kernel_programs(
         programs: Sequence[TileProgram],
-        vmem_budget: Optional[int] = _VMEM_DEFAULT) -> List["KernelProgram"]:
+        vmem_budget: Optional[int] = _VMEM_DEFAULT,
+        batch: int = 1) -> List["KernelProgram"]:
     """The megakernel lowering of a whole linear stack, as the network
     path builds it (ReLU fused, pools fused, VMEM re-planning) — public
     so the int8 weight packers and the accuracy harness lower the exact
     same programs the forward fn replays. Graph callers use
     ``graph_kernel_programs`` (which also wires residual epilogues)."""
-    return [_network_kernel_program(p, vmem_budget) for p in programs]
+    return [_network_kernel_program(p, vmem_budget, batch)
+            for p in programs]
 
 
 def _network_kernel_program(
         program: TileProgram,
-        vmem_budget: Optional[int] = _VMEM_DEFAULT) -> KernelProgram:
+        vmem_budget: Optional[int] = _VMEM_DEFAULT,
+        batch: int = 1) -> KernelProgram:
     """The linear-stack megakernel lowering: ReLU always fused, the
     layer's max-pool fused whenever it has one, no residual operand —
     ``_graph_kernel_program`` with a chain node's flags."""
     return _graph_kernel_program(program, relu=True, residual=False,
-                                 vmem_budget=vmem_budget)
+                                 vmem_budget=vmem_budget, batch=batch)
 
 
 def network_operands(programs: Sequence[TileProgram], mode: str = "wave",
-                     vmem_budget: Optional[int] = _VMEM_DEFAULT):
+                     vmem_budget: Optional[int] = _VMEM_DEFAULT,
+                     batch: int = 1):
     """Per-layer operand tables matching ``network_forward_fn(mode=...)``
     in stack order: wave-encoded ``(n_waves, n_tiles, 6)`` dispatch
     tables for wave mode, SMEM ``(n_chain, n_tiles, 8)`` megakernel
@@ -1353,5 +1420,5 @@ def network_operands(programs: Sequence[TileProgram], mode: str = "wave",
     programs = list(programs)
     g = chain_graph(tuple(p.layer for p in programs))
     ops = graph_operands(g, {p.layer.name: p for p in programs}, mode,
-                         vmem_budget)
+                         vmem_budget, batch=batch)
     return [ops[n.name] for n in g.conv_nodes()]

@@ -26,7 +26,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.schedule import (GRAPH_OP_COLS, GOP_BOFF, GOP_C0, GOP_IX,
                                  GOP_IY, GOP_K, GOP_NODE, GOP_OX, GOP_OY,
                                  GOP_TX, GOP_TY, GOP_VC, GOP_VR, GOP_WOFF,
-                                 GraphKernelProgram)
+                                 GraphKernelProgram, batch_grid)
 from repro.kernels.common import pool_max_subsampled
 from repro.kernels.wave_replay import ops as _ops
 
@@ -122,10 +122,12 @@ def _graph_replay_kernel(tbl_ref, x_ref, wf_ref, bf_ref, o_ref, *scratch,
     per-layer step body runs; everything else is baked in statically."""
     n_slots = len(gkp.arena.slot_shapes)
     slots, acc_ref = scratch[:n_slots], scratch[n_slots]
-    t = pl.program_id(0)
+    t = pl.program_id(1)
     if gkp.input_in_arena:
         # the chain input has in-chain consumers beyond the head conv
         # (e.g. a shortcut): stage the whole padded input into its slot
+        # — once per batch block (t restarts at 0 for every block, and
+        # the x_ref block carries that block's images)
         iv = gkp.arena.value(gkp.input_value)
         isi = gkp.arena.slot_of(gkp.input_value)
         h0 = gkp.nodes[0].kp
@@ -153,8 +155,12 @@ def wave_replay_graph_raw(gkp: GraphKernelProgram, x: jax.Array,
     ``x`` is the chain input pre-padded to the head program's buffer
     geometry; ``wf``/``bf`` are the flat (w_total,)/(b_total,) fp32
     weight and bias buffers laid out at the program's offsets; ``table``
-    the (total_steps, 14) int32 operand table. Returns the final node's
-    padded (B, out_h_pad, out_w_pad, out_c_pad) fp32 output.
+    the (total_steps, 14) int32 operand table. The grid iterates
+    (batch block, flat step) — each block of ``gkp.batch_block`` images
+    replays the whole chain through its own arena slice; ragged batches
+    are zero-padded to whole blocks and cropped on return. Returns the
+    final node's padded (B, out_h_pad, out_w_pad, out_c_pad) fp32
+    output.
     """
     if interpret is None:
         from repro.kernels.common import pallas_interpret_default
@@ -174,44 +180,51 @@ def wave_replay_graph_raw(gkp: GraphKernelProgram, x: jax.Array,
             f"graph table {table.shape} != "
             f"({gkp.total_steps}, {GRAPH_OP_COLS})")
 
+    # batch blocks as the outermost grid axis (ISSUE 8): each block of
+    # bb images replays the whole chain; padding images are zeros
+    n_bb, bb = batch_grid(B, gkp.batch_block)
+    if n_bb * bb != B:
+        x = jnp.pad(x, ((0, n_bb * bb - B), (0, 0), (0, 0), (0, 0)))
     if gkp.input_in_arena:
-        x_spec = pl.BlockSpec((B, h0.pad_h, h0.pad_w, h0.in_c_kpad),
-                              lambda t, tbl: (0, 0, 0, 0))
+        x_spec = pl.BlockSpec((bb, h0.pad_h, h0.pad_w, h0.in_c_kpad),
+                              lambda bi, t, tbl: (bi, 0, 0, 0))
     else:
         x_spec = pl.BlockSpec(
-            (B, h0.ih, h0.iw, h0.c_width),
-            lambda t, tbl: (0, tbl[t, GOP_IY], tbl[t, GOP_IX],
-                            tbl[t, GOP_C0]),
+            (bb, h0.ih, h0.iw, h0.c_width),
+            lambda bi, t, tbl: (bi * bb, tbl[t, GOP_IY],
+                                tbl[t, GOP_IX], tbl[t, GOP_C0]),
             indexing_mode=pl.unblocked)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,        # the SMEM operand table
-        grid=(gkp.total_steps,),
+        grid=(n_bb, gkp.total_steps),
         in_specs=[
             x_spec,
             # per-step windows into the flat chain buffers: VMEM holds
             # one step's slice, never the whole chain's weights
             pl.BlockSpec((gkp.w_max,),
-                         lambda t, tbl: (tbl[t, GOP_WOFF],),
+                         lambda bi, t, tbl: (tbl[t, GOP_WOFF],),
                          indexing_mode=pl.unblocked),
             pl.BlockSpec((gkp.b_max,),
-                         lambda t, tbl: (tbl[t, GOP_BOFF],),
+                         lambda bi, t, tbl: (tbl[t, GOP_BOFF],),
                          indexing_mode=pl.unblocked),
         ],
         out_specs=pl.BlockSpec(
-            (B, kl.blk_h, kl.blk_w, kl.out_c_pad),
-            lambda t, tbl: (0, tbl[t, GOP_OY], tbl[t, GOP_OX], 0)),
-        # the activation arena + one shared psum bank
-        scratch_shapes=[pltpu.VMEM((B,) + s, jnp.float32)
+            (bb, kl.blk_h, kl.blk_w, kl.out_c_pad),
+            lambda bi, t, tbl: (bi, tbl[t, GOP_OY], tbl[t, GOP_OX], 0)),
+        # the activation arena + one shared psum bank (per batch block)
+        scratch_shapes=[pltpu.VMEM((bb,) + s, jnp.float32)
                         for s in gkp.arena.slot_shapes]
-        + [pltpu.VMEM((B,) + gkp.acc_shape(), jnp.float32)],
+        + [pltpu.VMEM((bb,) + gkp.acc_shape(), jnp.float32)],
     )
-    return pl.pallas_call(
+    y = pl.pallas_call(
         functools.partial(_graph_replay_kernel, gkp=gkp),
         out_shape=jax.ShapeDtypeStruct(
-            (B, kl.out_h_pad, kl.out_w_pad, kl.out_c_pad), jnp.float32),
+            (n_bb * bb, kl.out_h_pad, kl.out_w_pad, kl.out_c_pad),
+            jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
     )(table, x, wf, bf)
+    return y[:B] if n_bb * bb != B else y
 
 
 def pack_graph_weights(gkp: GraphKernelProgram, weights):

@@ -33,7 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_IX, OP_IY,
                                  OP_TX, OP_TY, OP_VC, OP_VR, OP_WC0,
-                                 KernelProgram)
+                                 KernelProgram, batch_grid)
 from repro.kernels.common import pool_max_subsampled
 
 
@@ -42,7 +42,10 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, *refs,
                    n_waves: int, pool: int, ps: int,
                    blk_h: int, blk_w: int, relu: bool, fuse_pool: bool,
                    residual: bool):
-    """One grid step: tile t (program_id 0), chain position k (id 1).
+    """One grid step: batch block (program_id 0), tile t (id 1), chain
+    position k (id 2). The batch axis is outermost, so each batch
+    block's tiles replay their full partial-sum chains before the next
+    block starts — the scratch accumulator is recycled across blocks.
 
     With ``residual`` the positional refs gain one operand —
     ``(r_ref, o_ref, acc_ref)`` instead of ``(o_ref, acc_ref)`` — the
@@ -54,8 +57,8 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, *refs,
         r_ref, o_ref, acc_ref = refs
     else:
         (o_ref, acc_ref), r_ref = refs, None
-    t = pl.program_id(0)
-    k = pl.program_id(1)
+    t = pl.program_id(1)
+    k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():                      # chain start: zero the psum bank
@@ -116,9 +119,13 @@ def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
     ``residual=True`` additionally take the residual activation at the
     padded output geometry (B, out_h_pad, out_w_pad, out_c_pad) fp32 —
     each tile's block is DMA'd alongside the output block and added in
-    the epilogue. Returns the padded (B, out_h_pad, out_w_pad,
-    out_c_pad) fp32 output (masked lanes are exact zeros); the caller
-    crops to the valid dims.
+    the epilogue. The batch axis rides the grid in blocks of
+    ``kp.batch_block`` images (outermost axis); ragged batches are
+    zero-padded to whole blocks here and cropped on return (zero
+    images convolve to exact zeros, so real rows are untouched).
+    Returns the padded (B, out_h_pad, out_w_pad, out_c_pad) fp32
+    output (masked lanes are exact zeros); the caller crops to the
+    valid dims.
     """
     if interpret is None:
         from repro.kernels.common import pallas_interpret_default
@@ -150,35 +157,45 @@ def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
             f"{l.name}: program lowered without residual=True cannot "
             f"take a residual operand")
 
+    # batch as a first-class grid axis (ISSUE 8): bb images per step,
+    # padded to whole blocks (zeros accumulate exact 0.0) and cropped
+    n_bb, bb = batch_grid(B, kp.batch_block)
+    if n_bb * bb != B:
+        x = jnp.pad(x, ((0, n_bb * bb - B), (0, 0), (0, 0), (0, 0)))
+        if kp.residual:
+            residual = jnp.pad(
+                residual, ((0, n_bb * bb - B), (0, 0), (0, 0), (0, 0)))
     in_specs = [
         # halo windows via table-driven unblocked element offsets:
         # overlap is indexed in place, never copied out
-        pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
-                     lambda t, k, tbl: (0, tbl[k, t, OP_IY],
-                                        tbl[k, t, OP_IX],
-                                        tbl[k, t, OP_C0]),
+        pl.BlockSpec((bb, kp.ih, kp.iw, kp.c_width),
+                     lambda bi, t, k, tbl: (bi * bb, tbl[k, t, OP_IY],
+                                            tbl[k, t, OP_IX],
+                                            tbl[k, t, OP_C0]),
                      indexing_mode=pl.unblocked),
         pl.BlockSpec((l.kernel, l.kernel, kp.fan_width, kp.out_c_pad),
-                     lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
+                     lambda bi, t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
                      indexing_mode=pl.unblocked),
-        pl.BlockSpec((1, kp.out_c_pad), lambda t, k, tbl: (0, 0)),
+        pl.BlockSpec((1, kp.out_c_pad), lambda bi, t, k, tbl: (0, 0)),
     ]
     operands = [table, x, w, b]
     if kp.residual:
         # the residual reads the same blocked tiling the output writes
         in_specs.append(pl.BlockSpec(
-            (B, kp.blk_h, kp.blk_w, kp.out_c_pad),
-            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)))
+            (bb, kp.blk_h, kp.blk_w, kp.out_c_pad),
+            lambda bi, t, k, tbl: (bi, tbl[k, t, OP_TY],
+                                   tbl[k, t, OP_TX], 0)))
         operands.append(residual)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,        # the SMEM operand table
-        grid=(kp.n_tiles, kp.n_chain),
+        grid=(n_bb, kp.n_tiles, kp.n_chain),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (B, kp.blk_h, kp.blk_w, kp.out_c_pad),
-            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)),
+            (bb, kp.blk_h, kp.blk_w, kp.out_c_pad),
+            lambda bi, t, k, tbl: (bi, tbl[k, t, OP_TY],
+                                   tbl[k, t, OP_TX], 0)),
         # the psum SRAM bank: one tile's chain lives here, never in HBM
-        scratch_shapes=[pltpu.VMEM((B, kp.acc_h, kp.acc_w, kp.out_c_pad),
+        scratch_shapes=[pltpu.VMEM((bb, kp.acc_h, kp.acc_w, kp.out_c_pad),
                                    jnp.float32)],
     )
     kern = functools.partial(
@@ -187,10 +204,12 @@ def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
         n_waves=kp.n_chain, pool=kp.pool, ps=kp.pool_stride,
         blk_h=kp.blk_h, blk_w=kp.blk_w, relu=kp.relu,
         fuse_pool=kp.fuse_pool, residual=kp.residual)
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct(
-            (B, kp.out_h_pad, kp.out_w_pad, kp.out_c_pad), jnp.float32),
+            (n_bb * bb, kp.out_h_pad, kp.out_w_pad, kp.out_c_pad),
+            jnp.float32),
         grid_spec=grid_spec,
         interpret=interpret,
     )(*operands)
+    return y[:B] if n_bb * bb != B else y

@@ -27,7 +27,7 @@ from repro.core.quantization import requantize_i32
 from repro.core.schedule import (GRAPH_OP_COLS, GOP_BOFF, GOP_C0, GOP_IX,
                                  GOP_IY, GOP_K, GOP_NODE, GOP_OX, GOP_OY,
                                  GOP_TX, GOP_TY, GOP_VC, GOP_VR, GOP_WOFF,
-                                 GraphKernelProgram)
+                                 GraphKernelProgram, batch_grid)
 from repro.kernels.common import pool_max_subsampled
 from repro.kernels.wave_replay.ops import pad_input
 from repro.kernels.wave_replay_q import ops as _ops
@@ -164,7 +164,10 @@ def _graph_replay_q_kernel(tbl_ref, x_ref, wf_ref, bf_ref, mf_ref,
                            gkp: GraphKernelProgram, pre_shifts, c_subs):
     n_slots = len(gkp.arena.slot_shapes)
     slots, acc_ref = scratch[:n_slots], scratch[n_slots]
-    t = pl.program_id(0)
+    # grid is (batch-block, flat step): t restarts at 0 for every batch
+    # block, so input staging and slot zeroing re-fire per block while
+    # the int8 arena / psum scratch is recycled across blocks
+    t = pl.program_id(1)
     if gkp.input_in_arena:
         iv = gkp.arena.value(gkp.input_value)
         isi = gkp.arena.slot_of(gkp.input_value)
@@ -248,46 +251,55 @@ def wave_replay_graph_q_raw(gkp: GraphKernelProgram, xq: jax.Array,
         c_subs.append(exact_channel_chunk(l.kernel) if fc is None
                       else max(1, min(int(fc), step_in_c)))
 
+    # batch as the outermost grid axis (ISSUE 8): ragged batches are
+    # zero-padded to whole blocks — int8 zero images quantize and
+    # accumulate to exact integer zeros, so real rows are untouched —
+    # and cropped on return
+    n_bb, bb = batch_grid(B, gkp.batch_block)
+    if n_bb * bb != B:
+        xq = jnp.pad(xq, ((0, n_bb * bb - B), (0, 0), (0, 0), (0, 0)))
     if gkp.input_in_arena:
-        x_spec = pl.BlockSpec((B, h0.pad_h, h0.pad_w, h0.in_c_kpad),
-                              lambda t, tbl: (0, 0, 0, 0))
+        x_spec = pl.BlockSpec((bb, h0.pad_h, h0.pad_w, h0.in_c_kpad),
+                              lambda bi, t, tbl: (bi, 0, 0, 0))
     else:
         x_spec = pl.BlockSpec(
-            (B, h0.ih, h0.iw, h0.c_width),
-            lambda t, tbl: (0, tbl[t, GOP_IY], tbl[t, GOP_IX],
-                            tbl[t, GOP_C0]),
+            (bb, h0.ih, h0.iw, h0.c_width),
+            lambda bi, t, tbl: (bi * bb, tbl[t, GOP_IY],
+                                tbl[t, GOP_IX], tbl[t, GOP_C0]),
             indexing_mode=pl.unblocked)
     woff_spec = pl.BlockSpec((gkp.w_max,),
-                             lambda t, tbl: (tbl[t, GOP_WOFF],),
+                             lambda bi, t, tbl: (tbl[t, GOP_WOFF],),
                              indexing_mode=pl.unblocked)
     boff_spec = pl.BlockSpec((gkp.b_max,),
-                             lambda t, tbl: (tbl[t, GOP_BOFF],),
+                             lambda bi, t, tbl: (tbl[t, GOP_BOFF],),
                              indexing_mode=pl.unblocked)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(gkp.total_steps,),
+        grid=(n_bb, gkp.total_steps),
         in_specs=[x_spec, woff_spec, boff_spec, boff_spec, boff_spec],
         out_specs=pl.BlockSpec(
-            (B, kl.blk_h, kl.blk_w, kl.out_c_pad),
-            lambda t, tbl: (0, tbl[t, GOP_OY], tbl[t, GOP_OX], 0)),
+            (bb, kl.blk_h, kl.blk_w, kl.out_c_pad),
+            lambda bi, t, tbl: (bi, tbl[t, GOP_OY], tbl[t, GOP_OX], 0)),
         # int8 activation arena + the shared int32 psum bank (token
         # buffer when every node is single-step)
-        scratch_shapes=[pltpu.VMEM((B,) + s, jnp.int8)
+        scratch_shapes=[pltpu.VMEM((bb,) + s, jnp.int8)
                         for s in gkp.arena.slot_shapes]
         + [pltpu.VMEM(
-            (B,) + gkp.acc_shape(multi_only=True)
+            (bb,) + gkp.acc_shape(multi_only=True)
             if any(s.kp.n_chain > 1 for s in gkp.nodes)
             else (1, 1, 1, 1), jnp.int32)],
     )
-    return pl.pallas_call(
+    yq = pl.pallas_call(
         functools.partial(_graph_replay_q_kernel, gkp=gkp,
                           pre_shifts=tuple(pre_shifts),
                           c_subs=tuple(c_subs)),
         out_shape=jax.ShapeDtypeStruct(
-            (B, kl.out_h_pad, kl.out_w_pad, kl.out_c_pad), jnp.int8),
+            (n_bb * bb, kl.out_h_pad, kl.out_w_pad, kl.out_c_pad),
+            jnp.int8),
         grid_spec=grid_spec,
         interpret=interpret,
     )(table, xq, wf, bf, mf, sf)
+    return yq[:B] if n_bb * bb != B else yq
 
 
 def pack_graph_operands_q(gkp: GraphKernelProgram, qops):

@@ -48,7 +48,7 @@ from repro.core.quantization import (EXACT_FP32_FAN, INT8_QMAX,
                                      requantize_i32)
 from repro.core.schedule import (KERNEL_OP_COLS, OP_C0, OP_IX, OP_IY,
                                  OP_TX, OP_TY, OP_VC, OP_VR, OP_WC0,
-                                 KernelProgram)
+                                 KernelProgram, batch_grid)
 from repro.kernels.common import pool_max_subsampled
 
 
@@ -82,7 +82,8 @@ def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, *refs,
                      blk_h: int, blk_w: int, relu: bool, fuse_pool: bool,
                      groups: int, step_in_c: int, c_sub: int,
                      pre_shift: int, masked: bool, residual: bool):
-    """One grid step: tile t (program_id 0), chain position k (id 1).
+    """One grid step: batch block (program_id 0), tile t (id 1), chain
+    position k (id 2) — the batch axis outermost, like the fp32 kernel.
 
     ``step_in_c`` is the input channels this step reduces *per group*
     (= the chain chunk width for ungrouped layers, in_c/groups for
@@ -105,8 +106,8 @@ def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, *refs,
         r_ref, o_ref, acc_ref = refs
     else:
         (o_ref, acc_ref), r_ref = refs, None
-    t = pl.program_id(0)
-    k = pl.program_id(1)
+    t = pl.program_id(1)
+    k = pl.program_id(2)
     single = n_waves == 1
 
     if not single:
@@ -283,41 +284,52 @@ def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
     step_in_c = l.in_c // l.groups if l.groups > 1 else kp.c_width
     c_sub = exact_channel_chunk(l.kernel) if fan_chunk is None \
         else max(1, min(int(fan_chunk), step_in_c))
+    # batch rides the grid in blocks of kp.batch_block images, exactly
+    # like the fp32 kernel; zero-padded images quantize/accumulate to
+    # exact integer zeros, so cropping recovers the real rows bit-exact
+    n_bb, bb = batch_grid(B, kp.batch_block)
+    if n_bb * bb != B:
+        xq = jnp.pad(xq, ((0, n_bb * bb - B), (0, 0), (0, 0), (0, 0)))
+        if kp.residual:
+            residual = jnp.pad(
+                residual, ((0, n_bb * bb - B), (0, 0), (0, 0), (0, 0)))
     in_specs = [
-        pl.BlockSpec((B, kp.ih, kp.iw, kp.c_width),
-                     lambda t, k, tbl: (0, tbl[k, t, OP_IY],
-                                        tbl[k, t, OP_IX],
-                                        tbl[k, t, OP_C0]),
+        pl.BlockSpec((bb, kp.ih, kp.iw, kp.c_width),
+                     lambda bi, t, k, tbl: (bi * bb, tbl[k, t, OP_IY],
+                                            tbl[k, t, OP_IX],
+                                            tbl[k, t, OP_C0]),
                      indexing_mode=pl.unblocked),
         # natural per-group weights: grouped layers read the whole
         # (single-step) tensor, ungrouped ones slice the chain
         # chunk's fan rows exactly like the fp32 kernel
         pl.BlockSpec((l.kernel, l.kernel, w_fan, g.out_c_pad),
-                     lambda t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
+                     lambda bi, t, k, tbl: (0, 0, tbl[k, t, OP_WC0], 0),
                      indexing_mode=pl.unblocked),
-        pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
-        pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
-        pl.BlockSpec((1, g.out_c_pad), lambda t, k, tbl: (0, 0)),
+        pl.BlockSpec((1, g.out_c_pad), lambda bi, t, k, tbl: (0, 0)),
+        pl.BlockSpec((1, g.out_c_pad), lambda bi, t, k, tbl: (0, 0)),
+        pl.BlockSpec((1, g.out_c_pad), lambda bi, t, k, tbl: (0, 0)),
     ]
     operands = [table, xq, wq, bq, m, shift]
     if kp.residual:
         # the int8 shortcut reads the blocked tiling the output writes
         in_specs.append(pl.BlockSpec(
-            (B, kp.blk_h, kp.blk_w, g.out_c_pad),
-            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)))
+            (bb, kp.blk_h, kp.blk_w, g.out_c_pad),
+            lambda bi, t, k, tbl: (bi, tbl[k, t, OP_TY],
+                                   tbl[k, t, OP_TX], 0)))
         operands.append(residual)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,        # the SMEM operand table
-        grid=(kp.n_tiles, kp.n_chain),
+        grid=(n_bb, kp.n_tiles, kp.n_chain),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (B, kp.blk_h, kp.blk_w, g.out_c_pad),
-            lambda t, k, tbl: (0, tbl[k, t, OP_TY], tbl[k, t, OP_TX], 0)),
+            (bb, kp.blk_h, kp.blk_w, g.out_c_pad),
+            lambda bi, t, k, tbl: (bi, tbl[k, t, OP_TY],
+                                   tbl[k, t, OP_TX], 0)),
         # the paper's 32-bit psum SRAM bank: one tile's chain lives
         # here at accumulator precision, never in HBM (single-step
         # chains bypass it, so allocate a token buffer for them)
         scratch_shapes=[pltpu.VMEM(
-            (B, kp.acc_h, kp.acc_w, g.out_c_pad) if kp.n_chain > 1
+            (bb, kp.acc_h, kp.acc_w, g.out_c_pad) if kp.n_chain > 1
             else (1, 1, 1, 1), jnp.int32)],
     )
     # write masks are only live where the uniform tile grid overhangs
@@ -331,10 +343,12 @@ def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
         fuse_pool=kp.fuse_pool, groups=l.groups,
         step_in_c=step_in_c, c_sub=c_sub, pre_shift=pre_shift,
         masked=masked, residual=kp.residual)
-    return pl.pallas_call(
+    yq = pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct(
-            (B, kp.out_h_pad, kp.out_w_pad, g.out_c_pad), jnp.int8),
+            (n_bb * bb, kp.out_h_pad, kp.out_w_pad, g.out_c_pad),
+            jnp.int8),
         grid_spec=grid_spec,
         interpret=interpret,
     )(*operands)
+    return yq[:B] if n_bb * bb != B else yq

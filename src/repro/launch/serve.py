@@ -14,6 +14,9 @@
 
   PYTHONPATH=src python -m repro.launch.serve --cnn --network vgg16 \
       --batch 4 --requests 8
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn --mode auto \
+      --autotune-cache tune.json --batch 16 --requests 32   # measured plan
 """
 import argparse
 import dataclasses
@@ -49,7 +52,7 @@ def cnn_main(args):
     H, W, C = graph.in_shape
     if args.precision == "int8":
         from repro.quant import calibrate_graph
-        if mode not in ("megakernel", "graphkernel"):
+        if mode not in ("megakernel", "graphkernel", "auto"):
             print("--precision int8 runs the quantized megakernel; "
                   f"overriding --mode {mode}")
             mode = "megakernel"
@@ -63,7 +66,11 @@ def cnn_main(args):
                                       precision=args.precision,
                                       qnet=qnet,
                                       fallback=args.fallback or None,
-                                      guard=args.guard or None)
+                                      guard=args.guard or None,
+                                      autotune_cache=args.autotune_cache)
+    if sess.tuned is not None:
+        print(f"autotuned plan ({sess.tuned.us_per_batch:.0f} us/batch): "
+              + ", ".join(f"{n}={m}" for n, m in sess.tuned.node_modes))
     imgs = jax.random.normal(jax.random.key(99),
                              (args.requests, H, W, C))
     # warm-up: one padded flush compiles the (only) executable
@@ -95,24 +102,33 @@ def main():
     ap.add_argument("--cnn", action="store_true",
                     help="serve CNN image requests via StreamingSession")
     ap.add_argument("--network", default="alexnet",
-                    choices=("alexnet", "vgg16", "resnet18"),
+                    choices=("alexnet", "vgg16", "resnet18", "facedet"),
                     help="which NetworkGraph to serve (--cnn): the "
-                         "AlexNet chain, the VGG-16 stack, or ResNet-18 "
-                         "with residual adds + projection shortcuts")
+                         "AlexNet chain, the VGG-16 stack, ResNet-18 "
+                         "with residual adds + projection shortcuts, or "
+                         "the compact face-detection trunk (tiny frames, "
+                         "the batch-throughput serving shape)")
     ap.add_argument("--requests", type=int, default=32,
                     help="number of single-image requests (--cnn)")
     ap.add_argument("--sram-kb", type=int, default=128,
                     help="planner buffer budget in KiB (--cnn)")
     ap.add_argument("--mode", choices=("wave", "scan", "megakernel",
-                                       "graphkernel"),
+                                       "graphkernel", "auto"),
                     default="wave",
                     help="streaming executor: wave-parallel fused "
                          "dispatches (default), serial scan replay, "
                          "one persistent Pallas megakernel per layer "
                          "(partial sums stay in VMEM; bias+ReLU+pool "
-                         "fused in the kernel epilogue), or the "
+                         "fused in the kernel epilogue), the "
                          "whole-graph kernel (fused layer chains share "
-                         "one pallas_call and a VMEM activation arena)")
+                         "one pallas_call and a VMEM activation arena), "
+                         "or 'auto' — the measured autotuner times "
+                         "candidate plans per conv node at startup and "
+                         "serves the winning mixed-mode plan")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="JSON path for --mode auto measurement reuse: "
+                         "loaded before tuning (a hit skips the search), "
+                         "saved with the winner after")
     ap.add_argument("--pool-backend", choices=("xla", "fused"),
                     default="xla",
                     help="CONV+POOL layers: XLA maxpool after the "
@@ -153,7 +169,19 @@ def main():
     B, P, G = args.batch, args.prompt_len, args.gen_len
     S_max = P + G
 
-    decode = jax.jit(make_decode_step(cfg))
+    # donate the KV cache (arg 1): each step rebinds it, so XLA updates
+    # the buffers in place instead of doubling peak memory — same
+    # aliasing the dryrun decode estimator models (donation audit:
+    # tests/test_donation.py). CPU drops donation with a warning per
+    # executable; suppress just that message
+    import warnings
+    _decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    def decode(*args):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return _decode(*args)
     prompts = jax.random.randint(jax.random.key(1), (B, P), 0,
                                  cfg.vocab_size)
 

@@ -55,9 +55,23 @@ class StreamingSession:
     persistent Pallas kernel per conv node; bias+ReLU+pool AND residual
     adds fused in the kernel epilogue, so ``pool_backend`` is ignored),
     ``"graphkernel"`` (fused chains of conv nodes share ONE persistent
-    kernel and a VMEM activation arena — O(#chains) launches), or
-    ``"scan"`` (serial step replay). ``pool_backend="fused"`` serves
-    CONV+POOL nodes through the Pallas fused conv+ReLU+pool kernel.
+    kernel and a VMEM activation arena — O(#chains) launches),
+    ``"scan"`` (serial step replay), or ``"auto"`` — the measured
+    autotuner (core/autotune.py) times candidate plans per conv node at
+    construction and serves the winning mixed-mode plan; pass
+    ``autotune_cache`` (an ``AutotuneCache`` or a JSON path) to reuse
+    cached measurements across sessions, ``autotune_timer`` /
+    ``autotune_budgets`` to control the search (CI smoke lanes shrink
+    both). ``pool_backend="fused"`` serves CONV+POOL nodes through the
+    Pallas fused conv+ReLU+pool kernel.
+
+    Kernel programs are lowered batch-aware at ``max_batch`` (ISSUE 8):
+    the batch axis rides the megakernel/graphkernel grids as the
+    outermost dimension (``batch_block`` clamped to the VMEM budget),
+    so batched calls amortise launch + weight traffic instead of
+    replaying a per-image schedule B times. Smaller batches still serve
+    through the same programs (the launch clamps the block to the
+    actual batch).
 
     ``donate`` (default True) donates the input batch buffer to the
     compiled executable, so XLA reuses it for the inter-layer
@@ -84,6 +98,9 @@ class StreamingSession:
                  donate: bool = True, precision: str = "fp32",
                  qnet=None,
                  fallback=None, guard=None,
+                 autotune_cache=None,
+                 autotune_timer: Optional[Callable] = None,
+                 autotune_budgets: Optional[Sequence[int]] = None,
                  max_pending: Optional[int] = None,
                  compile_retries: int = 2,
                  backoff_base: float = 0.05,
@@ -136,8 +153,10 @@ class StreamingSession:
         self._qgraph = qgraph
         self._conv_fn, self._conv_backend = conv_fn, conv_backend
         # -- graceful degradation (runtime/fallback.py, runtime/guard.py)
-        if guard is not None and guard is not False and fallback is None:
+        if guard is not None and guard is not False and fallback is None \
+                and mode != "auto":
             fallback = True             # repair needs the resolved plan
+            # (mode="auto" already serves through a resolved plan)
         self.guard = None
         if guard is not None and guard is not False:
             from repro.runtime.guard import GuardConfig
@@ -147,7 +166,48 @@ class StreamingSession:
             # with donating its buffer to the compiled executable
             self.donate = False
         self.resolved = None
-        if fallback is not None and fallback is not False:
+        self.tuned = None
+        self.autotune_cache = None
+        # int8 + guard: the guard must see raw int8 codes (saturation
+        # is invisible after dequantize) — the session dequantizes
+        # after the check
+        self._guard_raw = (self.guard is not None and precision == "int8")
+        if mode == "auto":
+            if fallback is not None and fallback is not False:
+                raise ValueError(
+                    "mode='auto' builds its own resolved plan — it "
+                    "cannot combine with fallback= (the tuner, not the "
+                    "degradation walk, decides per-node modes)")
+            from repro.core.autotune import (AutotuneCache, resolve_plan,
+                                             tune_graph)
+            cache_path = None
+            if isinstance(autotune_cache, str):
+                cache_path = autotune_cache
+                autotune_cache = AutotuneCache.load(autotune_cache)
+            self.autotune_cache = autotune_cache \
+                if autotune_cache is not None else AutotuneCache()
+            # tune at the serving batch shape: the winner is only valid
+            # for the batch it was measured at (= the cache key's batch)
+            xt = jax.random.normal(jax.random.key(0),
+                                   (self.max_batch,) + graph.in_shape)
+            self.tuned = tune_graph(
+                graph, self._progs,
+                None if precision == "int8" else self.weights, xt,
+                precision=precision, qgraph=qgraph,
+                timer=autotune_timer, cache=self.autotune_cache,
+                conv_fn=conv_fn, conv_backend=conv_backend,
+                **({"vmem_budgets": tuple(autotune_budgets)}
+                   if autotune_budgets is not None else {}))
+            if cache_path is not None:
+                self.autotune_cache.save(cache_path)
+            self.resolved = resolve_plan(
+                graph, self._progs, self.tuned.modes_dict(),
+                vmem_budget=self.tuned.vmem_budget, precision=precision,
+                qgraph=qgraph, batch=self.max_batch)
+            self._ops = self.resolved.operands()
+            self._forward = self.resolved.forward_fn(
+                conv_fn, conv_backend, dequantize=not self._guard_raw)
+        elif fallback is not None and fallback is not False:
             from repro.runtime.fallback import (FallbackChain,
                                                 resolve_graph)
             chain = fallback if isinstance(fallback, FallbackChain) \
@@ -155,12 +215,8 @@ class StreamingSession:
             self.resolved = resolve_graph(graph, self._progs, mode=mode,
                                           chain=chain,
                                           precision=precision,
-                                          qgraph=qgraph)
-            # int8 + guard: the guard must see raw int8 codes
-            # (saturation is invisible after dequantize) — the session
-            # dequantizes after the check
-            self._guard_raw = (self.guard is not None
-                               and precision == "int8")
+                                          qgraph=qgraph,
+                                          batch=self.max_batch)
             self._ops = self.resolved.operands()
             self._forward = self.resolved.forward_fn(
                 conv_fn, conv_backend,
@@ -168,12 +224,14 @@ class StreamingSession:
         else:
             self._guard_raw = False
             self._ops = graph_operands(graph, self._progs, mode,
-                                       precision=precision)
+                                       precision=precision,
+                                       batch=self.max_batch)
             self._forward = graph_forward_fn(graph, self._progs, conv_fn,
                                              conv_backend, mode=mode,
                                              pool_backend=pool_backend,
                                              precision=precision,
-                                             qgraph=qgraph)
+                                             qgraph=qgraph,
+                                             batch=self.max_batch)
         # -- serving guardrails
         self.max_pending = max_pending
         self.compile_retries = int(compile_retries)
@@ -236,18 +294,23 @@ class StreamingSession:
             # inter-layer activations instead of doubling peak HBM.
             # Weights and operand tables are NOT donated — they serve
             # every subsequent call of the cached executable.
-            jitted = jax.jit(
+            raw = jax.jit(
                 traced, donate_argnums=(0,) if self.donate else ())
+            jitted = raw
             if self.donate:
                 # backends without donation support (CPU) warn on every
                 # compile; suppress just that, just here — not with a
                 # process-global filter
-                def jitted(*args, _fn=jitted):
+                def jitted(*args, _fn=raw):
                     with warnings.catch_warnings():
                         warnings.filterwarnings(
                             "ignore",
                             message="Some donated buffers were not usable")
                         return _fn(*args)
+                # keep the jit's inspection surface: the donation audit
+                # (tests/test_donation.py) lowers the serving executable
+                # and checks the input-output aliasing annotation
+                jitted.lower = raw.lower
             self._executables[key] = jitted
         return self._executables[key]
 
@@ -452,6 +515,8 @@ class StreamingSession:
             h["node_modes"] = dict(self.resolved.node_modes)
             h["degradation_events"] = [e.as_dict()
                                        for e in self.resolved.events]
+        if self.tuned is not None:
+            h["autotune"] = self.tuned.as_dict()
         return h
 
     def describe(self) -> str:

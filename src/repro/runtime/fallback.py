@@ -48,7 +48,8 @@ from repro.core.graph import (INPUT, NetworkGraph, check_graph_input,
                               topological_schedule)
 from repro.core.schedule import (DEFAULT_VMEM_BUDGET, ChainNodeSpec,
                                  lower_graph_kernel)
-from repro.core.streaming import (_call_cached, _graph_epilogues,
+from repro.core.streaming import (_call_cached, _chain_batch_block,
+                                  _graph_epilogues,
                                   _graph_kernel_program,
                                   _normalize_mode,
                                   _partition_waves_cached,
@@ -363,7 +364,8 @@ def resolve_graph(graph: NetworkGraph, programs, *,
                   chain: Optional[FallbackChain] = None,
                   vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET,
                   precision: str = "fp32",
-                  qgraph=None) -> ResolvedGraph:
+                  qgraph=None,
+                  batch: int = 1) -> ResolvedGraph:
     """Resolve per-node executor modes by walking the fallback chain.
 
     Each conv node starts at ``mode`` and attempts its pipeline stages;
@@ -414,7 +416,7 @@ def resolve_graph(graph: NetworkGraph, programs, *,
                     fault.fault_point("plan", name, m)
                     kp = _graph_kernel_program(
                         programs[name], epi[name][0],
-                        epi[name][1] is not None, vmem_budget)
+                        epi[name][1] is not None, vmem_budget, batch)
                     fault.fault_point("lower", name, m)
                     if budget is not None and kp.vmem_bytes > budget:
                         raise BudgetExceeded(
@@ -463,7 +465,10 @@ def resolve_graph(graph: NetworkGraph, programs, *,
                                    out_value=epi[k][2],
                                    residual_value=epi[k][1])
                      for k in c.convs]
-            gkp = lower_graph_kernel(specs, quantized=quantized)
+            gkp = lower_graph_kernel(
+                specs, quantized=quantized,
+                batch_block=_chain_batch_block(specs, quantized,
+                                               vmem_budget, batch))
             # chain-unit launch probe: the whole fused chain is the
             # failure unit here (arm("launch", head, "graphkernel"))
             fault.fault_point("launch", head, "graphkernel")
@@ -514,7 +519,8 @@ def run_graph_degraded(graph: NetworkGraph, plans, x: jax.Array, weights,
     programs = compile_graph(graph, plans)
     resolved = resolve_graph(graph, programs, mode=mode, chain=chain,
                              vmem_budget=vmem_budget,
-                             precision=precision, qgraph=qgraph)
+                             precision=precision, qgraph=qgraph,
+                             batch=x.shape[0])
     qsig = ()
     if precision == "int8":
         qsig = (float(qgraph.scales[INPUT]),

@@ -7,6 +7,7 @@ and the data pipeline is stateless in the step index.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -41,7 +42,18 @@ def train_lm(cfg: ModelConfig, tcfg: TrainConfig, *, num_steps: int,
         if got[0] is not None:
             start, state = got
 
-    train_step = jax.jit(make_train_step(cfg, tcfg))
+    # donate the train state (arg 0): the loop rebinds it every step, so
+    # XLA reuses the param/moment buffers in place — the aliasing the
+    # dryrun train estimator already models (donation audit:
+    # tests/test_donation.py). CPU drops donation with a warning per
+    # executable; suppress just that message
+    _step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    def train_step(state, b):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return _step(state, b)
     wd = StepWatchdog()
     history = []
     for step in range(start, num_steps):

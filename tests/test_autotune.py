@@ -1,0 +1,303 @@
+"""Measured execution-plan autotuner (core/autotune.py, ISSUE 8):
+cache-key collision rules, JSON round-trips, deterministic tuning with
+fake timers, forced-mode plan resolution, and the session's
+``mode="auto"`` wiring."""
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.autotune import (AutotuneCache, TunedPlan, resolve_plan,
+                                 tune_graph)
+from repro.core.decomposition import ConvLayer
+from repro.core.graph import INPUT, GraphNode, NetworkGraph, chain_graph
+from repro.core.streaming import (compile_graph, plan_graph,
+                                  run_graph_reference)
+from repro.models.cnn import init_graph_weights
+
+L1 = ConvLayer("c1", 16, 16, 3, 8, 3, pad=1, pool=2)
+L2 = ConvLayer("c2", 8, 8, 8, 8, 3, pad=1)
+
+
+def _graph(name="tuned"):
+    return chain_graph((L1, L2), name=name)
+
+
+def _programs(graph):
+    return compile_graph(graph, plan_graph(graph, 64 * 1024))
+
+
+def _fake_timer(costs, calls=None):
+    """Deterministic timer: label -> seconds via ``costs``; optionally
+    records every label it was asked to time."""
+    def timer(label, fn):
+        del fn                       # decisions come from the table
+        if calls is not None:
+            calls.append(label)
+        return costs(label)
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# Cache keys
+# ---------------------------------------------------------------------------
+
+def test_cache_key_separates_batch_and_precision():
+    g = _graph()
+    keys = {AutotuneCache.key(g, 1, "fp32"),
+            AutotuneCache.key(g, 4, "fp32"),
+            AutotuneCache.key(g, 1, "int8"),
+            AutotuneCache.key(g, 4, "int8")}
+    assert len(keys) == 4
+
+
+def test_cache_key_same_geometry_different_topology_no_collision():
+    """Two graphs sharing every conv geometry but wired differently
+    must never exchange plans — the key hashes the full topology, not
+    the layer shapes."""
+    a = ConvLayer("p1", 8, 8, 4, 4, 3, pad=1)
+    b = ConvLayer("p2", 8, 8, 4, 4, 3, pad=1)
+    serial = NetworkGraph(
+        name="probe", in_shape=(8, 8, 4),
+        nodes=(GraphNode("p1", "conv", (INPUT,), layer=a),
+               GraphNode("p2", "conv", ("p1",), layer=b)),
+        output="p2")
+    forked = NetworkGraph(
+        name="probe", in_shape=(8, 8, 4),
+        nodes=(GraphNode("p1", "conv", (INPUT,), layer=a),
+               GraphNode("p2", "conv", (INPUT,), layer=b),
+               GraphNode("join", "add", ("p1", "p2"))),
+        output="join")
+    assert AutotuneCache.key(serial, 1, "fp32") \
+        != AutotuneCache.key(forked, 1, "fp32")
+
+
+def test_cache_key_stable_across_equal_graphs():
+    assert AutotuneCache.key(_graph(), 2, "fp32") \
+        == AutotuneCache.key(_graph(), 2, "fp32")
+
+
+# ---------------------------------------------------------------------------
+# TunedPlan / cache JSON round-trips
+# ---------------------------------------------------------------------------
+
+def _plan(batch=2, precision="fp32"):
+    return TunedPlan(node_modes=(("c1", "wave"), ("c2", "megakernel")),
+                     vmem_budget=1 << 22, batch=batch,
+                     precision=precision, us_per_batch=123.4,
+                     candidates_us=(("wave@4194304", 200.0),
+                                    ("mixed@4194304", 123.4)))
+
+
+def test_tuned_plan_dict_round_trip():
+    p = _plan()
+    assert TunedPlan.from_dict(p.as_dict()) == p
+    assert p.modes_dict() == OrderedDict([("c1", "wave"),
+                                          ("c2", "megakernel")])
+
+
+def test_cache_json_round_trip(tmp_path):
+    g = _graph()
+    cache = AutotuneCache()
+    cache.put(g, _plan())
+    again = AutotuneCache.from_json(cache.to_json())
+    assert again.get(g, 2, "fp32") == _plan()
+    assert again.get(g, 3, "fp32") is None        # other batch: miss
+    path = tmp_path / "tune.json"
+    cache.save(str(path))
+    assert AutotuneCache.load(str(path)).get(g, 2, "fp32") == _plan()
+
+
+def test_cache_load_missing_path_is_empty():
+    cache = AutotuneCache.load("/nonexistent/tune.json")
+    assert len(cache) == 0
+
+
+def test_cache_rejects_unknown_version():
+    with pytest.raises(ValueError, match="version"):
+        AutotuneCache.from_json('{"version": 9, "entries": {}}')
+
+
+# ---------------------------------------------------------------------------
+# tune_graph with a fake timer: deterministic search
+# ---------------------------------------------------------------------------
+
+def _tune(costs, calls=None, **kw):
+    g = _graph()
+    progs = _programs(g)
+    weights = init_graph_weights(g, jax.random.key(0))
+    x = jnp.zeros((2, 16, 16, 3), jnp.float32)
+    return tune_graph(g, progs, weights, x,
+                      timer=_fake_timer(costs, calls), **kw), g
+
+
+def test_tune_picks_cheapest_fixed_mode():
+    def costs(label):
+        kind = label[0]
+        if kind == "node":               # per-node probes: c1 wave wins
+            return 1.0 if label[2] == "wave" else 2.0
+        return {"wave": 5.0, "megakernel": 3.0, "graphkernel": 9.0,
+                "mixed": 7.0, "mixed+chains": 7.0}[
+                    label[1].split("@")[0]]
+    plan, _ = _tune(costs)
+    assert dict(plan.node_modes) == {"c1": "megakernel",
+                                     "c2": "megakernel"}
+    assert plan.us_per_batch == 3.0 * 1e6
+    # every candidate's time is recorded for provenance
+    assert dict(plan.candidates_us)[
+        "megakernel@%d" % plan.vmem_budget] == 3.0 * 1e6
+
+
+def test_tune_picks_mixed_plan_from_per_node_probes():
+    """Per-node probes say c1 wants wave and c2 wants megakernel; when
+    the mixed race wins, the plan carries exactly those modes."""
+    def costs(label):
+        if label[0] == "node":
+            want = "wave" if label[1] == "c1" else "megakernel"
+            return 1.0 if label[2] == want else 2.0
+        return 1.0 if label[1].startswith("mixed@") else 5.0
+    plan, _ = _tune(costs)
+    assert dict(plan.node_modes) == {"c1": "wave", "c2": "megakernel"}
+
+
+def test_tune_settles_standalone_graphkernel_to_megakernel():
+    """mixed+chains offers megakernel winners to the chain partitioner;
+    a chain of one demotes back to megakernel, and the recorded plan
+    reflects what was actually lowered (so a cached replay rebuilds
+    the measured executable, not the pre-demotion wish)."""
+    def costs(label):
+        if label[0] == "node":
+            want = "wave" if label[1] == "c1" else "megakernel"
+            return 1.0 if label[2] == want else 2.0
+        return 1.0 if label[1].startswith("mixed+chains@") else 5.0
+    plan, _ = _tune(costs)
+    # c2 was offered as graphkernel but has no fusible partner
+    assert dict(plan.node_modes)["c2"] in ("megakernel", "graphkernel")
+    # whatever settled must resolve + run (validity of the record)
+    g = _graph()
+    resolved = resolve_plan(g, _programs(g), plan.modes_dict(),
+                            vmem_budget=plan.vmem_budget, batch=2)
+    assert set(resolved.node_modes) == {"c1", "c2"}
+
+
+def test_tune_is_deterministic():
+    def costs(label):
+        return float(len(str(label)))     # arbitrary but fixed
+    p1, _ = _tune(costs)
+    p2, _ = _tune(costs)
+    assert p1 == p2
+
+
+def test_tune_winner_never_worse_than_any_fixed_mode():
+    """The ratchet's invariant: every fixed mode is itself a candidate,
+    so the winner's measured time is the minimum over candidates."""
+    def costs(label):
+        return 1.0 if label[0] == "node" else \
+            float(abs(hash(label[1])) % 100 + 1)
+    plan, _ = _tune(costs)
+    assert plan.us_per_batch == min(us for _, us in plan.candidates_us)
+
+
+def test_tune_cache_hit_skips_the_search():
+    calls = []
+    cache = AutotuneCache()
+    costs = lambda label: 1.0
+    plan, g = _tune(costs, calls=calls, cache=cache)
+    assert len(cache) == 1 and len(calls) > 0
+    calls2 = []
+    plan2, _ = _tune(costs, calls=calls2, cache=cache)
+    assert plan2 == plan
+    assert calls2 == [], "cache hit must not time anything"
+
+
+def test_tune_cache_miss_on_other_batch():
+    cache = AutotuneCache()
+    g = _graph()
+    progs = _programs(g)
+    weights = init_graph_weights(g, jax.random.key(0))
+    tune_graph(g, progs, weights, jnp.zeros((2, 16, 16, 3)),
+               timer=_fake_timer(lambda l: 1.0), cache=cache)
+    calls = []
+    tune_graph(g, progs, weights, jnp.zeros((4, 16, 16, 3)),
+               timer=_fake_timer(lambda l: 1.0, calls), cache=cache)
+    assert len(calls) > 0, "a different batch shape must re-tune"
+    assert len(cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# resolve_plan: forced-mode resolution is numerically faithful
+# ---------------------------------------------------------------------------
+
+def test_resolve_plan_mixed_modes_match_reference():
+    g = _graph()
+    progs = _programs(g)
+    weights = init_graph_weights(g, jax.random.key(1), scale=0.1)
+    x = jax.random.normal(jax.random.key(2), (2, 16, 16, 3))
+    ref = run_graph_reference(g, weights, x)[g.output]
+    resolved = resolve_plan(g, progs,
+                            {"c1": "wave", "c2": "megakernel"}, batch=2)
+    y = jax.jit(resolved.forward_fn())(x, weights, resolved.operands())
+    assert float(jnp.max(jnp.abs(y - ref))) < 1e-4
+    assert resolved.node_modes == OrderedDict(
+        [("c1", "wave"), ("c2", "megakernel")])
+
+
+def test_resolve_plan_rejects_missing_and_int8_wave():
+    g = _graph()
+    progs = _programs(g)
+    with pytest.raises(ValueError, match="no mode for conv node"):
+        resolve_plan(g, progs, {"c1": "wave"})
+    with pytest.raises(ValueError, match="no 'wave' datapath"):
+        resolve_plan(g, progs, {"c1": "wave", "c2": "megakernel"},
+                     precision="int8")
+
+
+# ---------------------------------------------------------------------------
+# StreamingSession mode="auto"
+# ---------------------------------------------------------------------------
+
+def test_session_auto_serves_tuned_plan(tmp_path):
+    """mode='auto' tunes at construction (fake timer: c1 wave, mixed
+    plan wins), serves numerically, persists the cache, and reports the
+    plan through health(); a second session on the same cache file
+    makes zero timer calls."""
+    from repro.launch.session import StreamingSession
+
+    def costs(label):
+        if label[0] == "node":
+            want = "wave" if label[1] == "c1" else "megakernel"
+            return 1.0 if label[2] == want else 2.0
+        return 1.0 if label[1].startswith("mixed@") else 5.0
+
+    g = _graph()
+    weights = init_graph_weights(g, jax.random.key(1), scale=0.1)
+    path = str(tmp_path / "tune.json")
+    calls = []
+    sess = StreamingSession.for_graph(
+        g, weights, sram_budget=64 * 1024, max_batch=2, mode="auto",
+        autotune_cache=path, autotune_timer=_fake_timer(costs, calls))
+    assert len(calls) > 0
+    assert dict(sess.tuned.node_modes) == {"c1": "wave",
+                                           "c2": "megakernel"}
+    assert sess.health()["autotune"]["batch"] == 2
+    x = jax.random.normal(jax.random.key(3), (2, 16, 16, 3))
+    ref = run_graph_reference(g, weights, x)[g.output]
+    y = sess.run_batch(jnp.array(x))
+    assert float(jnp.max(jnp.abs(y - ref))) < 1e-4
+
+    calls2 = []
+    sess2 = StreamingSession.for_graph(
+        g, weights, sram_budget=64 * 1024, max_batch=2, mode="auto",
+        autotune_cache=path, autotune_timer=_fake_timer(costs, calls2))
+    assert calls2 == [], "cached plan must skip the measured search"
+    assert sess2.tuned == sess.tuned
+
+
+def test_session_auto_rejects_fallback_combo():
+    from repro.launch.session import StreamingSession
+    g = _graph()
+    weights = init_graph_weights(g, jax.random.key(1))
+    with pytest.raises(ValueError, match="auto"):
+        StreamingSession.for_graph(g, weights, mode="auto",
+                                   fallback=True)

@@ -331,3 +331,174 @@ def test_gate_rows_without_degradation_meta_unaffected():
     for r in cur["records"]:
         r["meta"].pop("degradation_events", None)
     assert gate.compare(base, cur) == []
+
+
+# ---------------------------------------------------------------------------
+# Batch-axis throughput ratchet (ISSUE 8): *_batch<B> curve families
+# ---------------------------------------------------------------------------
+
+def _batch_row(name, batch, us):
+    return {"name": f"{name}_batch{batch}", "us_per_call": us,
+            "meta": {"batch": batch, "us_per_image": us / batch,
+                     "throughput_imgs_s": batch / (us * 1e-6)}}
+
+
+def _payload_batches(us1=1000, us16=None, us64=None, include=True,
+                     fam="streaming_facedet_wave"):
+    """One facedet wave curve family; default gain 16/64 rows at 5x."""
+    p = _payload(100, 300, 200)
+    if include:
+        p["records"].append(_batch_row(fam, 1, us1))
+        if us16 is not None:
+            p["records"].append(_batch_row(fam, 16, us16))
+        if us64 is not None:
+            p["records"].append(_batch_row(fam, 64, us64))
+    return p
+
+
+def test_gate_batch_curve_passes_at_required_gain():
+    # batch=64 at 12800us -> 5000 img/s vs 1000 img/s at batch=1: 5x
+    base = _payload_batches(1000, us16=4000, us64=12800)
+    assert gate.compare(base, base) == []
+
+
+def test_gate_fails_on_weak_committed_batch_gain():
+    """Acceptance: the committed curve itself must show >= 4x."""
+    base = _payload_batches(1000, us16=8000, us64=32000)   # 2x only
+    fails = gate.compare(base, base)
+    assert any("committed batched throughput gain 2.00x" in f
+               for f in fails)
+
+
+def test_gate_batch_rule_is_per_network_best_family():
+    """The ratchet scores each NETWORK on its best executor family:
+    a megakernel curve that saturates early (VMEM-clamped block) is
+    fine while the wave curve scales."""
+    base = _payload_batches(1000, us16=8000, us64=32000,   # mega: 2x
+                            fam="streaming_facedet_megakernel")
+    base["records"] += _payload_batches(
+        1000, us16=3200, us64=12800)["records"][-3:]       # wave: 5x
+    assert gate.compare(base, base) == []
+
+
+def test_gate_batch_rule_takes_best_batched_row():
+    """The rule is max over B >= 16 — one strong point clears it even
+    if a bigger batch saturates."""
+    # batch16: 16/3200us = 5x; batch64 flat at 1x-per-image
+    base = _payload_batches(1000, us16=3200, us64=64000)
+    assert gate.compare(base, base) == []
+
+
+def test_gate_batch_current_run_gets_threshold_slack():
+    base = _payload_batches(1000, us16=4000, us64=12800)   # 5x committed
+    # current at 3.5x: above the 4/(1+0.2) = 3.33 floor -> noise
+    ok = gate.compare(base, _payload_batches(1000, us16=4571, us64=18286))
+    assert ok == []
+    # current at 2x -> real regression
+    fails = gate.compare(base, _payload_batches(1000, us16=8000,
+                                                us64=32000))
+    assert any("measured batched throughput gain" in f for f in fails)
+
+
+def test_gate_fails_when_batch_curve_goes_missing():
+    base = _payload_batches(1000, us16=4000, us64=12800)
+    fails = gate.compare(base, _payload_batches(include=False))
+    assert any("batch curves present in baseline but incomplete" in f
+               for f in fails)
+    # dropping just the batched end also disarms -> fail
+    fails = gate.compare(base, _payload_batches(1000))
+    assert any("incomplete" in f for f in fails)
+
+
+def test_gate_incomplete_baseline_curve_is_not_gated():
+    """A baseline with only the batch=1 anchor (or only batched rows)
+    has no curve to ratchet — no failure, like pre-ISSUE-8 baselines."""
+    base = _payload_batches(1000)                  # anchor only
+    assert gate.compare(base, base) == []
+    base = _payload_batches(include=False)
+    assert gate.compare(base, _payload_batches(1000, us16=4000)) == []
+
+
+def test_gate_batch_speedup_knob():
+    base = _payload_batches(1000, us16=3200)       # 5x
+    fails = gate.compare(base, base, batch_speedup=6.0)
+    assert any("required 6.00x" in f for f in fails)
+    assert gate.compare(base, base, batch_speedup=4.0) == []
+
+
+def test_gate_batch_rows_are_not_share_gated():
+    """Curve rows live outside the share groups: a slower curve row in
+    isolation only matters through its own family's ratchet."""
+    base = _payload_batches(1000, us16=4000, us64=12800)
+    cur = _payload_batches(900, us16=3600, us64=11520)     # same 5x gain
+    assert gate.compare(base, cur) == []
+
+
+def test_gate_batch_throughput_meta_optional():
+    """_throughput falls back to batch/us when the explicit meta field
+    is absent (hand-built or older measurement files)."""
+    base = _payload_batches(1000, us16=4000, us64=12800)
+    cur = _payload_batches(1000, us16=4000, us64=12800)
+    for r in cur["records"]:
+        r.get("meta", {}).pop("throughput_imgs_s", None)
+    assert gate.compare(base, cur) == []
+
+
+# ---------------------------------------------------------------------------
+# mode="auto" ratchet (ISSUE 8): tuned plan vs best fixed mode
+# ---------------------------------------------------------------------------
+
+def _payload_auto(auto_us, wave_us=300, mega_us=200):
+    p = _payload(100, wave_us, mega_us)
+    p["records"].append(
+        {"name": "streaming_alexnet_auto", "us_per_call": auto_us,
+         "meta": {"batch": 1, "node_modes": {"c1": "wave"}}})
+    return p
+
+
+def test_gate_auto_beats_best_fixed_passes():
+    base = _payload_auto(180)                      # beats mega's 200
+    assert gate.compare(base, base) == []
+    tie = _payload_auto(200)                       # ties are fine
+    assert gate.compare(tie, tie) == []
+
+
+def test_gate_fails_on_committed_auto_losing_to_fixed():
+    """Acceptance: the committed tuned plan must not lose to the best
+    fixed-mode row — strictly, no slack on the artifact of record."""
+    base = _payload_auto(210)
+    fails = gate.compare(base, base)
+    assert any("committed tuned plan 210us slower" in f for f in fails)
+
+
+def test_gate_auto_current_run_gets_threshold_slack():
+    base = _payload_auto(180)
+    # current auto 15% over best fixed: within the 20% slack
+    assert gate.compare(base, _payload_auto(230)) == []
+    fails = gate.compare(base, _payload_auto(250))
+    assert any("measured tuned plan" in f for f in fails)
+
+
+def test_gate_fails_when_auto_row_goes_missing():
+    base = _payload_auto(180)
+    cur = _payload(100, 300, 200)
+    fails = gate.compare(base, cur)
+    assert any("auto row present in baseline" in f for f in fails)
+
+
+def test_gate_auto_row_is_not_share_gated():
+    """The auto row is in SKIP_SUFFIXES: its wall-clock participates
+    only in the tuned-vs-fixed ratchet, never the share checks."""
+    base = _payload_auto(180)
+    cur = _payload_auto(180, wave_us=300, mega_us=200)
+    # blow up only the auto row within slack of fixed: no share failure
+    cur["records"] = [dict(r) for r in cur["records"]]
+    for r in cur["records"]:
+        if r["name"] == "streaming_alexnet_auto":
+            r["us_per_call"] = 239                 # < 200 * 1.2
+    assert gate.compare(base, cur) == []
+
+
+def test_gate_baseline_without_auto_row_accepts_new_row():
+    base = _payload(100, 300, 200)
+    assert gate.compare(base, _payload_auto(180)) == []
