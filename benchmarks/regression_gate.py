@@ -57,6 +57,14 @@ graceful-degradation runtime demoted nodes during the bench, so the
 row timed a cheaper executor than its name claims. Clean hosts must
 report 0.
 
+Observability rules (ISSUE 9), armed once the committed baseline was
+produced by the instrumented bench: every current row must carry the
+span-derived ``timing_breakdown`` meta (plan/compile/execute split),
+and the AlexNet megakernel row's measured instrumentation overhead
+(``obs_overhead_frac``, enabled-vs-disabled tracer) must stay within
+``--obs-overhead`` (default 2%) — strict on the committed baseline,
+additive ``--threshold`` slack on current runs.
+
 ``--current`` accepts several measurement files; they merge by
 per-record minimum before comparing. CI runs the smoke bench more than
 once and gates on the merge: contention tends to poison a whole run at
@@ -135,14 +143,28 @@ def _records(payload: dict) -> dict:
 
 def merge_min(payloads: "list[dict]") -> dict:
     """Merge measurement runs by per-record minimum ``us_per_call``
-    (meta rides along from the winning run)."""
+    (meta rides along from the winning run). ``obs_overhead_frac`` is
+    itself a difference of two noisy timings, so it merges by its own
+    per-run minimum — contention inflates one run's ratio, rarely every
+    run's — independent of which run won the wall-clock."""
     merged: dict = {}
+    overheads: dict = {}
     for payload in payloads:
         for name, rec in _records(payload).items():
+            frac = rec.get("meta", {}).get("obs_overhead_frac")
+            if frac is not None:
+                overheads[name] = min(frac, overheads.get(name, frac))
             if name not in merged \
                     or rec["us_per_call"] < merged[name]["us_per_call"]:
                 merged[name] = rec
-    return {"records": list(merged.values())}
+    out = []
+    for name, rec in merged.items():
+        if name in overheads \
+                and rec["meta"].get("obs_overhead_frac") != overheads[name]:
+            rec = dict(rec, meta=dict(rec["meta"],
+                                      obs_overhead_frac=overheads[name]))
+        out.append(rec)
+    return {"records": out}
 
 
 def _group(name: str) -> str | None:
@@ -245,7 +267,8 @@ def _auto_vs_fixed(recs: dict) -> "tuple[float, str, float] | None":
 def compare(baseline: dict, current: dict, threshold: float = 0.20,
             absolute: bool = False,
             int8_speedup: float = 1.2,
-            batch_speedup: float = 4.0) -> list[str]:
+            batch_speedup: float = 4.0,
+            obs_overhead: float = 0.02) -> list[str]:
     """Return a list of failure strings (empty = gate passes)."""
     base, cur = _records(baseline), _records(current)
     shared = [n for n in _gated(base) if n in cur]
@@ -367,6 +390,46 @@ def compare(baseline: dict, current: dict, threshold: float = 0.20,
                 f"{c_gains[net]:.2f}x < {floor:.2f}x floor "
                 f"({batch_speedup:.2f}x required with {threshold:.0%} "
                 f"noise slack)")
+    # observability rules (ISSUE 9), armed only once the committed
+    # baseline was produced by the instrumented bench — old baselines
+    # predate the meta keys, so the rules ratchet on from the first
+    # regenerated baseline.
+    # (a) every bench row must carry the span-derived timing_breakdown
+    # meta: a row without it means the bench stopped splitting
+    # plan/compile/execute, so the phase-level perf trajectory went dark
+    if any("timing_breakdown" in r.get("meta", {}) for r in base.values()):
+        for name, rec in sorted(cur.items()):
+            if "timing_breakdown" not in rec.get("meta", {}):
+                failures.append(
+                    f"{name}: row is missing timing_breakdown meta — "
+                    f"the bench stopped reporting its "
+                    f"plan/compile/execute split")
+    # (b) disabled-tracer overhead gate: the AlexNet megakernel row
+    # re-times itself with the tracer off and reports the enabled/
+    # disabled ratio as obs_overhead_frac. The committed baseline is
+    # held strictly to --obs-overhead (default 2%); current runs get
+    # additive --threshold slack (the ratio is a difference of two
+    # min-of-reps timings, so CI noise enters twice)
+    b_frac = base.get(FP32_MEGA_ROW, {}).get("meta", {}) \
+                 .get("obs_overhead_frac")
+    if b_frac is not None:
+        if b_frac > obs_overhead:
+            failures.append(
+                f"{FP32_MEGA_ROW}: committed instrumentation overhead "
+                f"{b_frac:.1%} > {obs_overhead:.1%} budget")
+        c_frac = cur.get(FP32_MEGA_ROW, {}).get("meta", {}) \
+                    .get("obs_overhead_frac") if FP32_MEGA_ROW in cur \
+            else None
+        if c_frac is None:
+            failures.append(
+                f"{FP32_MEGA_ROW}: baseline carries obs_overhead_frac "
+                f"but the current run does not — the instrumentation "
+                f"overhead gate cannot be evaluated")
+        elif c_frac > obs_overhead + threshold:
+            failures.append(
+                f"{FP32_MEGA_ROW}: measured instrumentation overhead "
+                f"{c_frac:.1%} > {obs_overhead:.1%} budget + "
+                f"{threshold:.0%} noise slack")
     # mode="auto" ratchet (ISSUE 8): the tuned plan must not lose to
     # the best fixed-mode row — strict on the committed baseline,
     # threshold slack on current runs; once committed, the auto row
@@ -411,6 +474,11 @@ def main(argv=None) -> None:
                     help="required batched (batch>=16) throughput gain "
                          "over batch=1 for every *_batch<B> curve family "
                          "(default 4.0)")
+    ap.add_argument("--obs-overhead", type=float, default=0.02,
+                    help="max allowed disabled-instrumentation overhead "
+                         "fraction on the AlexNet megakernel row "
+                         "(default 0.02; current runs get additive "
+                         "--threshold slack)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -421,7 +489,8 @@ def main(argv=None) -> None:
     current = merge_min(currents)
     failures = compare(baseline, current, args.threshold, args.absolute,
                        int8_speedup=args.int8_speedup,
-                       batch_speedup=args.batch_speedup)
+                       batch_speedup=args.batch_speedup,
+                       obs_overhead=args.obs_overhead)
     compared = [n for n in _gated(_records(baseline))
                 if n in _records(current)]
     if failures:

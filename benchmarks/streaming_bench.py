@@ -49,6 +49,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
 from repro.core.decomposition import (ALEXNET_LAYERS, ALEXNET_STACK,
                                       plan_decomposition)
 from repro.core.schedule import compile_network, partition_waves
@@ -106,28 +107,72 @@ def graphkernel_traffic_bytes(chains, gkps, plans) -> int:
     return total
 
 
+class _Us(float):
+    """A microsecond timing that also carries its phase breakdown, so
+    ``_time``'s ``(us, out)`` call sites stay unchanged while ``_record``
+    can read ``us.breakdown``."""
+    breakdown: dict
+
+
+# span-list position of the last ``_time`` return: plan/lower spans
+# recorded after it belong to the NEXT row's setup (plan_graph /
+# compile_graph / graph_chain_programs run between timings)
+_TRACE_MARK = 0
+
+
+def _plan_us_since(tracer, mark) -> float:
+    """Sum of top-level plan/lower span durations since ``mark``.
+    Nested lower spans (chain lowering calls kernel lowering) are
+    counted once, at the outermost selected span."""
+    sel = [s for s in tracer.spans_since(mark, cats=("plan", "lower"))
+           if s.end_ns is not None]
+    ids = {s.id for s in sel}
+    return sum(s.dur_ns for s in sel if s.parent_id not in ids) / 1e3
+
+
 def _time(fn, *args, reps: int = 3, **kw):
     """min-of-reps timing: robust to CI-runner interference, which the
     regression gate needs (a co-scheduled neighbour inflates means but
-    rarely every single rep)."""
+    rarely every single rep). Returns a ``_Us`` whose ``breakdown``
+    splits the row into plan (traced plan/lower spans since the last
+    ``_time``), compile (warm-up wall clock: trace + XLA compile), and
+    execute (the min-of-reps call) microseconds."""
+    global _TRACE_MARK
+    tracer = obs_trace.current_tracer()
+    plan_us = _plan_us_since(tracer, _TRACE_MARK) if tracer else 0.0
+    t0 = time.perf_counter()
     out = fn(*args, **kw)          # warm-up / compile
     jax.block_until_ready(out)
+    compile_us = (time.perf_counter() - t0) * 1e6
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         best = min(best, time.perf_counter() - t0)
-    return best * 1e6, out
+    if tracer:
+        _TRACE_MARK = tracer.mark()
+    us = _Us(best * 1e6)
+    us.breakdown = {"plan_us": round(plan_us, 1),
+                    "compile_us": round(compile_us, 1),
+                    "execute_us": round(best * 1e6, 1)}
+    return us, out
 
 
 def _record(name, us, batch=1, **meta):
     """One bench record. Every record carries explicit ``batch`` /
-    ``us_per_image`` / ``throughput_imgs_s`` meta (ISSUE 8): single-
-    image rows are batch=1 so their per-call and per-image numbers
-    coincide, and the batched-curve rows divide honestly."""
+    ``us_per_image`` / ``throughput_imgs_s`` meta (ISSUE 8) and a
+    ``timing_breakdown`` (plan/compile/execute split from the span
+    tracer, ISSUE 9 — the regression gate requires it on every row):
+    single-image rows are batch=1 so their per-call and per-image
+    numbers coincide, and the batched-curve rows divide honestly."""
+    bd = getattr(us, "breakdown", None)
+    if bd is None:                 # row timed outside _time: execute-only
+        bd = {"plan_us": 0.0, "compile_us": 0.0,
+              "execute_us": round(float(us), 1)}
     full = dict(batch=batch, us_per_image=round(us / batch, 1),
-                throughput_imgs_s=round(batch / (us * 1e-6), 1))
+                throughput_imgs_s=round(batch / (us * 1e-6), 1),
+                timing_breakdown=bd)
     full.update(meta)
     return {"name": name, "us_per_call": round(us, 1), "meta": full}
 
@@ -214,12 +259,25 @@ def _stack_records(reps: int, smoke: bool) -> list[dict]:
         modes.append(("wave_fused_pool", "wave", "fused"))
     timings = {}
     outs = {}
+    obs_overhead = None
     for label, mode, pool_backend in modes:
         fwd = jax.jit(network_forward_fn(programs, mode=mode,
                                          pool_backend=pool_backend))
         ops = network_operands(programs, mode)
         r = 1 if pool_backend == "fused" else reps
         timings[label], outs[label] = _time(fwd, x, weights, ops, reps=r)
+        if label == "megakernel":
+            # ISSUE 9 overhead gate: the same compiled executable
+            # re-timed with the tracer disabled. The instrumentation
+            # hooks stay compiled into every code path, so this ratio
+            # is the measured cost of leaving them there (gated <= 2%
+            # by regression_gate.py --obs-overhead).
+            prev = obs_trace.set_tracer(None)
+            try:
+                us_off, _ = _time(fwd, x, weights, ops, reps=r)
+            finally:
+                obs_trace.set_tracer(prev)
+            obs_overhead = round(timings[label] / us_off - 1, 4)
 
     n_steps = sum(p.n_steps for p in programs)
     n_disp = sum(partition_waves(p).n_waves for p in programs)
@@ -259,7 +317,8 @@ def _stack_records(reps: int, smoke: bool) -> list[dict]:
         speedup_vs_wave=round(timings["wave"] / timings["megakernel"], 2),
         pallas_calls=len(programs), launches=len(programs),
         grid_steps=sum(kp.n_tiles * kp.n_chain for kp in kprogs),
-        dram_traffic_bytes=mega_traffic, psum_hbm_bytes=0))
+        dram_traffic_bytes=mega_traffic, psum_hbm_bytes=0,
+        obs_overhead_frac=obs_overhead))
 
     # graphkernel: the whole conv stack fused into ONE pallas_call (a
     # 16 MB VMEM arena holds every inter-layer activation, so the only
@@ -485,11 +544,21 @@ def run_structured(smoke: bool = False) -> list[dict]:
     walk, Pallas tile backend, fused-pool backend — are skipped
     entirely (the gate ignores them anyway). The per-network VGG-16 /
     ResNet-18 rows run in both configurations (their gate rules —
-    baseline-present, traffic no-growth — need them in CI)."""
+    baseline-present, traffic no-growth — need them in CI). The whole
+    run executes under an active span tracer so every row's
+    ``timing_breakdown`` meta splits plan/compile/execute from real
+    spans; the AlexNet megakernel row additionally re-times itself with
+    the tracer disabled and reports ``obs_overhead_frac`` (ISSUE 9)."""
+    global _TRACE_MARK
     reps = 5
-    return (_conv1_records(reps, smoke) + _stack_records(reps, smoke)
-            + _network_records(2 if smoke else 3)
-            + _batch_records(reps))
+    prev = obs_trace.set_tracer(obs_trace.Tracer())
+    _TRACE_MARK = 0
+    try:
+        return (_conv1_records(reps, smoke) + _stack_records(reps, smoke)
+                + _network_records(2 if smoke else 3)
+                + _batch_records(reps))
+    finally:
+        obs_trace.set_tracer(prev)
 
 
 def format_rows(records: list[dict]) -> list[str]:

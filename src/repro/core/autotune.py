@@ -39,6 +39,8 @@ import jax.numpy as jnp
 
 from repro.core.graph import INPUT, NetworkGraph, conv_keyed
 from repro.core.schedule import DEFAULT_VMEM_BUDGET
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 # per-conv-node executor candidates (fp32); int8 has no wave datapath
 NODE_MODES_F32 = ("wave", "megakernel")
@@ -299,7 +301,11 @@ def tune_graph(graph: NetworkGraph, programs, weights, x: jax.Array,
     if cache is not None:
         hit = cache.get(graph, batch, precision)
         if hit is not None:
+            _metrics.registry().counter("autotune_cache.hits").inc()
+            _trace.event(f"autotune_hit:{graph.name}", cat="autotune",
+                         batch=batch, precision=precision)
             return hit
+        _metrics.registry().counter("autotune_cache.misses").inc()
     if timer is None:
         timer = default_timer()
     if precision == "int8" and qgraph is None:
@@ -329,11 +335,15 @@ def tune_graph(graph: NetworkGraph, programs, weights, x: jax.Array,
     results: "OrderedDict[str, float]" = OrderedDict()
     best = None          # (seconds, label, node_modes, budget)
     for label, (node_modes, budget) in candidates.items():
-        secs, resolved = _time_plan(
-            graph, programs, node_modes, x, weights,
-            vmem_budget=budget, precision=precision, qgraph=qgraph,
-            timer=timer, label=("plan", label),
-            conv_fn=conv_fn, conv_backend=conv_backend)
+        with _trace.span(f"candidate:{label}", cat="autotune",
+                         batch=batch, precision=precision) as sp:
+            secs, resolved = _time_plan(
+                graph, programs, node_modes, x, weights,
+                vmem_budget=budget, precision=precision, qgraph=qgraph,
+                timer=timer, label=("plan", label),
+                conv_fn=conv_fn, conv_backend=conv_backend)
+            if sp is not None:
+                sp.attrs["us"] = round(secs * 1e6, 1)
         results[label] = secs
         # record the modes the resolution actually settled on
         # (standalone graphkernel nodes demote to megakernel)
@@ -367,13 +377,20 @@ def _per_node_modes(graph, programs, weights, x, *, vmem_budget, timer,
         xin = env[n.inputs[0]]
         w, b = weights[n.name]
         wprog = _partition_waves_cached(programs[n.name])
-        t_wave = timer(
-            ("node", n.name, "wave"),
-            lambda: run_layer_wave(wprog, xin, w, b, conv_fn=conv_fn,
-                                   conv_backend=conv_backend))
-        t_mega = timer(
-            ("node", n.name, "megakernel"),
-            lambda: run_layer_megakernel(wprog, xin, w, b,
-                                         vmem_budget=vmem_budget))
+        with _trace.span(f"probe:{n.name}:wave", cat="autotune") as sp:
+            t_wave = timer(
+                ("node", n.name, "wave"),
+                lambda: run_layer_wave(wprog, xin, w, b, conv_fn=conv_fn,
+                                       conv_backend=conv_backend))
+            if sp is not None:
+                sp.attrs["us"] = round(t_wave * 1e6, 1)
+        with _trace.span(f"probe:{n.name}:megakernel",
+                         cat="autotune") as sp:
+            t_mega = timer(
+                ("node", n.name, "megakernel"),
+                lambda: run_layer_megakernel(wprog, xin, w, b,
+                                             vmem_budget=vmem_budget))
+            if sp is not None:
+                sp.attrs["us"] = round(t_mega * 1e6, 1)
         out[n.name] = "wave" if t_wave < t_mega else "megakernel"
     return out

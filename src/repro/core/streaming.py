@@ -80,6 +80,8 @@ from repro.core.schedule import (DEFAULT_VMEM_BUDGET as _VMEM_DEFAULT,
                                  WaveProgram, compile_layer,
                                  lower_graph_kernel, lower_kernel_program,
                                  partition_waves)
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.runtime.errors import PlanError
 
 
@@ -282,6 +284,28 @@ def _pad_to_grid(g: TileProgram, x, w):
     return xp, wp
 
 
+def _traced_execute(kind: str, layer_of: Callable):
+    """Wrap an executor body in a trace-time ``cat="execute"`` span.
+
+    Like the megakernel launch counters, the span fires once per jax
+    *trace* (the executor body runs at trace time inside jit), so span
+    counts line up with dispatch counts, not call counts. The disabled
+    path is one global read — no span objects, no context manager."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(prog, *a, **k):
+            t = _trace.current_tracer()
+            if t is None:
+                return fn(prog, *a, **k)
+            name = layer_of(prog).name
+            with t.span(f"{kind}:{name}", cat="execute", node=name,
+                        kind=kind):
+                return fn(prog, *a, **k)
+        return wrapper
+    return deco
+
+
+@_traced_execute("scan", lambda p: p.layer)
 def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
                    x, w, b, ops):
     """Trace-time body shared by all compiled executables."""
@@ -315,6 +339,7 @@ def _scan_executor(program: TileProgram, conv_fn: Callable, has_bias: bool,
 # Wave executor: one fused dispatch per dependency-free wave (ISSUE 2)
 # ---------------------------------------------------------------------------
 
+@_traced_execute("wave", lambda p: p.program.layer)
 def _wave_executor(wprog: WaveProgram, conv_fn: Callable, has_bias: bool,
                    x, w, b, wave_ops):
     """Replay a WaveProgram: ONE fused conv dispatch per wave.
@@ -599,16 +624,21 @@ def set_executor_cache_limit(limit: int) -> None:
     _EXECUTOR_CACHE_LIMIT = limit
     while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_LIMIT:
         _EXECUTOR_CACHE.popitem(last=False)
+        _metrics.registry().counter("executor_cache.evictions").inc()
 
 
 def _cached_executable(key: tuple, build: Callable) -> Callable:
+    reg = _metrics.registry()
     fn = _EXECUTOR_CACHE.get(key)
     if fn is None:
+        reg.counter("executor_cache.misses").inc()
         fn = _EXECUTOR_CACHE[key] = build()
     else:
+        reg.counter("executor_cache.hits").inc()
         _EXECUTOR_CACHE.move_to_end(key)
     while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_LIMIT:
         _EXECUTOR_CACHE.popitem(last=False)
+        reg.counter("executor_cache.evictions").inc()
     return fn
 
 
@@ -622,11 +652,22 @@ def _call_cached(key: tuple, build: Callable, *args):
     holds executables whose most recent call succeeded, and a later
     retry (or a fallback-mode rebuild under a different key) starts
     from a clean slot."""
+    fresh = key not in _EXECUTOR_CACHE
     fn = _cached_executable(key, build)
     try:
-        return fn(*args)
+        if _trace.current_tracer() is None:     # disabled fast path
+            return fn(*args)
+        # first call traces + compiles (jit is lazy); later calls just
+        # dispatch — split the span categories so the bench breakdown
+        # attributes time to the right phase
+        if fresh:
+            with _trace.span("compile", cat="compile"):
+                return fn(*args)
+        with _trace.span("executor_call", cat="run"):
+            return fn(*args)
     except Exception:
         _EXECUTOR_CACHE.pop(key, None)
+        _metrics.registry().counter("executor_cache.poisoned").inc()
         raise
 
 
@@ -735,8 +776,17 @@ def run_layer_streamed(layer: ConvLayer, plan: Plan, x: jax.Array,
 def plan_graph(graph: NetworkGraph,
                sram_budget: int = 128 * 1024) -> "OrderedDict[str, Plan]":
     """Plan every conv node's decomposition under one buffer budget."""
-    return OrderedDict((n.name, plan_decomposition(n.layer, sram_budget))
-                       for n in graph.conv_nodes())
+    with _trace.span(f"plan:{graph.name}", cat="plan",
+                     sram_budget=sram_budget) as sp:
+        plans = OrderedDict((n.name,
+                             plan_decomposition(n.layer, sram_budget))
+                            for n in graph.conv_nodes())
+        traffic = sum(p.dram_traffic for p in plans.values())
+        _metrics.registry().counter(
+            "modelled_dram_traffic_bytes").inc(traffic)
+        if sp is not None:
+            sp.attrs.update(nodes=len(plans), dram_traffic_bytes=traffic)
+    return plans
 
 
 # the shared per-conv-node calling convention lives in core/graph.py
@@ -747,8 +797,10 @@ def compile_graph(graph: NetworkGraph,
                   plans) -> "OrderedDict[str, TileProgram]":
     """Lower every conv node's Plan to its TileProgram, keyed by node."""
     plans = _conv_keyed(graph, plans, "plans")
-    return OrderedDict((name, compile_layer(graph.node(name).layer, p))
-                       for name, p in plans.items())
+    with _trace.span(f"lower:{graph.name}", cat="lower",
+                     nodes=len(plans)):
+        return OrderedDict((name, compile_layer(graph.node(name).layer, p))
+                           for name, p in plans.items())
 
 
 def _graph_epilogues(graph: NetworkGraph):
@@ -808,11 +860,13 @@ def graph_kernel_programs(
     harnesses lower the same programs the forward replays."""
     programs = _conv_keyed(graph, programs, "programs")
     epi = _graph_epilogues(graph)
-    return OrderedDict(
-        (name, _graph_kernel_program(p, epi[name][0],
-                                     epi[name][1] is not None,
-                                     vmem_budget, batch))
-        for name, p in programs.items())
+    with _trace.span(f"lower_kernels:{graph.name}", cat="lower",
+                     nodes=len(programs), batch=batch):
+        return OrderedDict(
+            (name, _graph_kernel_program(p, epi[name][0],
+                                         epi[name][1] is not None,
+                                         vmem_budget, batch))
+            for name, p in programs.items())
 
 
 def graph_chain_programs(graph: NetworkGraph, programs,
@@ -836,24 +890,28 @@ def graph_chain_programs(graph: NetworkGraph, programs,
     largest per-step image block whose whole-chain arena + accumulator
     footprint fits the budget."""
     programs = _conv_keyed(graph, programs, "programs")
-    kprogs = graph_kernel_programs(graph, programs, vmem_budget, batch)
-    chains = fusible_chains(graph, kprogs, vmem_budget=vmem_budget,
-                            quantized=quantized)
-    epi = _graph_epilogues(graph)
-    by_name = {n.name: n for n in graph.nodes}
-    gkps = {}
-    for c in chains:
-        if len(c.convs) < 2:
-            continue
-        specs = [ChainNodeSpec(name=name, kp=kprogs[name],
-                               in_value=by_name[name].inputs[0],
-                               out_value=epi[name][2],
-                               residual_value=epi[name][1])
-                 for name in c.convs]
-        gkps[c.convs[0]] = lower_graph_kernel(
-            specs, quantized=quantized,
-            batch_block=_chain_batch_block(specs, quantized,
-                                           vmem_budget, batch))
+    with _trace.span(f"lower_chains:{graph.name}", cat="lower",
+                     batch=batch, quantized=quantized) as sp:
+        kprogs = graph_kernel_programs(graph, programs, vmem_budget, batch)
+        chains = fusible_chains(graph, kprogs, vmem_budget=vmem_budget,
+                                quantized=quantized)
+        epi = _graph_epilogues(graph)
+        by_name = {n.name: n for n in graph.nodes}
+        gkps = {}
+        for c in chains:
+            if len(c.convs) < 2:
+                continue
+            specs = [ChainNodeSpec(name=name, kp=kprogs[name],
+                                   in_value=by_name[name].inputs[0],
+                                   out_value=epi[name][2],
+                                   residual_value=epi[name][1])
+                     for name in c.convs]
+            gkps[c.convs[0]] = lower_graph_kernel(
+                specs, quantized=quantized,
+                batch_block=_chain_batch_block(specs, quantized,
+                                               vmem_budget, batch))
+        if sp is not None:
+            sp.attrs.update(chains=len(chains), fused=len(gkps))
     return chains, kprogs, gkps
 
 

@@ -6,6 +6,45 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+class LaunchCounter:
+    """Trace-time kernel-launch counter shared by both megakernel
+    families (fp32 ``wave_replay``, int8 ``wave_replay_q``).
+
+    A launch increments at jax *trace* time — once per pallas_call
+    built, not per execution — which is exactly the dispatch count the
+    paper's launch-overhead argument cares about. ``record(...)``
+    counts one launch (per-family local count + ``kernel_launches`` /
+    ``kernel_launches.<family>`` in the current metrics registry) and
+    returns a ``cat="execute"`` span context to wrap the kernel build,
+    so the execute-phase span count in a trace equals the launch
+    counter by construction. The local count backs the historical
+    ``launch_count()`` / ``reset_launch_count()`` per-family API.
+    """
+
+    def __init__(self, family: str):
+        self.family = family
+        self._count = 0
+
+    def record(self, node: str, kind: str):
+        """Count one launch; returns a span context (no-op when tracing
+        is disabled) to wrap the kernel construction."""
+        self._count += 1
+        reg = _metrics.registry()
+        reg.counter("kernel_launches").inc()
+        reg.counter(f"kernel_launches.{self.family}").inc()
+        return _trace.span(f"{kind}:{node}", cat="execute",
+                           family=self.family, node=node, kind=kind)
+
+    def count(self) -> int:
+        return self._count
+
+    def reset(self) -> None:
+        self._count = 0
+
 
 def pallas_interpret_default() -> bool:
     """Pallas interpret mode unless a real TPU backs the computation.

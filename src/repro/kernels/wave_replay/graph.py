@@ -271,11 +271,13 @@ def wave_replay_graph(gkp: GraphKernelProgram, x: jax.Array, weights,
     the final node's valid (B, out_h, out_w, out_c) fp32 output —
     identical to running the per-layer megakernel node by node.
     """
-    _ops._LAUNCHES += 1               # one launch for the whole chain
-    if table is None:
-        table = jnp.asarray(gkp.operand_table())
-    xp = _ops.pad_input(gkp.nodes[0].kp, x)
-    wf, bf = pack_graph_weights(gkp, weights)
-    y = wave_replay_graph_raw(gkp, xp, wf, bf, table, interpret=interpret)
+    # one launch for the whole chain, attributed to the head node
+    with _ops.launches.record(gkp.nodes[0].name, "graphkernel"):
+        if table is None:
+            table = jnp.asarray(gkp.operand_table())
+        xp = _ops.pad_input(gkp.nodes[0].kp, x)
+        wf, bf = pack_graph_weights(gkp, weights)
+        y = wave_replay_graph_raw(gkp, xp, wf, bf, table,
+                                  interpret=interpret)
     kl = gkp.out_kp
     return y[:, :kl.out_h, :kl.out_w, :gkp.out_layer.out_c]

@@ -16,19 +16,22 @@ import jax.numpy as jnp
 
 from repro.core.schedule import KernelProgram
 from repro.distributed.fault import fault_point
+from repro.kernels.common import LaunchCounter
 from repro.kernels.wave_replay.kernel import wave_replay_raw
 
-_LAUNCHES = 0
+# shared trace-time counter (kernels/common.py): local per-family count
+# behind the launch_count() shims below, plus kernel_launches.* metrics
+# and a cat="execute" span per launch
+launches = LaunchCounter("wave_replay")
 
 
 def launch_count() -> int:
     """Megakernel launches since ``reset_launch_count`` (trace-time)."""
-    return _LAUNCHES
+    return launches.count()
 
 
 def reset_launch_count() -> None:
-    global _LAUNCHES
-    _LAUNCHES = 0
+    launches.reset()
 
 
 def expand_grouped(w: jax.Array, groups: int) -> jax.Array:
@@ -113,20 +116,19 @@ def wave_replay_layer(kp: KernelProgram, x: jax.Array, w: jax.Array,
     Returns the valid (B, out_h, out_w, out_c) output — pooled dims when
     the program fuses its pool — as fp32.
     """
-    global _LAUNCHES
-    _LAUNCHES += 1
     l = kp.wave.program.layer
-    # launch-stage fault hook (trace time, before the pallas_call is
-    # built): lets the FaultInjector exercise the fallback runtime's
-    # KernelLaunchError path in CPU CI (distributed/fault.py)
-    fault_point("launch", l.name, "megakernel")
-    if table is None:
-        table = jnp.asarray(kp.operand_table())
-    if kp.residual and residual is None:
-        raise ValueError(f"{l.name}: program lowered with residual=True "
-                         f"needs the residual operand")
-    xp, wp, bias = pad_operands(kp, x, w, b)
-    rp = pad_residual(kp, residual) if kp.residual else None
-    y = wave_replay_raw(kp, xp, wp, bias, table, residual=rp,
-                        interpret=interpret)
+    with launches.record(l.name, "megakernel"):
+        # launch-stage fault hook (trace time, before the pallas_call is
+        # built): lets the FaultInjector exercise the fallback runtime's
+        # KernelLaunchError path in CPU CI (distributed/fault.py)
+        fault_point("launch", l.name, "megakernel")
+        if table is None:
+            table = jnp.asarray(kp.operand_table())
+        if kp.residual and residual is None:
+            raise ValueError(f"{l.name}: program lowered with "
+                             f"residual=True needs the residual operand")
+        xp, wp, bias = pad_operands(kp, x, w, b)
+        rp = pad_residual(kp, residual) if kp.residual else None
+        y = wave_replay_raw(kp, xp, wp, bias, table, residual=rp,
+                            interpret=interpret)
     return y[:, :kp.out_h, :kp.out_w, :l.out_c]

@@ -356,14 +356,15 @@ def wave_replay_graph_q(gkp: GraphKernelProgram, xq: jax.Array, qops,
     Returns the final node's valid int8 output — bit-identical to the
     per-layer int8 megakernel run node by node.
     """
-    _ops._LAUNCHES += 1               # one launch for the whole chain
-    if table is None:
-        table = jnp.asarray(gkp.operand_table())
-    xp = pad_input(gkp.nodes[0].kp, xq)
-    wf, bf, mf, sf = pack_graph_operands_q(gkp, qops)
-    y = wave_replay_graph_q_raw(gkp, xp, wf, bf, mf, sf, table,
-                                pre_shifts=pre_shifts,
-                                fan_chunks=fan_chunks,
-                                interpret=interpret)
+    # one launch for the whole chain, attributed to the head node
+    with _ops.launches.record(gkp.nodes[0].name, "graphkernel"):
+        if table is None:
+            table = jnp.asarray(gkp.operand_table())
+        xp = pad_input(gkp.nodes[0].kp, xq)
+        wf, bf, mf, sf = pack_graph_operands_q(gkp, qops)
+        y = wave_replay_graph_q_raw(gkp, xp, wf, bf, mf, sf, table,
+                                    pre_shifts=pre_shifts,
+                                    fan_chunks=fan_chunks,
+                                    interpret=interpret)
     kl = gkp.out_kp
     return y[:, :kl.out_h, :kl.out_w, :gkp.out_layer.out_c]

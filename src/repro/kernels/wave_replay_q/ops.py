@@ -15,20 +15,22 @@ import jax.numpy as jnp
 
 from repro.core.schedule import KernelProgram
 from repro.distributed.fault import fault_point
+from repro.kernels.common import LaunchCounter
 from repro.kernels.wave_replay_q.kernel import (q_weight_full_fan,
                                                 wave_replay_q_raw)
 
-_LAUNCHES = 0
+# shared trace-time counter (kernels/common.py), same contract as the
+# fp32 kernel's — int8 launches land in kernel_launches.wave_replay_q
+launches = LaunchCounter("wave_replay_q")
 
 
 def launch_count() -> int:
     """int8 megakernel launches since ``reset_launch_count`` (trace-time)."""
-    return _LAUNCHES
+    return launches.count()
 
 
 def reset_launch_count() -> None:
-    global _LAUNCHES
-    _LAUNCHES = 0
+    launches.reset()
 
 
 def pad_operands_q(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
@@ -90,21 +92,20 @@ def wave_replay_q_layer(kp: KernelProgram, xq: jax.Array, wq: jax.Array,
     — pooled dims when the program fuses its pool — in the layer's
     calibrated output scale (= the next layer's input scale).
     """
-    global _LAUNCHES
-    _LAUNCHES += 1
     l = kp.wave.program.layer
-    # launch-stage fault hook (trace time): see wave_replay/ops.py
-    fault_point("launch", l.name, "megakernel")
-    if table is None:
-        table = jnp.asarray(kp.operand_table())
-    if kp.residual and residual is None:
-        raise ValueError(f"{l.name}: program lowered with residual=True "
-                         f"needs the residual operand")
-    xp, wp, bqp, mp, sp = pad_operands_q(kp, xq, wq, bq, m, shift)
-    rp = pad_residual_q(kp, residual) if kp.residual else None
-    y = wave_replay_q_raw(kp, xp, wp, bqp, mp, sp, table,
-                          pre_shift=pre_shift, fan_chunk=fan_chunk,
-                          residual=rp, interpret=interpret)
+    with launches.record(l.name, "megakernel"):
+        # launch-stage fault hook (trace time): see wave_replay/ops.py
+        fault_point("launch", l.name, "megakernel")
+        if table is None:
+            table = jnp.asarray(kp.operand_table())
+        if kp.residual and residual is None:
+            raise ValueError(f"{l.name}: program lowered with "
+                             f"residual=True needs the residual operand")
+        xp, wp, bqp, mp, sp = pad_operands_q(kp, xq, wq, bq, m, shift)
+        rp = pad_residual_q(kp, residual) if kp.residual else None
+        y = wave_replay_q_raw(kp, xp, wp, bqp, mp, sp, table,
+                              pre_shift=pre_shift, fan_chunk=fan_chunk,
+                              residual=rp, interpret=interpret)
     return y[:, :kp.out_h, :kp.out_w, :l.out_c]
 
 

@@ -44,7 +44,9 @@ def cnn_main(args):
     from repro.core.model_zoo import network_graph
     from repro.launch.session import StreamingSession
     from repro.models.cnn import init_graph_weights
+    from repro.obs import Tracer, render_metrics, write_chrome_trace
 
+    tracer = Tracer() if args.trace_out else None
     graph = network_graph(args.network)
     weights = init_graph_weights(graph, jax.random.key(0))
     qnet = None
@@ -67,7 +69,8 @@ def cnn_main(args):
                                       qnet=qnet,
                                       fallback=args.fallback or None,
                                       guard=args.guard or None,
-                                      autotune_cache=args.autotune_cache)
+                                      autotune_cache=args.autotune_cache,
+                                      tracer=tracer)
     if sess.tuned is not None:
         print(f"autotuned plan ({sess.tuned.us_per_batch:.0f} us/batch): "
               + ", ".join(f"{n}={m}" for n, m in sess.tuned.node_modes))
@@ -88,6 +91,13 @@ def cnn_main(args):
           f"({args.requests/dt:.1f} img/s), "
           f"compiles={sess.compile_count}, batched calls={sess.calls}")
     print(sess.describe())
+    if tracer is not None:
+        n = write_chrome_trace(args.trace_out, tracer)
+        print(f"trace: {n} events -> {args.trace_out} "
+              f"(execute spans={tracer.span_count('execute')}); open in "
+              f"chrome://tracing or ui.perfetto.dev")
+    if args.metrics:
+        print(render_metrics())
     if args.health:
         import json
         print(json.dumps(sess.health(), indent=2))
@@ -152,6 +162,14 @@ def main():
                          "report as JSON: per-node executor modes, "
                          "degradation events, shed/deadline/guard/"
                          "retry counters")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace_events JSON of "
+                         "the session (plan/lower/compile/execute spans, "
+                         "request lifecycle) to this path (--cnn)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="after serving, print the metrics registry as "
+                         "plain text: kernel launches, cache hit/miss, "
+                         "queue depth, latency histogram (--cnn)")
     ap.add_argument("--precision", choices=("fp32", "int8"),
                     default="fp32",
                     help="int8 calibrates the stack (PTQ, a few random "

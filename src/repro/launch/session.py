@@ -42,6 +42,8 @@ from repro.core.graph import NetworkGraph, chain_graph, conv_keyed
 from repro.core.schedule import TileProgram
 from repro.core.streaming import (compile_graph, graph_forward_fn,
                                   graph_operands, plan_graph)
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.runtime.errors import DeadlineExceeded, Overloaded
 
 
@@ -106,10 +108,16 @@ class StreamingSession:
                  backoff_base: float = 0.05,
                  sleep_fn: Callable[[float], None] = time.sleep,
                  validate_inputs: bool = True,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer: Optional["_trace.Tracer"] = None):
         if not isinstance(graph, NetworkGraph):
             graph = chain_graph(tuple(graph))
         self.graph = graph
+        # opt-in observability: with a Tracer, the session activates it
+        # around construction (plan/lower/compile spans) and every
+        # serving entry point (request lifecycle + trace-time kernel
+        # launch spans); None costs nothing (no-op fast path)
+        self.tracer = tracer
         self.layers = tuple(n.layer for n in graph.conv_nodes())
         self._plans = self._conv_dict(plans, "plans")
         self.plans = tuple(self._plans.values())
@@ -118,7 +126,8 @@ class StreamingSession:
         self.pool_backend = pool_backend
         self.donate = bool(donate)
         self.precision = precision
-        self._progs = compile_graph(graph, self._plans)
+        with _trace.use_tracer(tracer):
+            self._progs = compile_graph(graph, self._plans)
         # schedule-ordered program list (chain sessions: stack order)
         self.programs: List[TileProgram] = list(self._progs.values())
         qgraph = None
@@ -190,48 +199,55 @@ class StreamingSession:
             # for the batch it was measured at (= the cache key's batch)
             xt = jax.random.normal(jax.random.key(0),
                                    (self.max_batch,) + graph.in_shape)
-            self.tuned = tune_graph(
-                graph, self._progs,
-                None if precision == "int8" else self.weights, xt,
-                precision=precision, qgraph=qgraph,
-                timer=autotune_timer, cache=self.autotune_cache,
-                conv_fn=conv_fn, conv_backend=conv_backend,
-                **({"vmem_budgets": tuple(autotune_budgets)}
-                   if autotune_budgets is not None else {}))
-            if cache_path is not None:
-                self.autotune_cache.save(cache_path)
-            self.resolved = resolve_plan(
-                graph, self._progs, self.tuned.modes_dict(),
-                vmem_budget=self.tuned.vmem_budget, precision=precision,
-                qgraph=qgraph, batch=self.max_batch)
-            self._ops = self.resolved.operands()
-            self._forward = self.resolved.forward_fn(
-                conv_fn, conv_backend, dequantize=not self._guard_raw)
+            with _trace.use_tracer(tracer):
+                self.tuned = tune_graph(
+                    graph, self._progs,
+                    None if precision == "int8" else self.weights, xt,
+                    precision=precision, qgraph=qgraph,
+                    timer=autotune_timer, cache=self.autotune_cache,
+                    conv_fn=conv_fn, conv_backend=conv_backend,
+                    **({"vmem_budgets": tuple(autotune_budgets)}
+                       if autotune_budgets is not None else {}))
+                if cache_path is not None:
+                    self.autotune_cache.save(cache_path)
+                self.resolved = resolve_plan(
+                    graph, self._progs, self.tuned.modes_dict(),
+                    vmem_budget=self.tuned.vmem_budget,
+                    precision=precision,
+                    qgraph=qgraph, batch=self.max_batch)
+                self._ops = self.resolved.operands()
+                self._forward = self.resolved.forward_fn(
+                    conv_fn, conv_backend,
+                    dequantize=not self._guard_raw)
         elif fallback is not None and fallback is not False:
             from repro.runtime.fallback import (FallbackChain,
                                                 resolve_graph)
             chain = fallback if isinstance(fallback, FallbackChain) \
                 else None
-            self.resolved = resolve_graph(graph, self._progs, mode=mode,
-                                          chain=chain,
-                                          precision=precision,
-                                          qgraph=qgraph,
-                                          batch=self.max_batch)
-            self._ops = self.resolved.operands()
-            self._forward = self.resolved.forward_fn(
-                conv_fn, conv_backend,
-                dequantize=not self._guard_raw)
+            with _trace.use_tracer(tracer):
+                self.resolved = resolve_graph(graph, self._progs,
+                                              mode=mode,
+                                              chain=chain,
+                                              precision=precision,
+                                              qgraph=qgraph,
+                                              batch=self.max_batch)
+                self._ops = self.resolved.operands()
+                self._forward = self.resolved.forward_fn(
+                    conv_fn, conv_backend,
+                    dequantize=not self._guard_raw)
         else:
             self._guard_raw = False
-            self._ops = graph_operands(graph, self._progs, mode,
-                                       precision=precision,
-                                       batch=self.max_batch)
-            self._forward = graph_forward_fn(graph, self._progs, conv_fn,
-                                             conv_backend, mode=mode,
-                                             pool_backend=pool_backend,
-                                             precision=precision,
-                                             qgraph=qgraph,
-                                             batch=self.max_batch)
+            with _trace.use_tracer(tracer):
+                self._ops = graph_operands(graph, self._progs, mode,
+                                           precision=precision,
+                                           batch=self.max_batch)
+                self._forward = graph_forward_fn(graph, self._progs,
+                                                 conv_fn,
+                                                 conv_backend, mode=mode,
+                                                 pool_backend=pool_backend,
+                                                 precision=precision,
+                                                 qgraph=qgraph,
+                                                 batch=self.max_batch)
         # -- serving guardrails
         self.max_pending = max_pending
         self.compile_retries = int(compile_retries)
@@ -246,8 +262,10 @@ class StreamingSession:
         self._executables: Dict[tuple, Callable] = {}
         self.compile_count = 0          # traces performed (the spy)
         self.calls = 0                  # compiled-executable invocations
-        # micro-batch queue state: (ticket, image, expiry | None)
-        self._pending: List[Tuple[int, jax.Array, Optional[float]]] = []
+        # micro-batch queue state:
+        # (ticket, image, expiry | None, submitted_at)
+        self._pending: List[
+            Tuple[int, jax.Array, Optional[float], float]] = []
         self._results: Dict[int, jax.Array] = {}
         self._expired: set = set()
         self._next_ticket = 0
@@ -271,7 +289,11 @@ class StreamingSession:
                   **kw) -> "StreamingSession":
         """Plan every conv node under one buffer budget, then build the
         session (VGG-16 / ResNet-18 graphs from ``core.model_zoo``)."""
-        return cls(graph, plan_graph(graph, sram_budget), weights, **kw)
+        # planning runs before __init__ installs the session tracer, so
+        # activate it here too — the plan span belongs to this session
+        with _trace.use_tracer(kw.get("tracer")):
+            plans = plan_graph(graph, sram_budget)
+        return cls(graph, plans, weights, **kw)
 
     # ------------------------------------------------------------------
     # compiled batched path
@@ -289,6 +311,7 @@ class StreamingSession:
             def traced(x, weights, ops):
                 # runs only while jax traces: counts (re)compilations
                 self.compile_count += 1
+                _metrics.registry().counter("session.compiles").inc()
                 return self._forward(x, weights, ops)
             # donate the input batch: XLA reuses its buffer for the
             # inter-layer activations instead of doubling peak HBM.
@@ -361,35 +384,53 @@ class StreamingSession:
         if self.validate_inputs:
             self.check_input(x, batched=True)
         key = self._exec_key(x.shape, x.dtype)
+        reg = _metrics.registry()
         attempts = 0
-        while True:
-            fn = self._executable(key)
-            try:
-                self.calls += 1
-                y = fn(x, self.weights, self._ops)
-                break
-            except Exception:
-                # evict FIRST: a half-built executable must not serve
-                # the next request (cache-poisoning fix, ISSUE 7)
-                self._executables.pop(key, None)
-                attempts += 1
-                if attempts > self.compile_retries:
-                    raise
-                self.compile_retries_used += 1
-                self._sleep(min(self.backoff_base * 2 ** (attempts - 1),
-                                1.0))
-        if self.guard is not None:
-            from repro.runtime.guard import guarded_output
-            weights = self.weights if self.precision == "fp32" else None
-            y, cause = guarded_output(self.resolved, y, x, weights,
-                                      self.guard,
-                                      raw_int8=self._guard_raw,
-                                      conv_fn=self._conv_fn,
-                                      conv_backend=self._conv_backend)
-            if cause is not None:
-                self.guard_trips += 1
-        if self._guard_raw:
-            y = self._dequant_out(y)
+        with _trace.use_tracer(self.tracer), \
+                _trace.span("run_batch", cat="run", batch=int(x.shape[0]),
+                            mode=self.mode, graph=self.graph.name):
+            while True:
+                fresh = key not in self._executables
+                fn = self._executable(key)
+                try:
+                    self.calls += 1
+                    reg.counter("session.calls").inc()
+                    # the first call of a fresh executable traces +
+                    # compiles (jit is lazy) — attribute it to the
+                    # compile phase; steady-state calls are execution
+                    with _trace.span("compile" if fresh else "execute",
+                                     cat="compile" if fresh else "run"):
+                        y = fn(x, self.weights, self._ops)
+                    break
+                except Exception as e:
+                    # evict FIRST: a half-built executable must not serve
+                    # the next request (cache-poisoning fix, ISSUE 7)
+                    self._executables.pop(key, None)
+                    attempts += 1
+                    if attempts > self.compile_retries:
+                        raise
+                    self.compile_retries_used += 1
+                    reg.counter("session.compile_retries").inc()
+                    _trace.event("compile_retry", cat="request",
+                                 attempt=attempts,
+                                 cause=f"{type(e).__name__}: {e}")
+                    self._sleep(min(self.backoff_base
+                                    * 2 ** (attempts - 1), 1.0))
+            if self.guard is not None:
+                from repro.runtime.guard import guarded_output
+                weights = self.weights if self.precision == "fp32" \
+                    else None
+                y, cause = guarded_output(self.resolved, y, x, weights,
+                                          self.guard,
+                                          raw_int8=self._guard_raw,
+                                          conv_fn=self._conv_fn,
+                                          conv_backend=self._conv_backend)
+                if cause is not None:
+                    self.guard_trips += 1
+                    reg.counter("session.guard_trips").inc()
+                    _trace.event("guard_trip", cat="request", cause=cause)
+            if self._guard_raw:
+                y = self._dequant_out(y)
         return y
 
     # ------------------------------------------------------------------
@@ -411,19 +452,28 @@ class StreamingSession:
             self.check_input(image, batched=False)
         elif getattr(image, "ndim", None) != 3:
             raise ValueError(f"submit() wants (H, W, C), got {image.shape}")
-        if self.max_pending is not None \
-                and len(self._pending) >= self.max_pending:
-            self.shed += 1
-            raise Overloaded(
-                f"{self.graph.name}: pending queue full "
-                f"({len(self._pending)}/{self.max_pending}) — request "
-                f"shed; retry after a flush")
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        expiry = None if deadline is None else self._clock() + deadline
-        self._pending.append((ticket, image, expiry))
-        if len(self._pending) >= self.max_batch:
-            self.flush()
+        reg = _metrics.registry()
+        with _trace.use_tracer(self.tracer):
+            if self.max_pending is not None \
+                    and len(self._pending) >= self.max_pending:
+                self.shed += 1
+                reg.counter("session.shed").inc()
+                _trace.event("shed", cat="request",
+                             pending=len(self._pending),
+                             max_pending=self.max_pending)
+                raise Overloaded(
+                    f"{self.graph.name}: pending queue full "
+                    f"({len(self._pending)}/{self.max_pending}) — request "
+                    f"shed; retry after a flush")
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            expiry = None if deadline is None else self._clock() + deadline
+            self._pending.append((ticket, image, expiry, self._clock()))
+            reg.gauge("session.queue_depth").set(len(self._pending))
+            _trace.event("enqueue", cat="request", ticket=ticket,
+                         queue_depth=len(self._pending))
+            if len(self._pending) >= self.max_batch:
+                self.flush()
         return ticket
 
     def flush(self) -> None:
@@ -434,29 +484,42 @@ class StreamingSession:
         delays the live requests behind it."""
         if not self._pending:
             return
-        now = self._clock()
-        live = []
-        for t, im, exp in self._pending:
-            if exp is not None and now > exp:
-                self._expired.add(t)
-                self.deadline_expired += 1
-            else:
-                live.append((t, im))
-        self._pending.clear()
-        if not live:
-            return
-        tickets = [t for t, _ in live]
-        imgs = jnp.stack([im for _, im in live])
-        n = imgs.shape[0]
-        if n < self.max_batch:
-            # zero-pad to the session batch so the same executable serves
-            # partial flushes; padded rows are discarded below
-            fill = jnp.zeros((self.max_batch - n,) + imgs.shape[1:],
-                             imgs.dtype)
-            imgs = jnp.concatenate([imgs, fill])
-        out = self.run_batch(imgs)
-        for i, t in enumerate(tickets):
-            self._results[t] = out[i]
+        reg = _metrics.registry()
+        with _trace.use_tracer(self.tracer), \
+                _trace.span("flush", cat="request",
+                            pending=len(self._pending)):
+            now = self._clock()
+            live = []
+            for t, im, exp, sub in self._pending:
+                if exp is not None and now > exp:
+                    self._expired.add(t)
+                    self.deadline_expired += 1
+                    reg.counter("session.deadline_expired").inc()
+                    _trace.event("deadline_expired", cat="request",
+                                 ticket=t)
+                else:
+                    live.append((t, im, sub))
+            self._pending.clear()
+            reg.gauge("session.queue_depth").set(0)
+            if not live:
+                return
+            tickets = [t for t, _, _ in live]
+            imgs = jnp.stack([im for _, im, _ in live])
+            n = imgs.shape[0]
+            reg.histogram("session.batch_fill_ratio") \
+               .observe(n / self.max_batch)
+            if n < self.max_batch:
+                # zero-pad to the session batch so the same executable
+                # serves partial flushes; padded rows are discarded below
+                fill = jnp.zeros((self.max_batch - n,) + imgs.shape[1:],
+                                 imgs.dtype)
+                imgs = jnp.concatenate([imgs, fill])
+            out = self.run_batch(imgs)
+            done = self._clock()
+            lat = reg.histogram("session.request_latency_s")
+            for i, (t, _, sub) in enumerate(live):
+                self._results[t] = out[i]
+                lat.observe(max(0.0, done - sub))
 
     def result(self, ticket: int) -> jax.Array:
         """Fetch (and forget) one request's output; flushes if pending.
@@ -475,11 +538,13 @@ class StreamingSession:
         if ticket not in self._results:
             raise KeyError(
                 f"ticket {ticket}: unknown, already fetched, or discarded")
+        with _trace.use_tracer(self.tracer):
+            _trace.event("reply", cat="request", ticket=ticket)
         return self._results.pop(ticket)
 
     def discard(self, ticket: int) -> None:
         """Drop a pending or completed request without fetching it."""
-        self._pending = [(t, im, e) for t, im, e in self._pending
+        self._pending = [(t, im, e, s) for t, im, e, s in self._pending
                          if t != ticket]
         self._results.pop(ticket, None)
         self._expired.discard(ticket)
@@ -517,6 +582,7 @@ class StreamingSession:
                                        for e in self.resolved.events]
         if self.tuned is not None:
             h["autotune"] = self.tuned.as_dict()
+        h["metrics"] = _metrics.registry().snapshot()
         return h
 
     def describe(self) -> str:

@@ -1,0 +1,87 @@
+"""Exporters: Chrome/Perfetto ``trace_events`` JSON and a plain-text
+metrics dump.
+
+``write_chrome_trace(path, tracer)`` emits the JSON object format —
+``{"traceEvents": [...]}`` — that both ``chrome://tracing`` and
+https://ui.perfetto.dev open directly. Spans become complete events
+(``ph: "X"``, microsecond ``ts``/``dur`` straight off the tracer's
+monotonic clock) grouped by thread; instant events become ``ph: "i"``.
+Structured span attributes ride in ``args``, so a failing node's
+``error`` attribute is visible right on its slice.
+
+``render_metrics(registry)`` prints one measured quantity per line
+(counters and gauges as ``name value``, histograms with
+count/mean/min/max and per-bucket counts) — the ``serve.py --metrics``
+output and the text twin of ``health()['metrics']``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry, registry as _current_registry
+from repro.obs.trace import Tracer
+
+
+def chrome_trace_events(tracer: Tracer) -> dict:
+    """Render a tracer's spans/events as a Chrome trace_events object."""
+    pid = os.getpid()
+    events = []
+    for sp in tracer.spans():
+        end_ns = sp.end_ns if sp.end_ns is not None else sp.start_ns
+        ev = {"name": sp.name, "cat": sp.cat or "span", "ph": "X",
+              "ts": sp.start_ns / 1e3,
+              "dur": (end_ns - sp.start_ns) / 1e3,
+              "pid": pid, "tid": sp.tid,
+              "args": {k: _jsonable(v) for k, v in sp.attrs.items()}}
+        events.append(ev)
+    for e in tracer.events():
+        events.append({"name": e["name"], "cat": e["cat"] or "event",
+                       "ph": "i", "s": "t",
+                       "ts": e["ts_ns"] / 1e3,
+                       "pid": pid, "tid": e["tid"],
+                       "args": {k: _jsonable(v)
+                                for k, v in e["attrs"].items()}})
+    events.sort(key=lambda ev: ev["ts"])
+    out = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if tracer.dropped:
+        out["metadata"] = {"dropped": tracer.dropped}
+    return out
+
+
+def _jsonable(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)
+
+
+def write_chrome_trace(path: str, tracer: Tracer) -> int:
+    """Write the trace to ``path``; returns the number of events."""
+    doc = chrome_trace_events(tracer)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return len(doc["traceEvents"])
+
+
+def render_metrics(reg: Optional[MetricsRegistry] = None) -> str:
+    """Plain-text dump of every instrument in ``reg`` (current registry
+    by default), one per line, stable order of first registration."""
+    reg = reg if reg is not None else _current_registry()
+    lines = []
+    for kind, name, inst in reg.instruments():
+        if kind in ("counter", "gauge"):
+            v = inst.snapshot()
+            lines.append(f"{name} {v:g}" if isinstance(v, float)
+                         else f"{name} {v}")
+        else:  # histogram
+            s = inst.snapshot()
+            mean = (s["sum"] / s["count"]) if s["count"] else 0.0
+            lines.append(
+                f"{name} count={s['count']} mean={mean:g} "
+                f"min={s['min'] if s['min'] is not None else 0:g} "
+                f"max={s['max'] if s['max'] is not None else 0:g}")
+            for edge, n in s["buckets"].items():
+                if n:
+                    lines.append(f"{name}.le.{edge} {n}")
+    return "\n".join(lines)

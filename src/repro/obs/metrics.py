@@ -1,0 +1,234 @@
+"""Metrics registry: counters, gauges, and fixed-bucket histograms.
+
+Replaces the module-level globals the repro accumulated (trace-time
+launch counters in ``kernels/*/ops.py``, the process-global degradation
+counter in ``runtime/fallback.py``, bespoke serving tallies) with
+registry-scoped instruments that tests can snapshot and reset in
+isolation: swap a fresh ``MetricsRegistry`` in with ``use_registry``
+and nothing bleeds across tests.
+
+Instruments are keyed by dotted name; the convention is
+``family.dimension`` — e.g. ``kernel_launches.wave_replay_q``,
+``degradation_events.plan``, ``executor_cache.hits`` — so a plain-text
+dump (obs/export.py ``render_metrics``) reads like the paper's Table
+1/2 accounting: one measured quantity per line.
+
+Everything here is stdlib-only and cheap: instrument updates take a
+lock (they sit outside jit-compiled hot loops — trace-time counters
+fire once per lowering, serving counters once per request/batch), and
+lookups are get-or-create on the *current* registry so code written
+against ``registry().counter(...)`` automatically lands in whatever
+scope a test installed.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class Counter:
+    """Monotonic count (resettable via registry reset)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+    def reset(self) -> None:
+        with self._lock:
+            self._value = 0
+
+    def snapshot(self):
+        return self._value
+
+
+class Gauge:
+    """Last-set value (e.g. queue depth, training loss)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def add(self, d: float) -> None:
+        with self._lock:
+            self._value += float(d)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def reset(self) -> None:
+        with self._lock:
+            self._value = 0.0
+
+    def snapshot(self):
+        return self._value
+
+
+# default buckets cover the latencies this repo actually sees: tens of
+# microseconds (kernel dispatch) up to tens of seconds (cold compiles)
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-5, 1e-4, 1e-3, 5e-3, 1e-2, 5e-2, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0)
+
+
+class Histogram:
+    """Fixed-bucket histogram: counts per upper-edge bucket plus +inf
+    overflow, running sum/count/min/max."""
+
+    __slots__ = ("name", "buckets", "_counts", "_sum", "_count",
+                 "_min", "_max", "_lock")
+
+    def __init__(self, name: str, buckets: Sequence[float] = DEFAULT_BUCKETS):
+        self.name = name
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        self._counts = [0] * (len(self.buckets) + 1)
+        self._sum = 0.0
+        self._count = 0
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        i = 0
+        for edge in self.buckets:
+            if v <= edge:
+                break
+            i += 1
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._count += 1
+            self._min = v if self._min is None else min(self._min, v)
+            self._max = v if self._max is None else max(self._max, v)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counts = [0] * (len(self.buckets) + 1)
+            self._sum = 0.0
+            self._count = 0
+            self._min = self._max = None
+
+    def snapshot(self):
+        with self._lock:
+            return {"count": self._count, "sum": self._sum,
+                    "min": self._min, "max": self._max,
+                    "buckets": dict(zip(
+                        [*map(str, self.buckets), "+inf"],
+                        list(self._counts)))}
+
+
+class MetricsRegistry:
+    """Named instruments, get-or-create, snapshot/reset as a unit."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: "OrderedDict[Tuple[str, str], object]" = \
+            OrderedDict()
+
+    def _get(self, kind: str, name: str, make):
+        key = (kind, name)
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is None:
+                inst = self._instruments[key] = make()
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get("counter", name, lambda: Counter(name))
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get("gauge", name, lambda: Gauge(name))
+
+    def histogram(self, name: str,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+        # buckets are fixed at creation; later calls reuse the original
+        return self._get("histogram", name, lambda: Histogram(name, buckets))
+
+    def instruments(self) -> List[Tuple[str, str, object]]:
+        with self._lock:
+            return [(k, n, inst) for (k, n), inst
+                    in self._instruments.items()]
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Nested ``{kind: {name: value}}`` dict — JSON-serializable."""
+        out: Dict[str, Dict[str, object]] = {}
+        for kind, name, inst in self.instruments():
+            out.setdefault(kind + "s", {})[name] = inst.snapshot()
+        return out
+
+    def reset(self) -> None:
+        for _, _, inst in self.instruments():
+            inst.reset()
+
+
+# ---------------------------------------------------------------------------
+# Current registry: a default process-wide one, swappable for isolation
+# ---------------------------------------------------------------------------
+
+_DEFAULT = MetricsRegistry()
+_ACTIVE = _DEFAULT
+
+
+def registry() -> MetricsRegistry:
+    """The registry instrumentation sites record into right now."""
+    return _ACTIVE
+
+
+def default_registry() -> MetricsRegistry:
+    return _DEFAULT
+
+
+def set_registry(reg: Optional[MetricsRegistry]) -> MetricsRegistry:
+    """Install ``reg`` as current (``None`` restores the default).
+    Returns the previous registry."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = _DEFAULT if reg is None else reg
+    return prev
+
+
+@contextlib.contextmanager
+def use_registry(reg: MetricsRegistry):
+    """Scoped registry swap — the test-isolation primitive."""
+    prev = set_registry(reg)
+    try:
+        yield reg
+    finally:
+        set_registry(prev)
+
+
+def reset_metrics() -> None:
+    """Zero every instrument in the current registry."""
+    _ACTIVE.reset()

@@ -17,9 +17,12 @@ graph keeps its plan. Chains are re-partitioned over the surviving
 graphkernel nodes (``fusible_chains(only=...)``); a fused chain that
 fails to lower degrades *as a unit* to per-layer megakernels. Every
 degradation is a structured ``DegradationEvent`` (node id, from/to
-mode, stage, cause, per-node retry count) and bumps a process-global
-counter the benchmark harness snapshots — a clean run reports zero
-events, and the regression gate enforces that.
+mode, stage, cause, per-node retry count), bumps the registry-scoped
+``degradation_events[.<stage>]`` counters (repro.obs.metrics — swap a
+fresh registry in and nothing bleeds across tests; an autouse conftest
+fixture resets it), and mirrors as a tracer instant event. The bench
+harness snapshots the per-run ``resolved.events`` list — a clean run
+reports zero events, and the regression gate enforces that.
 
 The resolved plan compiles to ONE mixed-mode whole-graph executable
 (``ResolvedGraph.forward_fn``): fused chains launch their graph
@@ -57,6 +60,8 @@ from repro.core.streaming import (_call_cached, _chain_batch_block,
                                   _wave_executor, compile_graph,
                                   maxpool_direct)
 from repro.distributed import fault
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.runtime.errors import (BudgetExceeded, ExecutorError,
                                   FallbackExhausted, KernelLaunchError,
                                   LoweringError, PlanError)
@@ -114,8 +119,8 @@ class FallbackChain:
 
 
 # ---------------------------------------------------------------------------
-# Structured degradation events + the process-global counter the bench
-# harness snapshots (clean runs must report zero)
+# Structured degradation events + registry-scoped counters (clean runs
+# must report zero; regression_gate.py enforces it on the bench rows)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -132,25 +137,32 @@ class DegradationEvent:
         return dataclasses.asdict(self)
 
 
-_EVENTS_TOTAL = 0
-
-
 def record_event(events: List[DegradationEvent],
                  ev: DegradationEvent) -> None:
-    """Append ``ev`` and bump the process-global degradation counter."""
-    global _EVENTS_TOTAL
-    _EVENTS_TOTAL += 1
+    """Append ``ev``, bump the registry-scoped degradation counters
+    (``degradation_events`` + per-stage dimension), and mirror it as a
+    tracer instant event so degradations land on the timeline."""
     events.append(ev)
+    reg = _metrics.registry()
+    reg.counter("degradation_events").inc()
+    reg.counter(f"degradation_events.{ev.stage}").inc()
+    _trace.event(f"degrade:{ev.node}", cat="degrade", **ev.as_dict())
 
 
 def degradation_event_count() -> int:
-    """Degradation events recorded process-wide since the last reset."""
-    return _EVENTS_TOTAL
+    """Degradation events in the current metrics registry since its
+    last reset. Historically a process-global int — registry scoping
+    (plus the autouse conftest reset) is what stops one test's
+    degradations from leaking into the next."""
+    return _metrics.registry().counter("degradation_events").value
 
 
 def reset_degradation_events() -> None:
-    global _EVENTS_TOTAL
-    _EVENTS_TOTAL = 0
+    reg = _metrics.registry()
+    for kind, name, inst in reg.instruments():
+        if kind == "counter" and (name == "degradation_events"
+                                  or name.startswith("degradation_events.")):
+            inst.reset()
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,7 @@ from repro.distributed.fault import StepWatchdog
 from repro.models import encdec as ED
 from repro.models import transformer as T
 from repro.models.module import init_params
+from repro.obs import metrics as obs_metrics
 from repro.train.steps import init_train_state, make_train_step
 
 
@@ -69,6 +70,9 @@ def train_lm(cfg: ModelConfig, tcfg: TrainConfig, *, num_steps: int,
         state, metrics = train_step(state, b)
         metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.perf_counter() - t0
+        reg = obs_metrics.registry()
+        reg.gauge("train.loss").set(metrics["loss"])
+        reg.histogram("train.step_time_s").observe(dt)
         if wd.observe(dt) and log:
             log(f"step {step}: straggler ({dt:.3f}s)")
         history.append(metrics)

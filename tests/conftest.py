@@ -8,8 +8,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs_state():
+    """Isolate the observability globals per test: the metrics registry
+    (degradation / launch / cache counters are registry-scoped, ISSUE 9)
+    and the active tracer must not bleed between tests."""
+    from repro.obs import metrics as _m
+    from repro.obs import trace as _t
+    yield
+    _t.set_tracer(None)
+    _m.set_registry(None)        # back to the default registry ...
+    _m.reset_metrics()           # ... and wipe it
 
 _OPTBAR_GRAD = None
 

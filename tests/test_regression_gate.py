@@ -502,3 +502,109 @@ def test_gate_auto_row_is_not_share_gated():
 def test_gate_baseline_without_auto_row_accepts_new_row():
     base = _payload(100, 300, 200)
     assert gate.compare(base, _payload_auto(180)) == []
+
+
+# ---------------------------------------------------------------------------
+# Observability rules (ISSUE 9): timing_breakdown presence + the
+# disabled-tracer overhead gate
+# ---------------------------------------------------------------------------
+
+def _with_breakdown(p, overhead=0.01):
+    """Stamp every row with timing_breakdown meta (the instrumented
+    bench always emits it) and the megakernel row with the measured
+    obs_overhead_frac."""
+    for r in p["records"]:
+        r.setdefault("meta", {})["timing_breakdown"] = {
+            "plan_us": 10.0, "compile_us": 500.0,
+            "execute_us": r["us_per_call"]}
+        if r["name"] == "streaming_alexnet_megakernel":
+            r["meta"]["obs_overhead_frac"] = overhead
+    return p
+
+
+def test_gate_obs_rules_disarmed_without_baseline_meta():
+    """Pre-ISSUE-9 baselines carry neither meta key: an instrumented
+    current run (or an uninstrumented one) trips nothing."""
+    base = _payload(100, 300, 200)
+    assert gate.compare(base, _with_breakdown(_payload(100, 300, 200))) \
+        == []
+    assert gate.compare(base, _payload(100, 300, 200)) == []
+
+
+def test_gate_obs_rules_pass_on_instrumented_runs():
+    base = _with_breakdown(_payload(100, 300, 200))
+    assert gate.compare(base, base) == []
+
+
+def test_gate_fails_on_missing_timing_breakdown():
+    """Once the baseline is instrumented, every current row must carry
+    the plan/compile/execute split."""
+    base = _with_breakdown(_payload(100, 300, 200))
+    cur = _with_breakdown(_payload(100, 300, 200))
+    del cur["records"][1]["meta"]["timing_breakdown"]   # the wave row
+    fails = gate.compare(base, cur)
+    assert len(fails) == 1
+    assert "streaming_alexnet_wave" in fails[0]
+    assert "timing_breakdown" in fails[0]
+
+
+def test_gate_fails_on_committed_overhead_over_budget():
+    """The committed baseline is held strictly to --obs-overhead."""
+    base = _with_breakdown(_payload(100, 300, 200), overhead=0.03)
+    fails = gate.compare(base, base)
+    assert any("committed instrumentation overhead 3.0%" in f
+               for f in fails)
+    # exactly at budget passes
+    base = _with_breakdown(_payload(100, 300, 200), overhead=0.02)
+    assert gate.compare(base, base) == []
+
+
+def test_gate_obs_overhead_current_run_gets_additive_slack():
+    base = _with_breakdown(_payload(100, 300, 200), overhead=0.01)
+    # 2% budget + 20% threshold slack = 22%: 15% is CI noise, passes
+    ok = gate.compare(base, _with_breakdown(_payload(100, 300, 200),
+                                            overhead=0.15))
+    assert ok == []
+    fails = gate.compare(base, _with_breakdown(_payload(100, 300, 200),
+                                               overhead=0.25))
+    assert any("measured instrumentation overhead 25.0%" in f
+               for f in fails)
+
+
+def test_gate_fails_when_current_run_drops_overhead_meta():
+    """Once committed, the overhead measurement must keep appearing or
+    the gate cannot be evaluated."""
+    base = _with_breakdown(_payload(100, 300, 200))
+    cur = _with_breakdown(_payload(100, 300, 200))
+    del cur["records"][2]["meta"]["obs_overhead_frac"]
+    fails = gate.compare(base, cur)
+    assert any("obs_overhead_frac" in f for f in fails)
+
+
+def test_gate_obs_overhead_knob():
+    base = _with_breakdown(_payload(100, 300, 200), overhead=0.04)
+    fails = gate.compare(base, base, obs_overhead=0.05)
+    assert fails == []
+    fails = gate.compare(base, base, obs_overhead=0.01)
+    assert any("1.0% budget" in f for f in fails)
+
+
+def test_gate_negative_overhead_is_fine():
+    """min-of-reps noise can land the enabled run faster than the
+    disabled one; a negative fraction never fails."""
+    base = _with_breakdown(_payload(100, 300, 200), overhead=-0.01)
+    assert gate.compare(base, base) == []
+
+
+def test_merge_min_takes_min_obs_overhead_across_runs():
+    """The overhead fraction is a ratio of two noisy timings: the merge
+    takes the per-record minimum across runs even when a different run
+    wins the wall-clock."""
+    fast_noisy = _with_breakdown(_payload(100, 300, 200), overhead=0.08)
+    slow_clean = _with_breakdown(_payload(100, 300, 250), overhead=0.001)
+    merged = gate.merge_min([fast_noisy, slow_clean])
+    rec = {r["name"]: r for r in merged["records"]}[
+        "streaming_alexnet_megakernel"]
+    assert rec["us_per_call"] == 200          # fast run wins the clock
+    assert rec["meta"]["obs_overhead_frac"] == 0.001
+    assert gate.compare(merged, merged) == []
