@@ -9,8 +9,9 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
 
 ``--json-out BENCH_streaming.json`` additionally persists the streaming
 records machine-readably (the perf trajectory future PRs diff against —
-``benchmarks/regression_gate.py`` fails CI on >20% normalised executor
-slowdowns); ``--smoke`` is the reduced-reps CI configuration and
+``benchmarks/regression_gate.py`` fails CI when any of its ratchets
+regress: grouped/int8/batched speedups, launch counts, DRAM traffic);
+``--smoke`` is the reduced-reps CI configuration and
 ``--only`` restricts which modules run, e.g.::
 
     python -m benchmarks.run --only streaming_bench --smoke \

@@ -142,7 +142,10 @@ def evaluate(layer: ConvLayer, tiles_h: int, tiles_w: int,
       from DRAM once per (image tile × feature group):
       ``in_traffic = in_tile_px * in_c * bytes * n_tiles * feat_splits``.
       In-channel splitting does NOT multiply input traffic — the c-groups
-      of one tile pass partition the same fetched tile.
+      of one tile pass partition the same fetched tile. For a grouped
+      conv with feature splits, each feature group nests inside one conv
+      group and fetches only its ``in_c / groups`` channel slice — the
+      true footprint, not the block-diagonal view's full ``in_c``.
     * **Weights re-fetched per image tile.** Weights are resident across
       one tile's feature/in-channel walk but evicted between tiles (the
       weight buffer is sized for one group, not one layer):
@@ -196,8 +199,14 @@ def evaluate(layer: ConvLayer, tiles_h: int, tiles_w: int,
     n_tiles = tiles_h * tiles_w
     passes = n_tiles * feat_splits * in_splits
     # traffic: input tile re-read once per (feature group x in-group of it);
-    # weights re-fetched once per image tile; output written once.
-    in_traffic = (in_th * in_tw * l.in_c * l.bytes_per_elem
+    # weights re-fetched once per image tile; output written once. A
+    # grouped conv's feature group nests inside one conv group (the
+    # alignment rule above), so each pass reads only that group's
+    # in_c/groups channel slice — charging the full in_c here was the
+    # block-diagonal view's phantom traffic (ISSUE 10).
+    in_read_c = l.in_c if l.groups == 1 or feat_splits == 1 \
+        else l.in_c // l.groups
+    in_traffic = (in_th * in_tw * in_read_c * l.bytes_per_elem
                   * n_tiles * feat_splits)
     w_traffic = l.weight_bytes * n_tiles
     out_traffic = l.out_bytes

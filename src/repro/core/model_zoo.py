@@ -1,5 +1,5 @@
 """The other networks the paper claims to support ("able to support
-most popular CNNs"): VGG-16 and ResNet-18.
+most popular CNNs"): VGG-16, ResNet-18, and the MobileNets.
 
 Two representations live here:
 
@@ -183,6 +183,96 @@ def facedet_graph(in_hw: int = 16, width: int = 8, depth: int = 14,
     return chain_graph(tuple(layers), name=name)
 
 
+def mobilenet_v1_graph(in_hw: int = 224, width: int = 32,
+                       name: str = "mobilenet_v1") -> NetworkGraph:
+    """MobileNet-v1 (Howard et al. 2017): a 3x3/2 stem then 13
+    depthwise-separable blocks — a 3x3 depthwise conv (``groups ==
+    Cin``, the paper's per-channel feature decomposition taken to its
+    limit) followed by a 1x1 pointwise conv. Channel widths scale with
+    ``width`` (32 = nameplate, topping out at ``32 * width``), spatial
+    dims with ``in_hw``. A linear graph — no residuals — whose grouped
+    nodes are what the natural per-group megakernel path (ISSUE 10)
+    exists for: block-diagonal expansion would pay ``Cin``x the real
+    depthwise flops and weight DMA.
+    """
+    # (depthwise stride, pointwise out-channels in units of ``width``)
+    blocks = ((1, 2), (2, 4), (1, 4), (2, 8), (1, 8), (2, 16),
+              (1, 16), (1, 16), (1, 16), (1, 16), (1, 16),
+              (2, 32), (1, 32))
+    layers: List[ConvLayer] = [
+        ConvLayer("stem", in_hw, in_hw, 3, width, 3, stride=2, pad=1)]
+    h, c = _conv_out(in_hw, 3, 2, 1), width
+    for i, (s, mult) in enumerate(blocks, start=1):
+        ho = _conv_out(h, 3, s, 1)
+        if ho < 1:
+            raise ValueError(f"mobilenet_v1: input {in_hw} too small "
+                             f"for block {i}")
+        layers.append(ConvLayer(f"dw{i}", h, h, c, c, 3, stride=s,
+                                pad=1, groups=c))
+        layers.append(ConvLayer(f"pw{i}", ho, ho, c, width * mult, 1))
+        h, c = ho, width * mult
+    return chain_graph(tuple(layers), name=name)
+
+
+def mobilenet_v2_graph(in_hw: int = 224, width: int = 32,
+                       name: str = "mobilenet_v2") -> NetworkGraph:
+    """MobileNet-v2 (Sandler et al. 2018): inverted residual blocks —
+    1x1 expand (ReLU), 3x3 depthwise (ReLU), 1x1 *linear* project — with
+    identity shortcuts when stride is 1 and channels match. The linear
+    bottleneck means both the projection conv AND the residual add carry
+    ``relu=False``, exercising the megakernels' no-ReLU residual-fusion
+    epilogue. Channel widths scale by ``width / 32`` (32 = nameplate).
+    """
+    def sc(c: int) -> int:
+        return max(2, (c * width) // 32)
+
+    nodes: List[GraphNode] = [GraphNode(
+        "stem", "conv", (INPUT,),
+        layer=ConvLayer("stem", in_hw, in_hw, 3, sc(32), 3, stride=2,
+                        pad=1))]
+    prev, h, c = "stem", _conv_out(in_hw, 3, 2, 1), sc(32)
+    # (expansion t, nameplate out-channels, repeats, first-rep stride)
+    spec = ((1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+            (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1))
+    bi = 0
+    for t, cref, reps, s in spec:
+        cout = sc(cref)
+        for r in range(reps):
+            bi += 1
+            tag = f"b{bi}"
+            stride = s if r == 0 else 1
+            ho = _conv_out(h, 3, stride, 1)
+            if ho < 1:
+                raise ValueError(f"mobilenet_v2: input {in_hw} too "
+                                 f"small for block {bi}")
+            ce, inp = c * t, prev
+            if t > 1:
+                nodes.append(GraphNode(
+                    f"{tag}_exp", "conv", (prev,),
+                    layer=ConvLayer(f"{tag}_exp", h, h, c, ce, 1)))
+                inp = f"{tag}_exp"
+            nodes.append(GraphNode(
+                f"{tag}_dw", "conv", (inp,),
+                layer=ConvLayer(f"{tag}_dw", h, h, ce, ce, 3,
+                                stride=stride, pad=1, groups=ce)))
+            nodes.append(GraphNode(
+                f"{tag}_proj", "conv", (f"{tag}_dw",),
+                layer=ConvLayer(f"{tag}_proj", ho, ho, ce, cout, 1),
+                relu=False))                   # linear bottleneck
+            out = f"{tag}_proj"
+            if stride == 1 and c == cout:
+                nodes.append(GraphNode(f"{tag}_add", "add",
+                                       (f"{tag}_proj", prev),
+                                       relu=False))
+                out = f"{tag}_add"
+            prev, h, c = out, ho, cout
+    nodes.append(GraphNode(
+        "head", "conv", (prev,),
+        layer=ConvLayer("head", h, h, c, sc(1280), 1)))
+    return NetworkGraph(name=name, in_shape=(in_hw, in_hw, 3),
+                        nodes=tuple(nodes), output="head")
+
+
 def network_graph(name: str, **kw) -> NetworkGraph:
     """Registry entry point for serving/benchmarks: name -> graph."""
     try:
@@ -197,4 +287,6 @@ NETWORKS = {
     "vgg16": vgg16_graph,
     "resnet18": resnet18_graph,
     "facedet": facedet_graph,
+    "mobilenet_v1": mobilenet_v1_graph,
+    "mobilenet_v2": mobilenet_v2_graph,
 }

@@ -606,14 +606,17 @@ def lower_kernel_program(
         chunk = max(1, chunk)
     n_chain = _ceil_div(wprog.n_waves, chunk)
     c_width = wprog.c_width * chunk
-    # the kernel always runs one dense matmul per step: grouped layers'
-    # weights are expanded block-diagonally by ops.pad_operands, so the
-    # weight fan equals the input-channel width everywhere
-    fan_width = c_width
+    # ungrouped layers run one dense matmul per step, so the weight fan
+    # equals the input-channel width; grouped layers keep the natural
+    # per-group fan (``in_c // groups`` — the wave program's fan_width):
+    # the kernel body accumulates each group's Cin/g x Cout/g slice (or
+    # the depthwise MAC epilogue) without materialising the
+    # block-diagonal zeros (ISSUE 10)
+    fan_width = c_width if l.groups == 1 else wprog.fan_width
     # round the channel axes up to whole chunks (zeros accumulate 0.0)
     in_c_kpad = max(g.in_c_pad, n_chain * c_width) if chunk > 1 \
         else g.in_c_pad
-    w_in_kpad = in_c_kpad
+    w_in_kpad = in_c_kpad if l.groups == 1 else wprog.fan_width
 
     table = []
     for j in range(n_chain):
@@ -699,6 +702,10 @@ def validate_kernel_program(kp: KernelProgram) -> None:
             raise LoweringError(
                 f"{l.name} step {j}: channel offsets {sorted(c0s)} break "
                 f"chain order (expected chunk {j} at {j * kp.c_width})")
+        if l.groups > 1 and c0s != {(0, 0)}:
+            raise LoweringError(
+                f"{l.name} step {j}: grouped layers read the full "
+                f"channel width at offset 0, got {sorted(c0s)}")
         for r in rows:
             if not (0 <= r[OP_IY] and r[OP_IY] + kp.ih <= kp.pad_h
                     and 0 <= r[OP_IX] and r[OP_IX] + kp.iw <= kp.pad_w):
@@ -847,14 +854,13 @@ def plan_arena(values: Sequence[ArenaValue]) -> ArenaPlan:
 def _graph_weight_chunk(kp: KernelProgram, quantized: bool) -> int:
     """Elements of flat weight one grid step consumes for this node.
 
-    fp32 packs the megakernel's block-diagonally expanded weights, so
-    the fan equals ``fan_width``; the int8 kernel keeps grouped weights
-    natural (fan ``in_c // groups``, whole tensor in its single step).
+    Both precisions pack weights in their natural layout: grouped
+    layers' ``fan_width`` is the per-group fan (``in_c // groups``),
+    and the whole tensor rides in the node's single grid step.
     """
+    del quantized               # layouts agree since ISSUE 10
     l = kp.wave.program.layer
-    fan = (l.in_c // l.groups) if (quantized and l.groups > 1) \
-        else kp.fan_width
-    return l.kernel * l.kernel * fan * kp.out_c_pad
+    return l.kernel * l.kernel * kp.fan_width * kp.out_c_pad
 
 
 def _chain_layout(specs: Sequence[ChainNodeSpec], quantized: bool):

@@ -72,19 +72,57 @@ def _node_step(tbl_ref, x_ref, wf_ref, bf_ref, o_ref, slots, acc_ref,
         x = slots[isi][:, pl.ds(iy, kp.ih), pl.ds(ix, kp.iw),
                        pl.ds(c0, kp.c_width)]
     B, cin = x.shape[0], x.shape[-1]
-    patches = []
-    for ky in range(K):
-        for kx in range(K):
-            patches.append(jax.lax.slice(
-                x, (0, ky, kx, 0),
-                (B, ky + (ah - 1) * stride + 1,
-                 kx + (aw - 1) * stride + 1, cin),
-                (1, stride, stride, 1)))
-    pat = jnp.concatenate(patches, -1).reshape(B * ah * aw, K * K * cin)
-    w = wf_ref[0:gkp.w_chunks[ni]].reshape(K * K * cin, oc)
-    acc_ref[:, :ah, :aw, :oc] += jax.lax.dot_general(
-        pat, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).reshape(B, ah, aw, oc)
+    groups = l.groups
+    fan = cin // groups               # kp.fan_width: natural per-group
+
+    def tap(ky, kx, c0=0, cw=None):
+        cw = cin if cw is None else cw
+        return jax.lax.slice(
+            x, (0, ky, kx, c0),
+            (B, ky + (ah - 1) * stride + 1,
+             kx + (aw - 1) * stride + 1, c0 + cw),
+            (1, stride, stride, 1))
+
+    def im2col(c0, cw):
+        # flat fan order (ky, kx, c) — matches the weight reshape below
+        taps = [tap(ky, kx, c0, cw)
+                for ky in range(K) for kx in range(K)]
+        return jnp.concatenate(taps, -1).reshape(B * ah * aw, K * K * cw)
+
+    if groups > 1 and fan == 1:
+        # depthwise MAC over the K*K shifted taps (ISSUE 10): no gemm,
+        # no per-channel unrolling — mirrors the per-layer kernel
+        opg = oc // groups
+        w4 = wf_ref[0:gkp.w_chunks[ni]].reshape(K, K, 1, oc)
+        contrib = jnp.zeros((B, ah, aw, oc), jnp.float32)
+        for ky in range(K):
+            for kx in range(K):
+                xt = tap(ky, kx)
+                if opg > 1:
+                    xt = jnp.repeat(xt, opg, axis=-1)
+                contrib += xt * w4[ky, kx, 0, :]
+        acc_ref[:, :ah, :aw, :oc] += contrib
+    else:
+        if groups == 1:
+            w = wf_ref[0:gkp.w_chunks[ni]].reshape(K * K * cin, oc)
+            acc = jax.lax.dot_general(
+                im2col(0, cin), w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            # per-group gemms over the natural (K, K, fan, oc) layout,
+            # each group's im2col built straight from its own channel
+            # slice — mirrors the per-layer kernel
+            opg = oc // groups
+            w4 = wf_ref[0:gkp.w_chunks[ni]].reshape(K, K, fan, oc)
+            outs = []
+            for gi in range(groups):
+                wg = w4[:, :, :, gi * opg:(gi + 1) * opg].reshape(
+                    K * K * fan, opg)
+                outs.append(jax.lax.dot_general(
+                    im2col(gi * fan, fan), wg, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+            acc = jnp.concatenate(outs, -1)
+        acc_ref[:, :ah, :aw, :oc] += acc.reshape(B, ah, aw, oc)
 
     @pl.when(k == kp.n_chain - 1)
     def _epilogue():                  # node boundary: finish in VMEM
@@ -230,10 +268,11 @@ def wave_replay_graph_raw(gkp: GraphKernelProgram, x: jax.Array,
 def pack_graph_weights(gkp: GraphKernelProgram, weights):
     """(w, b) per chain node -> flat (w_total,)/(b_total,) fp32 buffers.
 
-    Per node: grouped weights expand block-diagonally, pad to the
-    kernel geometry, then each chain step's fan slice flattens to a
-    contiguous chunk at the program's WOFF — exactly what the per-step
-    window DMA expects.
+    Per node: weights stay in their natural per-group layout (grouped
+    layers are single-step, so the whole (K, K, in_c/groups, out_c)
+    tensor is one contiguous chunk), pad to the kernel geometry, then
+    each chain step's fan slice flattens to a contiguous chunk at the
+    program's WOFF — exactly what the per-step window DMA expects.
     """
     if len(weights) != len(gkp.nodes):
         raise ValueError(f"{len(weights)} weight pairs for "
@@ -243,10 +282,10 @@ def pack_graph_weights(gkp: GraphKernelProgram, weights):
         kp = spec.kp
         g = kp.wave.program
         l = g.layer
-        wd = _ops.expand_grouped(w.astype(jnp.float32), kp.groups)
-        wp = jnp.pad(wd, ((0, 0), (0, 0),
-                          (0, kp.w_in_kpad - wd.shape[2]),
-                          (0, g.out_c_pad - l.out_c)))
+        wp = jnp.pad(w.astype(jnp.float32),
+                     ((0, 0), (0, 0),
+                      (0, kp.w_in_kpad - w.shape[2]),
+                      (0, g.out_c_pad - l.out_c)))
         for kk in range(kp.n_chain):
             chunks.append(
                 wp[:, :, kk * kp.fan_width:(kk + 1) * kp.fan_width, :]

@@ -41,7 +41,7 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, *refs,
                    K: int, stride: int, acc_h: int, acc_w: int,
                    n_waves: int, pool: int, ps: int,
                    blk_h: int, blk_w: int, relu: bool, fuse_pool: bool,
-                   residual: bool):
+                   residual: bool, groups: int):
     """One grid step: batch block (program_id 0), tile t (id 1), chain
     position k (id 2). The batch axis is outermost, so each batch
     block's tiles replay their full partial-sum chains before the next
@@ -52,6 +52,14 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, *refs,
     residual activation block of this tile (same geometry as the output
     block), added to the accumulator after bias, before ReLU: the
     paper's accumulation-SRAM add (ISSUE 5).
+
+    ``groups`` picks the compute body (ISSUE 10): 1 runs one dense MXU
+    matmul over the full fan; grouped layers keep their natural
+    ``(K, K, in_c/groups, out_c)`` weights — depthwise
+    (``in_c/groups == 1``) runs a K*K-tap VPU multiply-accumulate over
+    shifted input slices, other group counts run one gemm per group
+    over that group's fan slice. No block-diagonal zeros are ever
+    materialised.
     """
     if residual:
         r_ref, o_ref, acc_ref = refs
@@ -66,24 +74,58 @@ def _replay_kernel(tbl_ref, x_ref, w_ref, b_ref, *refs,
 
     x = x_ref[...]                    # (B, ih, iw, c_width) halo-inclusive
     B, cin = x.shape[0], x.shape[-1]
-    patches = []
-    for ky in range(K):
-        for kx in range(K):
-            patches.append(jax.lax.slice(
-                x, (0, ky, kx, 0),
-                (B, ky + (acc_h - 1) * stride + 1,
-                 kx + (acc_w - 1) * stride + 1, cin),
-                (1, stride, stride, 1)))
-    pat = jnp.concatenate(patches, -1).reshape(
-        B * acc_h * acc_w, K * K * cin)
-    # one dense MXU matmul per step: grouped layers arrive with their
-    # weights pre-expanded block-diagonally (ops.pad_operands), so the
-    # cross-group zeros contribute exact 0.0 and no in-kernel group
-    # loop (with its skinny per-group gemms) is needed
-    w = w_ref[...].reshape(K * K * cin, -1)
-    acc_ref[...] += jax.lax.dot_general(
-        pat, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).reshape(B, acc_h, acc_w, -1)
+    fan = w_ref.shape[2]              # in_c // groups (== cin if dense)
+    out_c = w_ref.shape[3]
+
+    def tap(ky, kx, c0=0, cw=None):
+        cw = cin if cw is None else cw
+        return jax.lax.slice(
+            x, (0, ky, kx, c0),
+            (B, ky + (acc_h - 1) * stride + 1,
+             kx + (acc_w - 1) * stride + 1, c0 + cw),
+            (1, stride, stride, 1))
+
+    def im2col(c0, cw):
+        # flat fan order (ky, kx, c) — matches the weight reshape below
+        taps = [tap(ky, kx, c0, cw)
+                for ky in range(K) for kx in range(K)]
+        return jnp.concatenate(taps, -1).reshape(
+            B * acc_h * acc_w, K * K * cw)
+
+    if groups > 1 and fan == 1:
+        # depthwise: out channel o reads in channel o // opg — a pure
+        # elementwise MAC over the K*K shifted taps, no gemm at all
+        # (unrolling `groups` 1-wide gemms would be catastrophic here)
+        opg = out_c // groups
+        contrib = jnp.zeros((B, acc_h, acc_w, out_c), jnp.float32)
+        for ky in range(K):
+            for kx in range(K):
+                xt = tap(ky, kx)
+                if opg > 1:           # channel-multiplier fan-out
+                    xt = jnp.repeat(xt, opg, axis=-1)
+                contrib += xt * w_ref[ky, kx, 0, :]
+        acc_ref[...] += contrib
+    else:
+        if groups == 1:
+            w = w_ref[...].reshape(K * K * cin, out_c)
+            acc = jax.lax.dot_general(
+                im2col(0, cin), w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            # per-group gemms over the natural fan, each group's im2col
+            # built straight from its own x channel slice (slicing one
+            # shared patch matrix per group would copy the whole thing
+            # again) — the layer costs the true K*K*(Cin/g)*Cout flops
+            opg = out_c // groups
+            outs = []
+            for gi in range(groups):
+                wg = w_ref[:, :, :, gi * opg:(gi + 1) * opg].reshape(
+                    K * K * fan, opg)
+                outs.append(jax.lax.dot_general(
+                    im2col(gi * fan, fan), wg, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+            acc = jnp.concatenate(outs, -1)
+        acc_ref[...] += acc.reshape(B, acc_h, acc_w, out_c)
 
     @pl.when(k == n_waves - 1)
     def _epilogue():                  # chain end: finish in VMEM, write once
@@ -203,7 +245,7 @@ def wave_replay_raw(kp: KernelProgram, x: jax.Array, w: jax.Array,
         acc_h=kp.acc_h, acc_w=kp.acc_w,
         n_waves=kp.n_chain, pool=kp.pool, ps=kp.pool_stride,
         blk_h=kp.blk_h, blk_w=kp.blk_w, relu=kp.relu,
-        fuse_pool=kp.fuse_pool, residual=kp.residual)
+        fuse_pool=kp.fuse_pool, residual=kp.residual, groups=kp.groups)
     y = pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct(

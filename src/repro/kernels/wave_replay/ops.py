@@ -37,9 +37,11 @@ def reset_launch_count() -> None:
 def expand_grouped(w: jax.Array, groups: int) -> jax.Array:
     """(K, K, Cin/groups, Cout) -> block-diagonal dense (K, K, Cin, Cout).
 
-    Cross-group blocks are zeros, which contribute exact 0.0 to the
-    kernel's dense matmul — one well-shaped MXU gemm replaces ``groups``
-    skinny per-group gemms.
+    Cross-group blocks are zeros. The streaming executors no longer use
+    this (ISSUE 10: the kernels accumulate each group's natural fan
+    slice directly); it survives as the reference construction for the
+    block-diagonal baseline the grouped-speedup bench rows compare
+    against, and for tests asserting the two layouts agree.
     """
     if groups == 1:
         return w
@@ -73,17 +75,18 @@ def pad_operands(kp: KernelProgram, x: jax.Array, w: jax.Array,
                  b: jax.Array | None):
     """Pad (x, w, b) to the megakernel's static buffer geometry.
 
-    Input via ``pad_input``; grouped weights are expanded
-    block-diagonally (``expand_grouped``). All padding is zeros, which
-    add exact 0.0 into every accumulation.
+    Input via ``pad_input``; weights keep their natural per-group
+    layout (``w_in_kpad`` is the per-group fan for grouped layers —
+    ISSUE 10 killed the block-diagonal expansion). All padding is
+    zeros, which add exact 0.0 into every accumulation.
     """
     g = kp.wave.program
     l = g.layer
     xp = pad_input(kp, x)
-    wd = expand_grouped(w, kp.groups)
-    wp = jnp.pad(wd, ((0, 0), (0, 0),
-                      (0, kp.w_in_kpad - wd.shape[2]),
-                      (0, g.out_c_pad - l.out_c)))
+    wp = jnp.pad(w.astype(jnp.float32),
+                 ((0, 0), (0, 0),
+                  (0, kp.w_in_kpad - w.shape[2]),
+                  (0, g.out_c_pad - l.out_c)))
     bias = jnp.zeros((1, g.out_c_pad), jnp.float32)
     if b is not None:
         bias = bias.at[0, :l.out_c].set(b.astype(jnp.float32))

@@ -82,40 +82,58 @@ def _q_node_step(tbl_ref, x_ref, wf_ref, bf_ref, mf_ref, sf_ref, o_ref,
     B = x.shape[0]
     opg = oc // groups
 
-    group_cols = []
-    for g in range(groups):                       # static per-group gemms
-        acc_g = None
-        for cc0 in range(0, step_in_c, c_sub):    # static exact-fan chunks
-            cc1 = min(cc0 + c_sub, step_in_c)
-            cw = cc1 - cc0
-            xs = jax.lax.slice_in_dim(x, g * step_in_c + cc0,
-                                      g * step_in_c + cc1, axis=3)
-            rows = jnp.concatenate([
-                jax.lax.slice(
-                    xs, (0, ky, 0, 0),
-                    (B, ky + (ah - 1) * stride + 1, xs.shape[2], cw),
-                    (1, stride, 1, 1))
-                for ky in range(K)], -1)
-            pat = jnp.concatenate([
-                jax.lax.slice(
-                    rows, (0, 0, kx, 0),
-                    (B, ah, kx + (aw - 1) * stride + 1, K * cw),
-                    (1, 1, stride, 1))
-                for kx in range(K)], -1)
-            pat = pat.reshape(B * ah * aw, K * K * cw).astype(jnp.float32)
-            wf = jax.lax.slice(w, (0, 0, cc0, g * opg),
-                               (K, K, cc1, (g + 1) * opg))
-            wf = wf.transpose(1, 0, 2, 3).reshape(
-                K * K * cw, opg).astype(jnp.float32)
-            part = jax.lax.dot_general(
-                pat, wf, (((1,), (0,)), ((), ())),
-                precision=jax.lax.Precision.HIGHEST,
-                preferred_element_type=jnp.float32).astype(jnp.int32)
-            acc_g = part if acc_g is None else acc_g + part
-        group_cols.append(acc_g)
-    step = group_cols[0] if groups == 1 \
-        else jnp.concatenate(group_cols, -1)
-    step = step.reshape(B, ah, aw, oc)
+    if groups > 1 and step_in_c == 1:
+        # depthwise (ISSUE 10): K*K-tap elementwise int32 MAC, exactly
+        # as the per-layer int8 kernel — bit-identical to the per-group
+        # gemm view without unrolling `groups` 1-wide gemms
+        contrib = jnp.zeros((B, ah, aw, oc), jnp.int32)
+        for ky in range(K):
+            for kx in range(K):
+                xt = jax.lax.slice(
+                    x, (0, ky, kx, 0),
+                    (B, ky + (ah - 1) * stride + 1,
+                     kx + (aw - 1) * stride + 1, x.shape[3]),
+                    (1, stride, stride, 1)).astype(jnp.int32)
+                if opg > 1:       # channel-multiplier fan-out
+                    xt = jnp.repeat(xt, opg, axis=-1)
+                contrib += xt * w[ky, kx, 0, :].astype(jnp.int32)
+        step = contrib
+    else:
+        group_cols = []
+        for g in range(groups):                   # static per-group gemms
+            acc_g = None
+            for cc0 in range(0, step_in_c, c_sub):  # exact-fan chunks
+                cc1 = min(cc0 + c_sub, step_in_c)
+                cw = cc1 - cc0
+                xs = jax.lax.slice_in_dim(x, g * step_in_c + cc0,
+                                          g * step_in_c + cc1, axis=3)
+                rows = jnp.concatenate([
+                    jax.lax.slice(
+                        xs, (0, ky, 0, 0),
+                        (B, ky + (ah - 1) * stride + 1, xs.shape[2], cw),
+                        (1, stride, 1, 1))
+                    for ky in range(K)], -1)
+                pat = jnp.concatenate([
+                    jax.lax.slice(
+                        rows, (0, 0, kx, 0),
+                        (B, ah, kx + (aw - 1) * stride + 1, K * cw),
+                        (1, 1, stride, 1))
+                    for kx in range(K)], -1)
+                pat = pat.reshape(B * ah * aw,
+                                  K * K * cw).astype(jnp.float32)
+                wf = jax.lax.slice(w, (0, 0, cc0, g * opg),
+                                   (K, K, cc1, (g + 1) * opg))
+                wf = wf.transpose(1, 0, 2, 3).reshape(
+                    K * K * cw, opg).astype(jnp.float32)
+                part = jax.lax.dot_general(
+                    pat, wf, (((1,), (0,)), ((), ())),
+                    precision=jax.lax.Precision.HIGHEST,
+                    preferred_element_type=jnp.float32).astype(jnp.int32)
+                acc_g = part if acc_g is None else acc_g + part
+            group_cols.append(acc_g)
+        step = group_cols[0] if groups == 1 \
+            else jnp.concatenate(group_cols, -1)
+        step = step.reshape(B, ah, aw, oc)
 
     def _finish(a):               # requantize-on-writeback, all in VMEM
         a = a + bf_ref[0:oc]

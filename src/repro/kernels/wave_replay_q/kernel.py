@@ -29,11 +29,14 @@ cannot change a single bit — unlike the fp32 megakernel, which matches
 its references only to rounding tolerance.
 
 Grouped layers run true per-group gemms against the natural
-(K, K, in_c/groups, out_c) weight layout instead of the fp32 kernel's
-block-diagonal dense expansion: at fixed exact-integer cost per flop
-there is no MXU-shape argument for paying 2x the flops in zeros, and
-the halved gemm work is where most of the int8 speedup over the fp32
-megakernel comes from on non-TPU backends.
+(K, K, in_c/groups, out_c) weight layout — since ISSUE 10 the fp32
+megakernel shares this layout (the block-diagonal dense expansion is
+gone from every executor path), so both precisions pay only the real
+``K*K*(Cin/g)*Cout`` flops and weight DMA. Depthwise layers
+(``groups == Cin``, per-group fan 1) skip the gemm loop entirely and
+run a K*K-tap elementwise int32 multiply-accumulate — int8 products
+are exact in int32, so bit-exactness is preserved without unrolling
+``Cin`` one-wide gemms.
 """
 from __future__ import annotations
 
@@ -121,49 +124,68 @@ def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, *refs,
     out_c_pad = o_ref.shape[-1]
     opg = out_c_pad // groups
 
-    group_cols = []
-    for g in range(groups):                       # static per-group gemms
-        acc_g = None
-        for c0 in range(0, step_in_c, c_sub):     # static exact-fan chunks
-            c1 = min(c0 + c_sub, step_in_c)
-            cw = c1 - c0
-            xs = jax.lax.slice_in_dim(x, g * step_in_c + c0,
-                                      g * step_in_c + c1, axis=3)
-            # two-stage im2col: K row slices then K column slices
-            # (2K + 2 ops instead of the K^2 + 1 per-tap slices the
-            # fp32 kernel issues — interpret-mode dispatch count is a
-            # real cost at K = 11). The fan lands in (kx, ky, c) order;
-            # the weight reshape below matches it.
-            rows = jnp.concatenate([
-                jax.lax.slice(
-                    xs, (0, ky, 0, 0),
-                    (B, ky + (acc_h - 1) * stride + 1, xs.shape[2], cw),
-                    (1, stride, 1, 1))
-                for ky in range(K)], -1)          # (B, acc_h, iw, K*cw)
-            pat = jnp.concatenate([
-                jax.lax.slice(
-                    rows, (0, 0, kx, 0),
-                    (B, acc_h, kx + (acc_w - 1) * stride + 1, K * cw),
-                    (1, 1, stride, 1))
-                for kx in range(K)], -1)          # (B, acc_h, acc_w, K*K*cw)
-            pat = pat.reshape(B * acc_h * acc_w,
-                              K * K * cw).astype(jnp.float32)
-            # weight fan rows are per-group already (natural layout): the
-            # group structure lives only in x's channel axis; transpose
-            # to the patches' (kx, ky, c) fan order
-            wf = jax.lax.slice(w, (0, 0, c0, g * opg),
-                               (K, K, c1, (g + 1) * opg))
-            wf = wf.transpose(1, 0, 2, 3).reshape(
-                K * K * cw, opg).astype(jnp.float32)
-            part = jax.lax.dot_general(
-                pat, wf, (((1,), (0,)), ((), ())),
-                precision=jax.lax.Precision.HIGHEST,
-                preferred_element_type=jnp.float32).astype(jnp.int32)
-            acc_g = part if acc_g is None else acc_g + part
-        group_cols.append(acc_g)
-    step = group_cols[0] if groups == 1 \
-        else jnp.concatenate(group_cols, -1)
-    step = step.reshape(B, acc_h, acc_w, out_c_pad)
+    if groups > 1 and step_in_c == 1:
+        # depthwise (ISSUE 10): out channel o reads in channel o // opg.
+        # A K*K-tap elementwise int32 multiply-accumulate — int8 x int8
+        # products are exact in int32, and addition is associative, so
+        # this is bit-identical to the per-group gemm view while never
+        # unrolling `groups` (= in_c) 1-wide gemms.
+        contrib = jnp.zeros((B, acc_h, acc_w, out_c_pad), jnp.int32)
+        for ky in range(K):
+            for kx in range(K):
+                xt = jax.lax.slice(
+                    x, (0, ky, kx, 0),
+                    (B, ky + (acc_h - 1) * stride + 1,
+                     kx + (acc_w - 1) * stride + 1, x.shape[3]),
+                    (1, stride, stride, 1)).astype(jnp.int32)
+                if opg > 1:       # channel-multiplier fan-out
+                    xt = jnp.repeat(xt, opg, axis=-1)
+                contrib += xt * w[ky, kx, 0, :].astype(jnp.int32)
+        step = contrib
+    else:
+        group_cols = []
+        for g in range(groups):                   # static per-group gemms
+            acc_g = None
+            for c0 in range(0, step_in_c, c_sub):  # static exact-fan chunks
+                c1 = min(c0 + c_sub, step_in_c)
+                cw = c1 - c0
+                xs = jax.lax.slice_in_dim(x, g * step_in_c + c0,
+                                          g * step_in_c + c1, axis=3)
+                # two-stage im2col: K row slices then K column slices
+                # (2K + 2 ops instead of the K^2 + 1 per-tap slices the
+                # fp32 kernel issues — interpret-mode dispatch count is a
+                # real cost at K = 11). The fan lands in (kx, ky, c) order;
+                # the weight reshape below matches it.
+                rows = jnp.concatenate([
+                    jax.lax.slice(
+                        xs, (0, ky, 0, 0),
+                        (B, ky + (acc_h - 1) * stride + 1, xs.shape[2], cw),
+                        (1, stride, 1, 1))
+                    for ky in range(K)], -1)      # (B, acc_h, iw, K*cw)
+                pat = jnp.concatenate([
+                    jax.lax.slice(
+                        rows, (0, 0, kx, 0),
+                        (B, acc_h, kx + (acc_w - 1) * stride + 1, K * cw),
+                        (1, 1, stride, 1))
+                    for kx in range(K)], -1)      # (B, acc_h, acc_w, K*K*cw)
+                pat = pat.reshape(B * acc_h * acc_w,
+                                  K * K * cw).astype(jnp.float32)
+                # weight fan rows are per-group already (natural layout):
+                # the group structure lives only in x's channel axis;
+                # transpose to the patches' (kx, ky, c) fan order
+                wf = jax.lax.slice(w, (0, 0, c0, g * opg),
+                                   (K, K, c1, (g + 1) * opg))
+                wf = wf.transpose(1, 0, 2, 3).reshape(
+                    K * K * cw, opg).astype(jnp.float32)
+                part = jax.lax.dot_general(
+                    pat, wf, (((1,), (0,)), ((), ())),
+                    precision=jax.lax.Precision.HIGHEST,
+                    preferred_element_type=jnp.float32).astype(jnp.int32)
+                acc_g = part if acc_g is None else acc_g + part
+            group_cols.append(acc_g)
+        step = group_cols[0] if groups == 1 \
+            else jnp.concatenate(group_cols, -1)
+        step = step.reshape(B, acc_h, acc_w, out_c_pad)
 
     def _finish(a):               # requantize-on-writeback, all in VMEM
         a = a + bq_ref[0]
@@ -195,20 +217,20 @@ def _replay_q_kernel(tbl_ref, x_ref, w_ref, bq_ref, m_ref, s_ref, *refs,
 
 
 def q_weight_fan(kp: KernelProgram) -> int:
-    """Weight fan-in dim of one grid step's int8 weight *block*:
-    per-group fan for grouped layers, the chain-chunk slice width
-    (= ``fan_width``) for ungrouped ones."""
-    l = kp.wave.program.layer
-    return l.in_c // l.groups if l.groups > 1 else kp.fan_width
+    """Weight fan-in dim of one grid step's int8 weight *block*.
+
+    Since ISSUE 10 both precisions share the schedule's natural layout:
+    ``fan_width`` IS the per-group fan for grouped layers and the
+    chain-chunk slice width for ungrouped ones."""
+    return kp.fan_width
 
 
 def q_weight_full_fan(kp: KernelProgram) -> int:
     """Fan-in dim of the int8 kernel's *full* weight operand: grouped
     layers keep their natural per-group fan (single-step chains read it
-    whole); ungrouped ones pad to ``w_in_kpad`` and slice per chain
-    step, exactly like the fp32 kernel."""
-    l = kp.wave.program.layer
-    return l.in_c // l.groups if l.groups > 1 else kp.w_in_kpad
+    whole, ``w_in_kpad == fan_width``); ungrouped ones pad to
+    ``w_in_kpad`` and slice per chain step, exactly like fp32."""
+    return kp.w_in_kpad
 
 
 def wave_replay_q_raw(kp: KernelProgram, xq: jax.Array, wq: jax.Array,

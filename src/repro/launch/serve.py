@@ -33,12 +33,13 @@ from repro.train.steps import make_decode_step, make_prefill_step
 
 def cnn_main(args):
     """Serve single-image requests through a compiled StreamingSession:
-    the chosen network's graph (``--network alexnet | vgg16 |
-    resnet18``, core/model_zoo.py) is lowered to tile schedules once,
-    then every ``--batch`` submits share one cached executable (paper
-    §7). ResNet-18 serves with its residual adds fused into the
-    megakernel epilogues and its projection shortcuts streamed as 1x1
-    convs. ``--precision int8`` calibrates the graph on a few random
+    the chosen network's graph (``--network alexnet | vgg16 | resnet18
+    | facedet | mobilenet_v1 | mobilenet_v2``, core/model_zoo.py) is
+    lowered to tile schedules once, then every ``--batch`` submits
+    share one cached executable (paper §7). ResNet-18 serves with its
+    residual adds fused into the megakernel epilogues and its
+    projection shortcuts streamed as 1x1 convs; the MobileNets stream
+    their depthwise layers through the natural per-group kernel path. ``--precision int8`` calibrates the graph on a few random
     batches and serves the quantized megakernel path (fixed-point
     datapath, paper Table 2)."""
     from repro.core.model_zoo import network_graph
@@ -112,12 +113,15 @@ def main():
     ap.add_argument("--cnn", action="store_true",
                     help="serve CNN image requests via StreamingSession")
     ap.add_argument("--network", default="alexnet",
-                    choices=("alexnet", "vgg16", "resnet18", "facedet"),
+                    choices=("alexnet", "vgg16", "resnet18", "facedet",
+                             "mobilenet_v1", "mobilenet_v2"),
                     help="which NetworkGraph to serve (--cnn): the "
                          "AlexNet chain, the VGG-16 stack, ResNet-18 "
-                         "with residual adds + projection shortcuts, or "
+                         "with residual adds + projection shortcuts, "
                          "the compact face-detection trunk (tiny frames, "
-                         "the batch-throughput serving shape)")
+                         "the batch-throughput serving shape), or the "
+                         "MobileNet-v1/v2 depthwise-separable stacks "
+                         "(the grouped per-group kernel path)")
     ap.add_argument("--requests", type=int, default=32,
                     help="number of single-image requests (--cnn)")
     ap.add_argument("--sram-kb", type=int, default=128,

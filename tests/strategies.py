@@ -71,10 +71,13 @@ def streaming_graphs(draw, allow_groups=True):
 
     Tiny spatial dims (8-16 px) and channel counts (2-8), 2-4 conv
     nodes, mixing linear stretches, one optional residual block, fused
-    max-pools, strides, grouped convs (``allow_groups=False`` for the
-    int8 harness, whose grouped kernel requires unpadded out channels),
-    and a random no-ReLU tail. Shapes follow the same arithmetic the
-    graph validator enforces, so every draw is a valid NetworkGraph.
+    max-pools, strides, grouped and depthwise convs — ``groups`` drawn
+    from {2, 4, Cin} with ragged per-group out-channel multipliers, so
+    the per-group gemm AND the depthwise MAC kernel paths (ISSUE 10)
+    both get fuzzed (``allow_groups=False`` for the int8 harness, whose
+    grouped kernel requires unpadded out channels) — and a random
+    no-ReLU tail. Shapes follow the same arithmetic the graph validator
+    enforces, so every draw is a valid NetworkGraph.
     """
     h = draw(st.sampled_from([8, 12, 16]))
     c = draw(st.integers(2, 4))
@@ -105,14 +108,20 @@ def streaming_graphs(draw, allow_groups=True):
                                relu=draw(st.booleans())))
         prev, c_in, h = "r_add", c_out, ho
     else:
-        # a linear stretch, optionally grouped / pooled / strided
+        # a linear stretch, optionally grouped / depthwise / pooled /
+        # strided: groups from {2, 4, Cin} (Cin = depthwise), per-group
+        # out channels a ragged multiplier in {1, 2, 3}
         for li in range(draw(st.integers(1, 2))):
             groups = 1
-            if allow_groups and c_in % 2 == 0 and draw(st.booleans()):
-                groups = 2
-            c_out = draw(st.sampled_from([c_in, 2 * c_in]))
-            if c_out % groups:
-                c_out = groups * max(1, c_out // groups)
+            if allow_groups and draw(st.booleans()):
+                opts = [g for g in (2, 4, c_in)
+                        if 1 < g <= c_in and c_in % g == 0]
+                if opts:
+                    groups = draw(st.sampled_from(sorted(set(opts))))
+            if groups > 1:
+                c_out = groups * draw(st.sampled_from([1, 2, 3]))
+            else:
+                c_out = draw(st.sampled_from([c_in, 2 * c_in]))
             pool = 2 if h >= 8 and draw(st.booleans()) else 1
             nodes.append(conv_node(f"l{li}", h, c_in, c_out, (prev,),
                                    pool=pool, groups=groups))

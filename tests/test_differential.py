@@ -51,13 +51,25 @@ def _chain_pool_tail():
 
 
 def _grouped_chain():
-    """Grouped conv mid-chain (the block-diagonal weight path)."""
+    """Grouped conv mid-chain (the natural per-group gemm path)."""
     nodes = (
         _conv("c1", 12, 3, 8, (INPUT,)),
         _conv("c2", 12, 8, 8, ("c1",), groups=2),
         _conv("c3", 12, 8, 8, ("c2",), pool=2),
     )
     return NetworkGraph("grouped_chain", (12, 12, 3), nodes, "c3")
+
+
+def _depthwise_chain():
+    """Depthwise-separable block — 3x3 depthwise (``groups == Cin``)
+    with a ragged channel multiplier, then a 1x1 pointwise: the
+    MobileNet motif the depthwise MAC path (ISSUE 10) lowers."""
+    nodes = (
+        _conv("c1", 12, 3, 6, (INPUT,)),
+        _conv("dw", 12, 6, 18, ("c1",), groups=6),   # multiplier 3
+        _conv("pw", 12, 18, 8, ("dw",), kernel=1, pad=0, pool=2),
+    )
+    return NetworkGraph("depthwise_chain", (12, 12, 3), nodes, "pw")
 
 
 def _identity_block():
@@ -97,8 +109,8 @@ def _deep_mixed():
     return NetworkGraph("deep_mixed", (16, 16, 2), nodes, "c4")
 
 
-PANEL = (_chain_pool_tail, _grouped_chain, _identity_block,
-         _projection_block, _deep_mixed)
+PANEL = (_chain_pool_tail, _grouped_chain, _depthwise_chain,
+         _identity_block, _projection_block, _deep_mixed)
 
 
 def _run_all_modes(g):
@@ -140,10 +152,13 @@ def test_int8_graphkernel_bit_exact_vs_int32_reference(make):
         assert jnp.array_equal(got, ref), (g.name, mode)
 
 
-def test_graphkernel_int8_matches_megakernel_int8_grouped():
-    """Grouped convs through the fused chain: int8 graphkernel output
-    is bit-identical to the per-layer quantized megakernel's."""
-    g = _grouped_chain()
+@pytest.mark.parametrize("make", (_grouped_chain, _depthwise_chain),
+                         ids=("grouped_chain", "depthwise_chain"))
+def test_graphkernel_int8_matches_megakernel_int8_grouped(make):
+    """Grouped/depthwise convs through the fused chain: int8
+    graphkernel output is bit-identical to the per-layer quantized
+    megakernel's AND to the int32 reference walk."""
+    g = make()
     plans = plan_graph(g, BUDGET)
     ws = init_graph_weights(g, jax.random.key(0))
     x = jax.random.normal(jax.random.key(1), (2,) + g.in_shape)
@@ -153,6 +168,25 @@ def test_graphkernel_int8_matches_megakernel_int8_grouped():
     b = run_graph_streamed(g, plans, x, None, mode="graphkernel",
                            precision="int8", qgraph=qg)
     assert jnp.array_equal(a, b)
+    ref_q = quant_graph_reference_acts(qg, x)[g.output]
+    ref = dequantize_int8(ref_q, qg.scales[g.output])
+    assert jnp.array_equal(a, ref)
+
+
+def test_depthwise_single_launch_per_node():
+    """Depthwise nodes lower to ONE megakernel launch each (trace
+    time): the natural per-group path never falls back to per-group
+    dispatch or block-diagonal re-lowering."""
+    from repro.core.streaming import clear_executor_cache
+    from repro.kernels.wave_replay import launch_count, reset_launch_count
+    g = _depthwise_chain()
+    plans = plan_graph(g, BUDGET)
+    ws = init_graph_weights(g, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2,) + g.in_shape)
+    clear_executor_cache()
+    reset_launch_count()
+    run_graph_streamed(g, plans, x, ws, mode="megakernel")
+    assert launch_count() == len(g.conv_nodes())
 
 
 if hypothesis is not None:

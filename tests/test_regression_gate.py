@@ -1,5 +1,10 @@
-"""CI benchmark-regression gate: normalised executor-slowdown detection
-and the modelled-DRAM-traffic growth check (benchmarks/regression_gate)."""
+"""CI benchmark-regression gate (benchmarks/regression_gate): the
+direct ratchet rules — grouped/block-diagonal speedup (ISSUE 10),
+int8/fp32, batched throughput, tuned-vs-fixed — plus the modelled
+DRAM-traffic / launch-count no-growth checks, presence rules, and the
+opt-in --absolute same-machine time comparison. The PR-3 share-
+normalised slowdown rule is retired (ISSUE 10) and its absence is
+pinned here too."""
 import importlib.util
 import pathlib
 
@@ -31,20 +36,23 @@ def test_gate_passes_identical_runs():
 
 
 def test_gate_is_machine_portable():
-    """A uniformly 3x slower machine changes no group share."""
+    """A uniformly 3x slower machine trips nothing: every default rule
+    is a same-run ratio, a modelled counter, or row presence."""
     base = _payload(100, 300, 200)
     cur = _payload(300, 900, 600)
     assert gate.compare(base, cur) == []
 
 
-def test_gate_fails_on_executor_slowdown():
+def test_gate_share_rule_is_retired():
+    """ISSUE 10: a single executor row slowing down no longer fails the
+    default (cross-machine) gate — the PR-3 share-normalised rule is
+    gone; raw-time comparison survives only behind --absolute."""
     base = _payload(100, 300, 200)
-    cur = _payload(100, 300, 300)       # megakernel ratio 2.0 -> 3.0
-    fails = gate.compare(base, cur)
-    assert len(fails) == 1 and "megakernel" in fails[0]
-    # within threshold: 10% is fine
-    ok = gate.compare(base, _payload(100, 300, 215))
-    assert ok == []
+    cur = _payload(100, 300, 300)       # megakernel alone 1.5x slower
+    assert gate.compare(base, cur) == []
+    fails = gate.compare(base, cur, absolute=True)
+    assert len(fails) == 1 and "megakernel" in fails[0] \
+        and "us" in fails[0]
 
 
 def test_gate_fails_on_traffic_growth():
@@ -114,14 +122,16 @@ def test_gate_int8_speedup_on_current_run_with_slack():
     assert any("measured int8 speedup" in f for f in fails)
 
 
-def test_gate_int8_rows_participate_in_share_check():
-    """The int8 row is a gated multi-rep executor row like any other:
-    its own share regression fails the gate."""
+def test_gate_int8_row_gated_through_ratio_not_time():
+    """The int8 row's wall-clock matters only through the same-run
+    int8/fp32 ratio: a slower int8 row fails once the ratio drops below
+    the slacked floor, not through any per-row time rule."""
     base = _payload_int8(300, 200)
-    cur = _payload_int8(300, 290)           # int8 row alone got slower
-    fails = gate.compare(base, cur)
-    assert any("megakernel_int8" in f and "share of group" in f
-               for f in fails)
+    # 300/290 = 1.03x: above the 1.2/(1+0.2) = 1.0 floor -> passes
+    assert gate.compare(base, _payload_int8(300, 290)) == []
+    # 300/320 = 0.94x: below the floor -> the ratio rule fires
+    fails = gate.compare(base, _payload_int8(300, 320))
+    assert any("measured int8 speedup" in f for f in fails)
 
 
 def test_gate_fails_when_current_run_drops_int8_row():
@@ -150,7 +160,9 @@ def test_gate_cli(tmp_path):
     b.write_text(json.dumps(_payload(100, 300, 200)))
     c.write_text(json.dumps(_payload(100, 300, 400)))
     with pytest.raises(SystemExit):
-        gate.main(["--baseline", str(b), "--current", str(c)])
+        gate.main(["--baseline", str(b), "--current", str(c),
+                   "--absolute"])
+    gate.main(["--baseline", str(b), "--current", str(c)])
     gate.main(["--baseline", str(b), "--current", str(b)])
 
 
@@ -594,6 +606,102 @@ def test_gate_negative_overhead_is_fine():
     disabled one; a negative fraction never fails."""
     base = _with_breakdown(_payload(100, 300, 200), overhead=-0.01)
     assert gate.compare(base, base) == []
+
+
+# ---------------------------------------------------------------------------
+# Grouped-speedup ratchet (ISSUE 10): natural per-group path vs the
+# retired block-diagonal expansion
+# ---------------------------------------------------------------------------
+
+_DW_ROW = "streaming_grouped_mobilenet_v1_dw_megakernel"
+_G2_ROW = "streaming_grouped_alexnet_conv2_g2_megakernel"
+
+
+def _payload_grouped(dw_speedup=4.0, g2_speedup=1.6, include=True,
+                     with_meta=True):
+    p = _payload(100, 300, 200)
+    if include:
+        for name, speed, groups in ((_DW_ROW, dw_speedup, 128),
+                                    (_G2_ROW, g2_speedup, 2)):
+            meta = {"groups": groups}
+            if with_meta:
+                meta["speedup_vs_block_diagonal"] = speed
+            p["records"].append(
+                {"name": name, "us_per_call": 500, "meta": meta})
+    return p
+
+
+def test_gate_grouped_speedup_passes_at_floors():
+    base = _payload_grouped(dw_speedup=2.0, g2_speedup=1.3)  # exactly at
+    assert gate.compare(base, base) == []
+
+
+def test_gate_fails_on_weak_committed_grouped_speedup():
+    """Acceptance: the committed baseline must meet each row's floor
+    strictly — >= 2x depthwise, >= 1.3x on the g=2 conv."""
+    base = _payload_grouped(dw_speedup=1.7)
+    fails = gate.compare(base, base)
+    assert any(_DW_ROW in f and "committed grouped speedup 1.70x" in f
+               for f in fails)
+    base = _payload_grouped(g2_speedup=1.1)
+    fails = gate.compare(base, base)
+    assert any(_G2_ROW in f and "required 1.30x" in f for f in fails)
+
+
+def test_gate_grouped_current_run_gets_threshold_slack():
+    base = _payload_grouped(dw_speedup=4.0)
+    # 2/(1+0.2) = 1.67 floor: a noisy 1.8x current run passes
+    assert gate.compare(base, _payload_grouped(dw_speedup=1.8)) == []
+    fails = gate.compare(base, _payload_grouped(dw_speedup=1.5))
+    assert any(_DW_ROW in f and "measured grouped speedup 1.50x" in f
+               for f in fails)
+
+
+def test_gate_fails_when_grouped_row_goes_missing():
+    """Once committed, the block-diagonal comparison must keep being
+    measured — a run without the rows fails instead of disarming."""
+    base = _payload_grouped()
+    fails = gate.compare(base, _payload_grouped(include=False))
+    assert len(fails) == 2
+    assert all("grouped-speedup row" in f for f in fails)
+
+
+def test_gate_fails_when_grouped_meta_dropped():
+    base = _payload_grouped()
+    fails = gate.compare(base, _payload_grouped(with_meta=False))
+    assert len(fails) == 2
+    assert all("speedup_vs_block_diagonal meta" in f for f in fails)
+
+
+def test_gate_baseline_without_grouped_rows_accepts_new_rows():
+    """Pre-ISSUE-10 baselines don't trip the ratchet, and new rows in
+    the current run are simply not yet gated."""
+    base = _payload(100, 300, 200)
+    assert gate.compare(base, _payload_grouped()) == []
+
+
+def test_gate_unknown_grouped_row_is_presence_gated_only():
+    """A grouped row outside the floors table (a future case) is
+    presence-gated but has no speedup floor."""
+    base = _payload(100, 300, 200)
+    base["records"].append(
+        {"name": "streaming_grouped_future_case_megakernel",
+         "us_per_call": 10,
+         "meta": {"speedup_vs_block_diagonal": 0.5}})
+    assert gate.compare(base, base) == []
+    fails = gate.compare(base, _payload(100, 300, 200))
+    assert any("streaming_grouped_future_case" in f for f in fails)
+
+
+def test_gate_grouped_rows_are_not_time_gated():
+    """Few-rep single-layer rows: wall-clock alone never fails — the
+    ratchet gates the same-run ratio meta."""
+    base = _payload_grouped()
+    cur = _payload_grouped()
+    for r in cur["records"]:
+        if r["name"].startswith("streaming_grouped_"):
+            r["us_per_call"] *= 10
+    assert gate.compare(base, cur) == []
 
 
 def test_merge_min_takes_min_obs_overhead_across_runs():
